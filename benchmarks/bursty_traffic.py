@@ -1,0 +1,48 @@
+"""Beyond-paper robustness: bursty (MMPP) arrivals.
+
+The paper evaluates Poisson traffic only; production traffic bursts. A
+two-state MMPP alternates 0.3x/2x the nominal rate — the regime where a
+statically-tuned batching window is maximally wrong in both directions
+(too long in the valley, too short in the burst). LazyBatching's
+adaptivity claim predicts its advantage *grows* vs Poisson.
+"""
+import numpy as np
+
+from repro.core.policies import GraphBatching, LazyBatching
+from repro.core.slack import SlackPredictor
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.server import run_policy
+from repro.serving.traffic import bursty_trace, poisson_trace
+from repro.serving.workload import get_workload
+from .common import DEFAULT_SLA, fmt_table
+
+
+def run(quick: bool = True) -> dict:
+    perf = NPUPerfModel()
+    dur = 0.6 if quick else 2.0
+    rate = 500.0
+    rec, rows = {}, []
+    for wname in ("resnet", "transformer"):
+        wl = get_workload(wname)
+        pred = SlackPredictor.build([wl], perf, DEFAULT_SLA)
+        for shape, mk_trace in (
+                ("poisson", lambda s: poisson_trace(wl, rate, dur, seed=s)),
+                ("bursty", lambda s: bursty_trace(
+                    wl, rate * 0.3, rate * 2.0, dur / 6, dur, seed=s))):
+            gains = []
+            for seed in ((0,) if quick else (0, 1, 2)):
+                trace = mk_trace(seed)
+                lz = run_policy(LazyBatching(pred), trace, perf).avg_latency
+                gb = min(run_policy(GraphBatching(w), trace, perf).avg_latency
+                         for w in (0.005, 0.025, 0.075))
+                gains.append(gb / lz)
+            g = float(np.mean(gains))
+            rec[(wname, shape)] = g
+            rows.append([wname, shape, f"{g:.2f}x"])
+    print("\n# Bursty traffic (beyond paper) — lazyb vs best graphb latency")
+    print(fmt_table(rows, ["workload", "arrivals", "lazyb gain"]))
+    grows = all(rec[(w, "bursty")] >= 1.5 for w in ("resnet", "transformer"))
+    print(f"adaptivity holds under bursts (lazyb stays >= 1.5x the best "
+          f"statically-tuned window): {grows}")
+    return {"gains": {f"{w}/{s}": v for (w, s), v in rec.items()},
+            "holds": grows}

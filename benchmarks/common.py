@@ -1,0 +1,86 @@
+"""Shared harness for the per-figure benchmarks.
+
+Every benchmark module exposes ``run(quick: bool) -> dict`` returning a
+JSON-serializable record; ``benchmarks.run`` executes them all and prints
+the consolidated report (the EXPERIMENTS.md §Paper-validation source).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.policies import (CellularBatching, GraphBatching,
+                                 LazyBatching, Oracle, Serial)
+from repro.core.slack import OracleSlackPredictor, SlackPredictor
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.server import run_policy
+from repro.serving.traffic import poisson_trace
+from repro.serving.workload import get_workload
+
+DEFAULT_SLA = 0.100           # 100 ms (paper §VI)
+WINDOWS = (0.005, 0.025, 0.050, 0.075, 0.095)    # GraphB(N) sweep (Fig. 12)
+
+
+def make_policy(kind: str, wl_list, perf, sla=DEFAULT_SLA, max_batch=64,
+                window=None):
+    if kind == "serial":
+        return Serial()
+    if kind == "graphb":
+        return GraphBatching(window=window, max_batch=max_batch)
+    if kind == "cellular":
+        return CellularBatching(max_batch=max_batch)
+    if kind == "lazyb":
+        pred = SlackPredictor.build(wl_list, perf, sla)
+        return LazyBatching(pred, max_batch=max_batch)
+    if kind == "oracle":
+        return Oracle(OracleSlackPredictor(sla, perf), max_batch=max_batch)
+    raise KeyError(kind)
+
+
+def sweep(workload_name: str, rates, *, duration=1.0, seeds=(0, 1, 2),
+          sla=DEFAULT_SLA, policies=None, max_batch=64,
+          windows=WINDOWS, perf=None):
+    """Run every policy over every (rate, seed); returns nested dict
+    results[rate][policy_name] = averaged summary."""
+    wl = get_workload(workload_name)
+    perf = perf or NPUPerfModel()
+    if policies is None:
+        policies = (["serial"]
+                    + [("graphb", w) for w in windows]
+                    + ["lazyb", "oracle"])
+    out = {}
+    for rate in rates:
+        per_policy = {}
+        for pol in policies:
+            kind, window = (pol if isinstance(pol, tuple) else (pol, None))
+            sums = []
+            for seed in seeds:
+                trace = poisson_trace(wl, rate, duration, seed=seed)
+                p = make_policy(kind, [wl], perf, sla=sla,
+                                max_batch=max_batch, window=window)
+                stats = run_policy(p, trace, perf)
+                sums.append(stats.summary(sla=sla))
+            name = sums[0]["policy"]
+            per_policy[name] = {
+                k: float(np.mean([s[k] for s in sums]))
+                for k in sums[0] if k != "policy"}
+            per_policy[name]["policy"] = name
+        out[rate] = per_policy
+    return out
+
+
+def best_graphb(per_policy: dict, metric="avg_latency_ms", minimize=True):
+    """Best-performing graph-batching config for a metric (the paper's
+    comparison baseline)."""
+    cands = {k: v for k, v in per_policy.items() if k.startswith("graphb")}
+    pick = min if minimize else max
+    name = pick(cands, key=lambda k: cands[k][metric])
+    return name, cands[name]
+
+
+def fmt_table(rows, headers) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows))
+              for i, h in enumerate(headers)]
+    def line(vals):
+        return "  ".join(str(v).rjust(w) for v, w in zip(vals, widths))
+    return "\n".join([line(headers), line(["-" * w for w in widths])]
+                     + [line(r) for r in rows])

@@ -1,0 +1,44 @@
+"""Fig. 12: average latency per query-arrival rate, all policies.
+
+Headline claim: LazyBatching gives 5.3x / 2.7x / 2.5x lower latency than the
+best-performing graph batching for ResNet / GNMT / Transformer (and ~15x on
+average across all graph-batching configs).
+"""
+import numpy as np
+
+from .common import best_graphb, fmt_table, sweep
+
+WORKLOADS = ("resnet", "gnmt", "transformer")
+
+
+def run(quick: bool = True) -> dict:
+    rates = [16, 250, 1000] if quick else [16, 100, 250, 500, 1000, 2000]
+    dur = 0.5 if quick else 2.0
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    rec, rows = {}, []
+    for wname in WORKLOADS:
+        res = sweep(wname, rates, duration=dur, seeds=seeds)
+        gains_best, gains_all = [], []
+        for rate in rates:
+            pp = res[rate]
+            lz = pp["lazyb"]["avg_latency_ms"]
+            bg_name, bg = best_graphb(pp)
+            gains_best.append(bg["avg_latency_ms"] / lz)
+            all_gb = [v["avg_latency_ms"] for k, v in pp.items()
+                      if k.startswith("graphb")]
+            gains_all.append(float(np.mean(all_gb)) / lz)
+            rows.append([wname, rate, f"{pp['serial']['avg_latency_ms']:.2f}",
+                         f"{bg['avg_latency_ms']:.2f}({bg_name})",
+                         f"{lz:.2f}", f"{pp['oracle']['avg_latency_ms']:.2f}"])
+        rec[wname] = {
+            "gain_vs_best_graphb": float(np.mean(gains_best)),
+            "gain_vs_avg_graphb": float(np.mean(gains_all)),
+        }
+    print("\n# Fig. 12 — average latency (ms) per arrival rate")
+    print(fmt_table(rows, ["workload", "rate", "serial", "best graphb",
+                           "lazyb", "oracle"]))
+    for w, g in rec.items():
+        print(f"{w}: lazyb {g['gain_vs_best_graphb']:.1f}x vs best graphb, "
+              f"{g['gain_vs_avg_graphb']:.1f}x vs average graphb config "
+              f"(paper: 5.3/2.7/2.5x best; ~15x avg)")
+    return rec

@@ -1,0 +1,38 @@
+"""Fig. 13: throughput per query-arrival rate.
+
+Claim: LazyBatching matches or beats the throughput-optimized graph
+batching (1.1x / 1.3x / 1.2x for ResNet / GNMT / Transformer) — here
+measured as completed requests per second over the trace window including
+drain, so policies that stall requests score lower.
+"""
+import numpy as np
+
+from .common import best_graphb, fmt_table, sweep
+
+WORKLOADS = ("resnet", "gnmt", "transformer")
+
+
+def run(quick: bool = True) -> dict:
+    rates = [250, 1000] if quick else [250, 500, 1000, 2000]
+    dur = 0.5 if quick else 2.0
+    seeds = (0, 1) if quick else (0, 1, 2, 3)
+    rec, rows = {}, []
+    for wname in WORKLOADS:
+        res = sweep(wname, rates, duration=dur, seeds=seeds)
+        gains = []
+        for rate in rates:
+            pp = res[rate]
+            lz = pp["lazyb"]["throughput_rps"]
+            bg_name, bg = best_graphb(pp, "throughput_rps", minimize=False)
+            gains.append(lz / bg["throughput_rps"])
+            rows.append([wname, rate, f"{pp['serial']['throughput_rps']:.0f}",
+                         f"{bg['throughput_rps']:.0f}({bg_name})",
+                         f"{lz:.0f}", f"{pp['oracle']['throughput_rps']:.0f}"])
+        rec[wname] = {"gain_vs_best_graphb": float(np.mean(gains))}
+    print("\n# Fig. 13 — throughput (completed r/s) per arrival rate")
+    print(fmt_table(rows, ["workload", "rate", "serial", "best graphb",
+                           "lazyb", "oracle"]))
+    for w, g in rec.items():
+        print(f"{w}: lazyb {g['gain_vs_best_graphb']:.2f}x vs best graphb "
+              f"(paper: >= ~1.1-1.3x)")
+    return rec

@@ -1,0 +1,78 @@
+"""Fig. 16: robustness across additional benchmarks (VGG, MobileNet, LAS,
+BERT) — and, beyond the paper, across all 10 assigned architectures.
+
+Paper claim: averaged over the four extra workloads, 1.5x latency, 1.3x
+throughput, 2.9x SLA-satisfaction improvement vs the best graph batching.
+"""
+import numpy as np
+
+from .common import best_graphb, fmt_table, sweep
+
+PAPER_EXTRA = ("vggnet", "mobilenet", "las", "bert")
+ASSIGNED = ("llama3.2-1b", "mamba2-2.7b", "granite-moe-3b-a800m",
+            "recurrentgemma-9b", "minicpm3-4b", "musicgen-large",
+            "qwen2.5-32b", "mistral-nemo-12b", "internvl2-26b",
+            "grok-1-314b")
+
+
+def _one(wname, quick):
+    from repro.serving.npu_model import NPUPerfModel
+    from repro.serving.workload import get_workload
+
+    # assigned LLM/SSM archs run 10-1000x longer per request than the
+    # paper's vision/translation workloads on the Table-I NPU; scale the
+    # SLA and offered load to each workload's single-input time so the
+    # experiment probes the same operating regime for every model.
+    wl = get_workload(wname)
+    perf = NPUPerfModel()
+    if wl.prompt_dist:
+        m = int(round(wl.prompt_dist.mean))
+        d = int(round(wl.decode_dist.mean)) if wl.decode_dist else 0
+        single = perf.single_input_exec_time(wl, m, d)
+    else:
+        single = perf.single_input_exec_time(wl, 0, 0)
+    sla = max(0.1, 12 * single)
+    low, high = 0.25 / single, 3.0 / single
+    dur = (0.15 if quick else 1.0) * max(1.0, single / 1.1e-3) ** 0.5
+    dur = min(dur, 40 * single * 3)
+    rates = (low, high)
+    windows = tuple(min(w * sla / 0.1, sla * 0.9) for w in (0.005, 0.025, 0.075))
+    res = sweep(wname, list(rates), duration=dur,
+                seeds=(0,) if quick else (0, 1), sla=sla,
+                policies=(["serial"] + [("graphb", w) for w in windows]
+                          + ["lazyb"]))
+    lat_gain, thr_gain, viol = [], [], []
+    for rate in rates:
+        pp = res[rate]
+        _, bg_l = best_graphb(pp)
+        _, bg_t = best_graphb(pp, "throughput_rps", minimize=False)
+        lat_gain.append(bg_l["avg_latency_ms"] / pp["lazyb"]["avg_latency_ms"])
+        thr_gain.append(pp["lazyb"]["throughput_rps"]
+                        / max(bg_t["throughput_rps"], 1e-9))
+        _, bg_v = best_graphb(pp, "sla_violation_rate")
+        viol.append((bg_v["sla_violation_rate"],
+                     pp["lazyb"]["sla_violation_rate"]))
+    return {"lat_gain": float(np.mean(lat_gain)),
+            "thr_gain": float(np.mean(thr_gain)),
+            "viol_graphb": float(np.mean([v[0] for v in viol])),
+            "viol_lazyb": float(np.mean([v[1] for v in viol]))}
+
+
+def run(quick: bool = True) -> dict:
+    rec, rows = {}, []
+    names = PAPER_EXTRA + (ASSIGNED[:3] if quick else ASSIGNED)
+    for wname in names:
+        r = _one(wname, quick)
+        rec[wname] = r
+        rows.append([wname, f"{r['lat_gain']:.2f}x", f"{r['thr_gain']:.2f}x",
+                     f"{r['viol_graphb'] * 100:.1f}%",
+                     f"{r['viol_lazyb'] * 100:.1f}%"])
+    print("\n# Fig. 16 — robustness (lazyb vs best graphb; latency gain "
+          "averaged over 16/1000 r/s)")
+    print(fmt_table(rows, ["workload", "lat gain", "thr gain",
+                           "graphb viol", "lazyb viol"]))
+    lat = float(np.mean([r["lat_gain"] for r in rec.values()]))
+    thr = float(np.mean([r["thr_gain"] for r in rec.values()]))
+    print(f"averages: {lat:.2f}x latency, {thr:.2f}x throughput "
+          f"(paper fig16: 1.5x, 1.3x on its four extras)")
+    return {"per_workload": rec, "avg_lat_gain": lat, "avg_thr_gain": thr}

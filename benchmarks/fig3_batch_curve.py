@@ -1,0 +1,32 @@
+"""Fig. 3: throughput and latency of pre-formed batches vs batch size.
+
+Batched inputs are assumed already formed (no collection wait); shows
+throughput rising then saturating (~16 for ResNet) while per-input latency
+falls — the tradeoff curve that motivates bounded max batch size.
+"""
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.workload import get_workload
+from .common import fmt_table
+
+
+def run(quick: bool = True) -> dict:
+    perf = NPUPerfModel()
+    wl = get_workload("resnet")
+    sizes = [1, 2, 4, 8, 16, 32, 64]
+    rows, rec = [], {}
+    for n in sizes:
+        lat = sum(perf.node_latency(wl.nodes[nid], [ctx] * n)
+                  for nid, ctx in wl.build_sequence(0, 0)[0])
+        thr = n / lat
+        rec[n] = {"latency_ms": lat * 1e3, "throughput_rps": thr,
+                  "latency_avg_ms": lat / n * 1e3}
+        rows.append([n, f"{lat * 1e3:.2f}", f"{lat / n * 1e3:.3f}",
+                     f"{thr:.0f}"])
+    print("\n# Fig. 3 — ResNet batching tradeoff (pre-formed batches)")
+    print(fmt_table(rows, ["batch", "lat(all) ms", "lat(avg) ms", "thr r/s"]))
+    # saturation check: going 16 -> 64 must help < 2x (curve levels out)
+    sat = rec[64]["throughput_rps"] / rec[16]["throughput_rps"]
+    mono = all(rec[sizes[i + 1]]["throughput_rps"]
+               >= rec[sizes[i]]["throughput_rps"] for i in range(len(sizes) - 1))
+    print(f"throughput monotone: {mono}; 16->64 gain {sat:.2f}x (saturating)")
+    return {"curve": rec, "monotone": mono, "sat_gain_16_64": sat}

@@ -1,0 +1,30 @@
+"""§VI-C: model-allowed maximum batch size sensitivity.
+
+Paper: with graph batching max batch 16 / 32 (instead of 64), LazyBatching
+still achieves 12x / 14x average-config latency reduction and 1.3x
+throughput.
+"""
+import numpy as np
+
+from .common import best_graphb, fmt_table, sweep
+
+
+def run(quick: bool = True) -> dict:
+    dur = 0.5 if quick else 2.0
+    rec, rows = {}, []
+    for mb in (16, 32, 64):
+        res = sweep("transformer", [1000], duration=dur,
+                    seeds=(0,) if quick else (0, 1, 2), max_batch=mb)
+        pp = res[1000]
+        lz = pp["lazyb"]["avg_latency_ms"]
+        _, bg = best_graphb(pp)
+        allgb = float(np.mean([v["avg_latency_ms"] for k, v in pp.items()
+                               if k.startswith("graphb")]))
+        rec[mb] = {"vs_best": bg["avg_latency_ms"] / lz,
+                   "vs_avg": allgb / lz}
+        rows.append([mb, f"{bg['avg_latency_ms'] / lz:.1f}x",
+                     f"{allgb / lz:.1f}x"])
+    print("\n# max-batch sensitivity (Transformer @1K req/s)")
+    print(fmt_table(rows, ["max batch", "lazyb vs best gb",
+                           "lazyb vs avg gb"]))
+    return rec

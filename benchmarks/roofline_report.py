@@ -1,0 +1,29 @@
+"""Roofline report: renders the §Roofline table from the dry-run/probe
+JSON records under results/ (produced by ``repro.launch.dryrun`` and
+``repro.launch.roofline``). Skips gracefully when the sweep has not run.
+"""
+import json
+import os
+
+
+def run(quick: bool = True) -> dict:
+    rdir = "results/roofline"
+    if not os.path.isdir(rdir):
+        print("\n# Roofline — results/roofline not found; run "
+              "`python -m repro.launch.roofline --all` first (skipped)")
+        return {"skipped": True}
+    from repro.launch.roofline import render_table
+    recs = []
+    for fn in sorted(os.listdir(rdir)):
+        if fn.endswith(".json"):
+            with open(os.path.join(rdir, fn)) as f:
+                r = json.load(f)
+            if "error" not in r:
+                recs.append(r)
+    print(f"\n# Roofline — {len(recs)} (arch × shape) baselines")
+    print(render_table(recs))
+    doms = {}
+    for r in recs:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print("dominant-term distribution:", doms)
+    return {"n": len(recs), "dominant_distribution": doms}

@@ -1,0 +1,54 @@
+"""Run the full benchmark suite (one module per paper table/figure).
+
+  PYTHONPATH=src python -m benchmarks.run [--full] [--only fig12,fig15]
+"""
+import argparse
+import json
+import time
+
+from . import (bursty_traffic, colocation, dec_timesteps, fig3_batch_curve,
+               fig5_time_window, fig12_latency, fig13_throughput, fig14_cdf,
+               fig15_sla, fig16_robustness, max_batch_sensitivity,
+               roofline_report, table2_latency)
+
+SUITES = {
+    "table2": table2_latency,
+    "fig3": fig3_batch_curve,
+    "fig5": fig5_time_window,
+    "fig12": fig12_latency,
+    "fig13": fig13_throughput,
+    "fig14": fig14_cdf,
+    "fig15": fig15_sla,
+    "fig16": fig16_robustness,
+    "dec_timesteps": dec_timesteps,
+    "max_batch": max_batch_sensitivity,
+    "colocation": colocation,
+    "bursty": bursty_traffic,
+    "roofline": roofline_report,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale durations/seeds (slow)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SUITES))
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    names = args.only.split(",") if args.only else list(SUITES)
+    results, t0 = {}, time.perf_counter()
+    for name in names:
+        t = time.perf_counter()
+        results[name] = SUITES[name].run(quick=not args.full)
+        print(f"[{name} done in {time.perf_counter() - t:.1f}s]")
+    print(f"\nall {len(names)} benchmarks done "
+          f"in {time.perf_counter() - t0:.1f}s")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(results, f, indent=1, default=str)
+
+
+if __name__ == "__main__":
+    main()

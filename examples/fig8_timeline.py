@@ -1,0 +1,81 @@
+"""Paper Fig. 8/10 walkthrough: watch the BatchTable preempt, catch up,
+and merge on a synthetic 5-node graph.
+
+Reproduces the paper's running example — Req1-2 batched at t=0, Req3-5
+arriving mid-flight — and prints the per-node execution timeline plus the
+stack state after every scheduling decision. Under graph batching Req3-5
+wait for the whole graph; under LazyBatching they catch up and merge.
+
+  PYTHONPATH=src python examples/fig8_timeline.py
+"""
+from repro.core.policies import GraphBatching, LazyBatching
+from repro.core.request import Request
+from repro.core.slack import SlackPredictor
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.server import InferenceServer, SimExecutor
+from repro.serving.traffic import Trace
+from repro.serving.workload import NodeDesc, Segment, Workload
+
+
+def five_node_workload() -> Workload:
+    """Five equal-cost nodes A..E (paper Fig. 8), ~1 time-unit each."""
+    nodes = {}
+    for nid in "ABCDE":
+        # ~1 ms per node on the paper NPU (memory-bound weight streaming:
+        # 360 MB / 360 GB/s)
+        nodes[nid] = NodeDesc(nid, flops=1e6, weight_bytes=360e6,
+                              act_bytes=1e3, m_rows=4, cell=False)
+    return Workload("fig8", nodes, [Segment(tuple("ABCDE"))], kind="static")
+
+
+class TimelineExecutor(SimExecutor):
+    def __init__(self, perf, policy):
+        super().__init__(perf)
+        self.policy = policy
+        self.events = []
+
+    def execute(self, sb, node_id):
+        lat = super().execute(sb, node_id)
+        rids = sorted(r.rid for r in sb.live_requests)
+        self.events.append((node_id, rids))
+        stack = getattr(getattr(self.policy, "table", None), "stack", None)
+        desc = ("  stack: " + " | ".join(
+            f"{s.node_id}:{sorted(r.rid for r in s.live_requests)}"
+            for s in stack)) if stack else ""
+        print(f"  exec node {node_id} for reqs {rids}{desc}")
+        return lat
+
+
+def run(policy_name: str):
+    wl = five_node_workload()
+    perf = NPUPerfModel()
+    reqs = []
+    for rid, arrival in [(1, 0.0), (2, 0.0), (3, 0.0021), (4, 0.0021),
+                         (5, 0.0021)]:
+        seq, pl, cl = wl.build_sequence(0, 0)
+        r = Request(workload=wl, arrival=arrival, sequence=seq, rid=rid)
+        reqs.append(r)
+    trace = Trace(reqs, duration=0.02)
+    if policy_name == "lazyb":
+        pol = LazyBatching(SlackPredictor.build([wl], perf, 0.1), max_batch=8)
+    else:
+        pol = GraphBatching(window=0.001, max_batch=8)
+    print(f"\n=== {policy_name} ===")
+    ex = TimelineExecutor(perf, pol)
+    stats = InferenceServer(pol, ex).run(trace)
+    print(f"  node executions: {len(ex.events)}  "
+          f"avg latency {stats.avg_latency * 1e3:.2f}ms")
+    return len(ex.events), stats.avg_latency
+
+
+def main():
+    n_gb, lat_gb = run("graphb")
+    n_lz, lat_lz = run("lazyb")
+    print(f"\nLazyBatching merged mid-flight: {n_lz} node executions vs "
+          f"{n_gb} for graph batching "
+          f"({lat_gb / lat_lz:.1f}x lower average latency).")
+    assert n_lz < n_gb, "lazy merging should reduce total node executions"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: LazyBatching vs graph batching in 30 seconds.
+
+Replays one Poisson inference trace (Transformer translation workload,
+paper Table II) through four scheduling policies on the NPU latency model
+and prints the latency / throughput / SLA comparison.
+
+  PYTHONPATH=src python examples/quickstart.py [--rate 500] [--sla 0.1]
+"""
+import argparse
+
+from repro.core.policies import GraphBatching, LazyBatching, Oracle, Serial
+from repro.core.slack import OracleSlackPredictor, SlackPredictor
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.server import run_policy
+from repro.serving.traffic import poisson_trace
+from repro.serving.workload import get_workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="transformer")
+    ap.add_argument("--rate", type=float, default=500.0,
+                    help="query arrival rate (req/s)")
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--sla", type=float, default=0.100,
+                    help="SLA target in seconds (paper default 100ms)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    wl = get_workload(args.workload)
+    perf = NPUPerfModel()
+    trace = poisson_trace(wl, args.rate, args.duration, seed=args.seed)
+    predictor = SlackPredictor.build([wl], perf, args.sla)
+
+    policies = [
+        Serial(),
+        GraphBatching(window=0.005),
+        GraphBatching(window=0.025),
+        GraphBatching(window=0.075),
+        LazyBatching(predictor),
+        Oracle(OracleSlackPredictor(args.sla, perf)),
+    ]
+
+    print(f"workload={wl.name}  rate={args.rate:g} req/s  "
+          f"{len(trace)} requests  SLA={args.sla * 1e3:g}ms\n")
+    hdr = (f"{'policy':<16}{'avg ms':>9}{'p99 ms':>9}{'thr r/s':>10}"
+           f"{'SLA viol':>10}")
+    print(hdr)
+    print("-" * len(hdr))
+    for pol in policies:
+        stats = run_policy(pol, trace, perf)
+        s = stats.summary(sla=args.sla)
+        print(f"{s['policy']:<16}{s['avg_latency_ms']:>9.2f}"
+              f"{s['p99_ms']:>9.2f}{s['throughput_rps']:>10.1f}"
+              f"{s['sla_violation_rate'] * 100:>9.1f}%")
+
+
+if __name__ == "__main__":
+    main()

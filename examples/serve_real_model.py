@@ -1,0 +1,113 @@
+"""End-to-end driver: LazyBatching serving a REAL model with batched requests.
+
+Builds a reduced llama-family model, generates a Poisson request trace, and
+serves it with the real-JAX node-level engine: the LazyBatching scheduler
+preempts/merges sub-batches at layer boundaries and every node dispatch
+executes actual jitted layer functions (ragged-position batched decode,
+per-request KV caches).
+
+Correctness is verified, not assumed: every request's generated tokens are
+compared against an isolated (no batching, no preemption) reference
+generation of the same prompt — lazy batching must not change results.
+
+  PYTHONPATH=src python examples/serve_real_model.py \
+      [--arch llama3.2-1b] [--n 12] [--rate 20]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.policies import LazyBatching
+from repro.core.slack import SlackPredictor
+from repro.serving.engine import JaxEngine
+from repro.serving.npu_model import NPUPerfModel, TPU_V5E
+from repro.serving.server import InferenceServer
+from repro.serving.traffic import Trace
+from repro.serving.workload import fixed_length, from_model_config, LengthDist
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--n", type=int, default=12, help="number of requests")
+    ap.add_argument("--rate", type=float, default=20.0)
+    ap.add_argument("--sla", type=float, default=60.0,
+                    help="SLA target (seconds — CPU wall-clock is slow)")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    rng = np.random.default_rng(args.seed)
+
+    # request population: short prompts, a few decode steps each
+    prompt_dist = LengthDist((6, 8, 10, 12), (0.25, 0.25, 0.25, 0.25))
+    decode_dist = LengthDist((2, 3, 4, 5), (0.25, 0.25, 0.25, 0.25))
+    wl = from_model_config(cfg, prompt_dist=prompt_dist,
+                           decode_dist=decode_dist)
+
+    engine = JaxEngine(cfg, max_len=64)
+    reqs, prompts = [], {}
+    t = 0.0
+    for _ in range(args.n):
+        t += rng.exponential(1.0 / args.rate)
+        r = wl.sample_request(rng, t)
+        prompt = rng.integers(2, cfg.vocab_size, size=r.prompt_len)
+        prompts[r.rid] = prompt
+        engine.register(r, prompt)
+        reqs.append(r)
+    trace = Trace(reqs, duration=t)
+
+    predictor = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), args.sla)
+    policy = LazyBatching(predictor, max_batch=args.max_batch)
+    server = InferenceServer(policy, engine)
+    print(f"serving {args.n} requests on reduced {args.arch} "
+          f"({cfg.param_count() / 1e6:.1f}M params), "
+          f"max_batch={args.max_batch} ...")
+    stats = server.run(trace)
+
+    s = stats.summary()
+    print(f"completed {s['completed']}/{args.n}  "
+          f"avg latency {s['avg_latency_ms']:.0f}ms (CPU wall-clock)  "
+          f"nodes executed {engine.nodes_executed}  "
+          f"preemptions {policy.n_preemptions}")
+    assert s["completed"] == args.n
+
+    # ---- verify generations against isolated reference ----------------
+    print("verifying generations against isolated (unbatched) reference ...")
+    ref_engine = JaxEngine(cfg, max_len=64)     # same seed -> same params
+    mismatches = 0
+    for r in reqs:
+        got = engine.states[r.rid].generated[:r.decode_len]
+        ref = _reference_generate(ref_engine, wl, prompts[r.rid],
+                                  r.decode_len)
+        if got != ref:
+            mismatches += 1
+            print(f"  rid={r.rid}: engine {got} != reference {ref}")
+    if mismatches:
+        raise SystemExit(f"{mismatches} requests diverged from reference!")
+    print(f"all {args.n} generations match the unbatched reference — "
+          "lazy batching preserved results exactly.")
+
+
+def _reference_generate(engine: JaxEngine, wl, prompt, n_tokens: int):
+    """Generate in isolation through the same engine (batch of 1, no
+    preemption): the ground truth LazyBatching must reproduce."""
+    rng = np.random.default_rng(123)
+    req = wl.sample_request(rng, 0.0)
+    # rebuild the node sequence for this exact prompt/decode length
+    seq, prefix_len, cycle_len = wl.build_sequence(len(prompt), n_tokens)
+    req.sequence, req.prefix_len, req.cycle_len = seq, prefix_len, cycle_len
+    req.prompt_len, req.decode_len = len(prompt), n_tokens
+    engine.register(req, prompt)
+    from repro.core.request import SubBatch
+    sb = SubBatch([req])
+    while not req.done:
+        engine.execute(sb, req.next_node_id)
+        sb.advance(0.0)
+    return engine.states[req.rid].generated[:n_tokens]
+
+
+if __name__ == "__main__":
+    main()

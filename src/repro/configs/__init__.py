@@ -1,0 +1,50 @@
+"""Architecture registry.
+
+Each assigned architecture lives in its own module and registers exactly the
+configuration from the assignment brief (source citation included).
+"""
+from __future__ import annotations
+
+from .base import (InputShape, INPUT_SHAPES, MLAConfig, MoEConfig, ModelConfig,
+                   SSMConfig, HybridConfig)
+
+from . import (qwen2_5_32b, musicgen_large, granite_moe_3b_a800m,
+               internvl2_26b, llama3_2_1b, grok_1_314b, recurrentgemma_9b,
+               mistral_nemo_12b, minicpm3_4b, mamba2_2_7b)
+
+ARCHITECTURES: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        qwen2_5_32b.CONFIG,
+        musicgen_large.CONFIG,
+        granite_moe_3b_a800m.CONFIG,
+        internvl2_26b.CONFIG,
+        llama3_2_1b.CONFIG,
+        grok_1_314b.CONFIG,
+        recurrentgemma_9b.CONFIG,
+        mistral_nemo_12b.CONFIG,
+        minicpm3_4b.CONFIG,
+        mamba2_2_7b.CONFIG,
+    ]
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    try:
+        return ARCHITECTURES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown architecture {name!r}; available: {sorted(ARCHITECTURES)}")
+
+
+def get_shape(name: str) -> InputShape:
+    try:
+        return INPUT_SHAPES[name]
+    except KeyError:
+        raise KeyError(f"unknown input shape {name!r}; available: {sorted(INPUT_SHAPES)}")
+
+
+__all__ = [
+    "ARCHITECTURES", "INPUT_SHAPES", "ModelConfig", "InputShape", "MoEConfig",
+    "MLAConfig", "SSMConfig", "HybridConfig", "get_config", "get_shape",
+]

@@ -1,0 +1,120 @@
+"""Inference requests and sub-batches (BatchTable entries).
+
+A request's execution is a linear sequence of graph nodes (paper §II-A:
+the DAG is lowered to a serialized node-wise execution order; dynamic
+seq2seq graphs are unrolled per-request into their actual length). Node ids
+are *shared* across unroll steps when the underlying weights are shared
+(RNN cells, decode-cycle layers) — two requests at the same node id can be
+merged into one sub-batch regardless of their absolute timestep, which is
+exactly the property cellular batching exploits and LazyBatching
+generalizes.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence, Tuple
+
+_rid_counter = itertools.count()
+
+
+@dataclass
+class Request:
+    workload: "object"                  # serving.workload.Workload
+    arrival: float
+    sequence: List[Tuple[str, int]]     # [(node_id, ctx), ...]
+    rid: int = field(default_factory=lambda: next(_rid_counter))
+    idx: int = 0                        # next node to execute
+    t_first_issue: Optional[float] = None
+    t_finish: Optional[float] = None
+    # sequence-structure metadata (set by Workload.sample_request)
+    prompt_len: int = 0
+    decode_len: int = 0
+    prefix_len: int = 0                 # node count before the decode cycles
+    cycle_len: int = 0                  # nodes per decode cycle (0 = static)
+
+    @property
+    def done(self) -> bool:
+        return self.idx >= len(self.sequence)
+
+    @property
+    def next_node_id(self) -> Optional[str]:
+        if self.done:
+            return None
+        return self.sequence[self.idx][0]
+
+    @property
+    def next_ctx(self) -> int:
+        return self.sequence[self.idx][1]
+
+    def advance(self):
+        assert not self.done
+        self.idx += 1
+
+    def latency(self) -> float:
+        assert self.t_finish is not None
+        return self.t_finish - self.arrival
+
+    def clone(self) -> "Request":
+        """Fresh, unexecuted copy (for comparing policies on one trace)."""
+        return Request(workload=self.workload, arrival=self.arrival,
+                       sequence=self.sequence, rid=self.rid,
+                       prompt_len=self.prompt_len, decode_len=self.decode_len,
+                       prefix_len=self.prefix_len, cycle_len=self.cycle_len)
+
+    def __repr__(self):
+        return (f"Request(rid={self.rid}, wl={getattr(self.workload, 'name', '?')}, "
+                f"idx={self.idx}/{len(self.sequence)})")
+
+
+@dataclass
+class SubBatch:
+    """One BatchTable stack entry: requests advancing in lockstep.
+
+    Invariant: all member requests share the same ``next_node_id`` (they are
+    at a common graph node). Members may *complete* at different times
+    (variable unrolled lengths) — finished requests simply leave the batch.
+    """
+    requests: List[Request]
+
+    @property
+    def node_id(self) -> Optional[str]:
+        live = [r for r in self.requests if not r.done]
+        if not live:
+            return None
+        nid = live[0].next_node_id
+        assert all(r.next_node_id == nid for r in live), \
+            "SubBatch invariant violated: members at different nodes"
+        return nid
+
+    @property
+    def live_requests(self) -> List[Request]:
+        return [r for r in self.requests if not r.done]
+
+    @property
+    def size(self) -> int:
+        return len(self.live_requests)
+
+    def advance(self, now: float) -> List[Request]:
+        """Advance every live member one node; return newly finished."""
+        finished = []
+        for r in self.live_requests:
+            r.advance()
+            if r.done:
+                r.t_finish = now
+                finished.append(r)
+        self.requests = self.live_requests
+        return finished
+
+    def mergeable_with(self, other: "SubBatch", max_batch: int) -> bool:
+        a, b = self.node_id, other.node_id
+        if a is None or a != b or self.size + other.size > max_batch:
+            return False
+        # co-location: node ids only denote shared weights within ONE model —
+        # sub-batches of different workloads never merge (§VI-C)
+        return (self.live_requests[0].workload
+                is other.live_requests[0].workload)
+
+    def merge(self, other: "SubBatch"):
+        assert self.node_id == other.node_id
+        self.requests = self.live_requests + other.live_requests

@@ -1,0 +1,155 @@
+"""SLA-aware slack time prediction (paper §IV-C, Eq. 1-2, Algorithm 1).
+
+    Slack_r = SLA_target - (T_wait_r + Σ_{i in batch} SingleInputExecTime_i)
+
+Deliberately conservative: the latency of a batch is overestimated as the
+*sum* of its members' isolated single-batch latencies, so estimated slack
+shrinks and SLA violations are minimized first, throughput second.
+
+SingleInputExecTime_i comes from the profiled per-node latency lookup table
+(``NodeLatency(n)``); dynamic graphs are overprovisioned with
+``dec_timesteps`` = the N-% quantile of the output-length distribution
+(default N = 90%, paper Fig. 11).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional
+
+from .request import Request
+
+
+@dataclass
+class SlackPredictor:
+    sla_target: float
+    # per-workload-name profiled node latency tables (single-batch)
+    tables: Dict[str, Dict[str, float]]
+    # per-workload-name dec_timesteps (quantile of decode-length profile)
+    dec_timesteps: Dict[str, int]
+    coverage: float = 0.90
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, workloads, perf_model, sla_target: float,
+              coverage: float = 0.90) -> "SlackPredictor":
+        tables, dect = {}, {}
+        for wl in workloads:
+            tables[wl.name] = perf_model.profile_table(wl)
+            dect[wl.name] = (wl.decode_dist.quantile(coverage)
+                             if wl.decode_dist else 0)
+        return cls(sla_target=sla_target, tables=tables, dec_timesteps=dect,
+                   coverage=coverage)
+
+    # ------------------------------------------------------------------
+    def single_remaining(self, req: Request) -> float:
+        """Conservative remaining single-batch execution time (Algorithm 1).
+
+        Memoized per (request, progress) — the scheduler evaluates the same
+        requests at every admission decision."""
+        key = (req.rid, req.idx)
+        cache = getattr(self, "_memo", None)
+        if cache is None:
+            cache = self._memo = {}
+        if key in cache:
+            return cache[key]
+        wl = req.workload
+        table = self.tables[wl.name]
+        dec = self.dec_timesteps.get(wl.name, 0)
+        val = sum(table[nid]
+                  for nid, _ctx in wl.predicted_remaining_nodes(req, dec))
+        cache[key] = val
+        if len(cache) > 100_000:
+            cache.clear()
+        return val
+
+    def single_total(self, req: Request) -> float:
+        """SingleInputExecTime for a request that has not started (Eq. 1)."""
+        wl = req.workload
+        table = self.tables[wl.name]
+        dec = self.dec_timesteps.get(wl.name, 0)
+        if req.cycle_len:
+            prefix = sum(table[nid] for nid, _ in req.sequence[:req.prefix_len])
+            cycle = sum(table[nid] for nid in wl.cycle_ids())
+            return prefix + dec * cycle
+        return sum(table[nid] for nid, _ in req.sequence)
+
+    def slack(self, req: Request, group: Iterable[Request], now: float) -> float:
+        """Eq. 2 slack of ``req`` if batched with ``group`` (which includes
+        req itself): SLA - T_wait - Σ_i SingleInputExecTime_i(remaining)."""
+        t_wait = now - req.arrival
+        total = sum(self.single_remaining(r) for r in group)
+        return self.sla_target - t_wait - total
+
+    # ------------------------------------------------------------------
+    def authorize(self, ongoing: List[Request], pending: List[Request],
+                  now: float) -> bool:
+        """Authorize lazily batching ``pending`` with ``ongoing`` iff no
+        request in the merged set is predicted to violate its SLA (§IV-C:
+        minimize violations first, throughput second)."""
+        merged = list(ongoing) + list(pending)
+        total = sum(self.single_remaining(r) for r in merged)
+        for r in merged:
+            if self.sla_target - (now - r.arrival) - total < 0.0:
+                return False
+        return True
+
+
+@dataclass
+class OracleSlackPredictor:
+    """Oracular slack estimation (paper §VI design point 4).
+
+    Uses (a) the *true* unrolled sequence lengths (no dec_timesteps
+    overprovision) and (b) the precise batched latency-vs-throughput curve
+    of every node (the NPU model evaluated at the merged batch size) instead
+    of the conservative sum-of-singles bound.
+    """
+    sla_target: float
+    perf_model: "object"        # serving.npu_model.NPUPerfModel
+
+    def _batched_remaining(self, req: Request, batch: int) -> float:
+        key = (req.rid, req.idx, batch)
+        cache = getattr(self, "_memo", None)
+        if cache is None:
+            cache = self._memo = {}
+        if key in cache:
+            return cache[key]
+        wl = req.workload
+        val = sum(self.perf_model.node_latency(wl.nodes[nid], [ctx] * batch)
+                  for nid, ctx in req.sequence[req.idx:])
+        cache[key] = val
+        if len(cache) > 200_000:
+            cache.clear()
+        return val
+
+    def single_remaining(self, req: Request) -> float:
+        return self._batched_remaining(req, 1)
+
+    def slack(self, req: Request, group, now: float) -> float:
+        group = list(group)
+        return (self.sla_target - (now - req.arrival)
+                - self._batched_remaining(req, len(group)))
+
+    def authorize(self, ongoing: List[Request], pending: List[Request],
+                  now: float) -> bool:
+        merged = list(ongoing) + list(pending)
+        n = len(merged)
+        npend = len(pending)
+        # catch-up phase: the pending sub-batch executes its own remaining
+        # prefix (batched at |pending|) before it can merge with the ongoing
+        # entries; ongoing requests are stalled for that long.
+        catch = 0.0
+        if pending:
+            lead = pending[0]
+            stop = lead.prefix_len if lead.cycle_len else len(lead.sequence)
+            catch = sum(
+                self.perf_model.node_latency(
+                    lead.workload.nodes[nid], [ctx] * npend)
+                for nid, ctx in lead.sequence[lead.idx:stop])
+        for r in ongoing:
+            finish = catch + self._batched_remaining(r, n)
+            if (now - r.arrival) + finish > self.sla_target:
+                return False
+        for p in pending:
+            if (now - p.arrival) + self._batched_remaining(p, n) > self.sla_target:
+                return False
+        return True

@@ -1,0 +1,10 @@
+"""Data pipeline: synthetic token streams + WMT-like length sampling.
+
+Offline container — the pipeline synthesizes token sequences whose summary
+statistics match the serving-side length characterization (Fig. 11), so the
+profile-driven ``dec_timesteps`` mechanism is exercised end-to-end by the
+training example and the benchmarks.
+"""
+from .pipeline import DataConfig, TokenPipeline, make_batch_specs
+
+__all__ = ["DataConfig", "TokenPipeline", "make_batch_specs"]

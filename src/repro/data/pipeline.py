@@ -1,0 +1,105 @@
+"""Synthetic token pipeline.
+
+Deterministic, seedable, host-side (numpy) generation with double-buffered
+prefetch semantics: ``__iter__`` yields ready batches while the next one is
+synthesized. Sequences are drawn from a Zipfian unigram model with
+document boundaries sampled from the WMT-like length distribution, so the
+pipeline also doubles as the output-length characterization source used by
+the slack predictor's ``dec_timesteps`` quantile (paper Fig. 11).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, InputShape
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    batch_size: int
+    seed: int = 0
+    zipf_a: float = 1.2          # unigram skew
+    doc_len_mean: float = 180.0  # mean document length (tokens)
+    eos_id: int = 1
+    pad_id: int = 0
+
+
+class TokenPipeline:
+    """Infinite iterator of {"tokens", "targets"} numpy batches."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        # Zipfian unigram distribution over the vocab (precomputed CDF).
+        ranks = np.arange(2, cfg.vocab_size, dtype=np.float64)  # skip pad/eos
+        w = 1.0 / ranks ** cfg.zipf_a
+        self._cdf = np.cumsum(w) / w.sum()
+
+    def _sample_tokens(self, n: int) -> np.ndarray:
+        u = self.rng.random(n)
+        return (np.searchsorted(self._cdf, u) + 2).astype(np.int32)
+
+    def _sample_stream(self, n: int) -> np.ndarray:
+        """Token stream with EOS-delimited documents."""
+        out = np.empty(n + 1, np.int32)
+        i = 0
+        while i <= n:
+            dl = max(1, int(self.rng.exponential(self.cfg.doc_len_mean)))
+            dl = min(dl, n + 1 - i)
+            out[i:i + dl] = self._sample_tokens(dl)
+            i += dl
+            if i <= n:
+                out[i] = self.cfg.eos_id
+                i += 1
+        return out[:n + 1]
+
+    def next_batch(self) -> dict:
+        c = self.cfg
+        toks = np.stack([self._sample_stream(c.seq_len) for _ in range(c.batch_size)])
+        return {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict]:
+        while True:
+            yield self.next_batch()
+
+    def output_length_samples(self, n: int = 10_000) -> np.ndarray:
+        """Document lengths — the characterization feed for dec_timesteps."""
+        return np.maximum(
+            1, self.rng.exponential(self.cfg.doc_len_mean, size=n).astype(int))
+
+
+def make_batch_specs(cfg: ModelConfig, shape: InputShape,
+                     dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStruct stand-ins for one phase's inputs (dry-run pattern:
+    weak-type-correct, shardable, no device allocation)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "targets": jax.ShapeDtypeStruct((B, S), i32),
+        }
+        if cfg.modality is not None and cfg.num_prefix_embeddings:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeddings, cfg.d_model), dtype)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.modality is not None and cfg.num_prefix_embeddings:
+            specs["prefix"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_embeddings, cfg.d_model), dtype)
+        return specs
+    # decode: ONE new token per row, ragged positions within [0, S)
+    return {
+        "token": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((B,), i32),
+    }

@@ -1,0 +1,18 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on TPU
+(the target) — the same call sites work in both worlds. The model layers
+call these through ``RuntimeFlags``-gated dispatch; the pure-jnp paths in
+``repro.models.layers`` / ``repro.models.ssm`` remain the oracles.
+"""
+from __future__ import annotations
+
+from .flash_attn import flash_attention
+from .ragged_decode_attn import ragged_decode_attention
+from .rmsnorm import fused_rmsnorm
+from .ssd_chunk import ssd_chunk_intra, ssd_chunked_pallas
+
+__all__ = [
+    "flash_attention", "ragged_decode_attention", "fused_rmsnorm",
+    "ssd_chunk_intra", "ssd_chunked_pallas",
+]

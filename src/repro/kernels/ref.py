@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every kernel (the allclose references)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.ssm import ssd_chunked as _ssd_chunked_ref
+
+
+def ragged_decode_attention_ref(q, k, v, lengths):
+    """q: (B, H, D); k, v: (B, T, KV, D); lengths: (B,)."""
+    B, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    kf = jnp.repeat(k, G, axis=2)            # (B, T, H, D)
+    vf = jnp.repeat(v, G, axis=2)
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) * scale
+    valid = jnp.arange(T)[None, None, :] < lengths[:, None, None]
+    scores = jnp.where(valid, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bht,bthd->bhd", probs, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window: Optional[int] = None,
+                        q_offset: int = 0):
+    """q: (B, S, H, D); k, v: (B, T, H, D); causal w/ offset + window."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(S)
+    kpos = jnp.arange(T)
+    mask = kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def fused_rmsnorm_ref(x, scale, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssd_chunked_ref(x, dt, A, B_ssm, C_ssm, chunk: int):
+    """The model's own pure-jnp SSD implementation is the oracle."""
+    return _ssd_chunked_ref(x, dt, A, B_ssm, C_ssm, chunk)

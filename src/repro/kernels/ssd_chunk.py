@@ -1,0 +1,139 @@
+"""Mamba-2 SSD intra-chunk kernel.
+
+The quadratic within-chunk term of the SSD algorithm (arXiv:2405.21060) is
+the compute hot-spot of Mamba-2 prefill: for every (batch, chunk, head)
+cell it builds the decay-weighted score matrix and applies it to the chunk.
+This kernel fuses the whole cell — decay cumsum, L matrix, C·Bᵀ scores,
+weighted PV product, and the chunk summary state — into one VMEM-resident
+block (no (chunk × chunk × heads) L tensor ever hits HBM, which is what
+the pure-jnp reference materializes).
+
+grid = (B, n_chunks, n_heads); per cell:
+  x (chunk, hd), dt (chunk,), B/C (chunk, N) -> y_intra (chunk, hd),
+  state (hd, N), exp(cum) (chunk,), exp(total) (1,).
+The inter-chunk linear recurrence stays outside in
+``jax.lax.associative_scan`` (log-depth — the TPU adaptation of the
+sequential CUDA inter-chunk pass, DESIGN.md §3).
+
+VMEM per cell at chunk=256, hd=64, N=128: x 64KB + B/C 2·128KB + L/scores
+2·256KB f32 ≈ 0.9 MB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+            y_ref, st_ref, cume_ref, dec_ref):
+    chunk, hd = x_ref.shape[2], x_ref.shape[4]
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)      # (chunk, hd)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)       # (chunk,)
+    A = a_ref[0].astype(jnp.float32)                  # scalar (negative)
+    Bm = b_ref[0, 0].astype(jnp.float32)              # (chunk, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)              # (chunk, N)
+
+    dA = dt * A
+    cum = jnp.cumsum(dA)                              # (chunk,)
+    total = cum[-1]
+
+    # intra-chunk: y_i = sum_{j<=i} exp(cum_i - cum_j) * dt_j * (C_i·B_j) x_j
+    diff = cum[:, None] - cum[None, :]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(jj <= ii, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))
+    w = scores * L * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))
+
+    # chunk summary state: S = sum_j exp(total - cum_j) dt_j x_j B_j^T
+    decay_to_end = jnp.exp(total - cum)
+    xw = x * (decay_to_end * dt)[:, None]
+    st = jax.lax.dot_general(xw, Bm, (((0,), (0,)), ((), ())))  # (hd, N)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = st
+    cume_ref[0, 0, :, 0] = jnp.exp(cum)
+    dec_ref[0, 0, 0] = jnp.exp(total)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk_intra(x, dt, A, B_ssm, C_ssm, *, chunk: int,
+                    interpret: bool | None = None):
+    """Intra-chunk SSD terms.
+
+    x: (B, S, nh, hd); dt: (B, S, nh) post-softplus; A: (nh,) negative;
+    B_ssm, C_ssm: (B, S, N). Returns
+    (y_intra (B,S,nh,hd), states (B,nc,nh,hd,N),
+     cum_exp (B,S,nh), decay (B,nc,nh)).
+    """
+    Bb, S, nh, hd = x.shape
+    N = B_ssm.shape[-1]
+    assert S % chunk == 0, (S, chunk)
+    nc = S // chunk
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+
+    xc = x.reshape(Bb, nc, chunk, nh, hd)
+    dtc = dt.reshape(Bb, nc, chunk, nh)
+    Bc = B_ssm.reshape(Bb, nc, chunk, N)
+    Cc = C_ssm.reshape(Bb, nc, chunk, N)
+
+    y, st, cume, dec = pl.pallas_call(
+        _kernel,
+        grid=(Bb, nc, nh),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, c, h: (h,)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, 1, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, hd, N), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, nc, chunk, nh, hd), x.dtype),
+            jax.ShapeDtypeStruct((Bb, nc, nh, hd, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, nc, chunk, nh), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xc, dtc, A, Bc, Cc)
+    return (y.reshape(Bb, S, nh, hd), st,
+            cume.reshape(Bb, S, nh), dec)
+
+
+def ssd_chunked_pallas(x, dt, A, B_ssm, C_ssm, chunk: int,
+                       interpret: bool | None = None):
+    """Drop-in replacement for ``repro.models.ssm.ssd_chunked`` with the
+    intra-chunk work in the Pallas kernel and the inter-chunk recurrence in
+    ``jax.lax.associative_scan``. Returns (y (B,S,nh,hd), final_state)."""
+    Bb, S, nh, hd = x.shape
+    N = B_ssm.shape[-1]
+    nc = S // chunk
+
+    y_intra, states, cum_exp, decay = ssd_chunk_intra(
+        x, dt, A, B_ssm, C_ssm, chunk=chunk, interpret=interpret)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sa * db[..., None, None] + sb
+
+    dec_s, st_s = jax.lax.associative_scan(
+        combine, (decay, states), axis=1)
+    h_prev = jnp.pad(st_s[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+
+    Cc = C_ssm.reshape(Bb, nc, chunk, N)
+    cume_c = cum_exp.reshape(Bb, nc, chunk, nh)
+    Ci = Cc[:, :, :, None, :] * cume_c[..., None]         # (B,nc,cs,nh,N)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ci, h_prev).astype(x.dtype)
+    y = y_intra + y_inter.reshape(Bb, S, nh, hd)
+    return y, st_s[:, -1]

@@ -1,0 +1,6 @@
+"""Launcher: production mesh, dry-run driver, roofline extraction.
+
+NOTE: importing this package never touches jax device state —
+``make_production_mesh`` is a function, and the 512-placeholder-device
+XLA flag is set only by ``dryrun.py`` when run as a script.
+"""

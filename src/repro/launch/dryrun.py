@@ -1,0 +1,123 @@
+"""Multi-pod dry-run driver (deliverable (e)).
+
+Proves the distribution config is coherent without real hardware: for every
+(architecture × input shape) the step function must ``.lower().compile()``
+on BOTH production meshes — (data=16, model=16) single-pod and
+(pod=2, data=16, model=16) multi-pod — and we record memory / cost /
+collective statistics for §Dry-run and §Roofline of EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all --out results/dryrun
+  python -m repro.launch.dryrun --arch grok-1-314b --shape decode_32k --multi-pod
+"""
+# The VERY FIRST lines — before ANY other import (jax locks the device count
+# on first init). 512 placeholder host devices cover both meshes.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHITECTURES, INPUT_SHAPES
+from . import hlo_stats
+from .mesh import make_production_mesh
+from .steps import lower_combo
+
+
+def run_one(arch: str, shape: str, *, multi_pod: bool,
+            flag_overrides=None, fsdp_override=None,
+            rules_overrides=None, verbose: bool = True) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape, "mesh": mesh_name, "ok": False}
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.perf_counter()
+        lowered, combo = lower_combo(arch, shape, mesh,
+                                     flag_overrides=flag_overrides,
+                                     fsdp_override=fsdp_override,
+                                     rules_overrides=rules_overrides)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+
+        mem = compiled.memory_analysis()
+        mem_rec = {}
+        for f in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, f, None)
+            if v is not None:
+                mem_rec[f] = int(v)
+        cost = compiled.cost_analysis() or {}
+        cost_rec = {k: float(v) for k, v in cost.items()
+                    if isinstance(v, (int, float))}
+        coll = hlo_stats.collective_stats(compiled.as_text())
+
+        rec.update(
+            ok=True,
+            lower_s=round(t1 - t0, 2),
+            compile_s=round(t2 - t1, 2),
+            n_devices=int(mesh.devices.size),
+            memory=mem_rec,
+            cost={k: cost_rec[k] for k in ("flops", "bytes accessed",
+                                           "transcendentals")
+                  if k in cost_rec},
+            collectives=coll,
+        )
+        if verbose:
+            print(f"[{arch} × {shape} × {mesh_name}] OK  "
+                  f"lower {rec['lower_s']}s compile {rec['compile_s']}s")
+            print("  memory_analysis:", mem_rec)
+            print("  cost_analysis:  ", rec["cost"])
+            print("  collectives:    ",
+                  {k: f"{v['count']}x/{v['bytes']/1e9:.2f}GB"
+                   for k, v in coll.items()})
+    except Exception as e:          # noqa: BLE001 — record, don't crash sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc(limit=20)
+        if verbose:
+            print(f"[{arch} × {shape} × {mesh_name}] FAIL: {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES), default=None)
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES), default=None)
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the (pod=2, data=16, model=16) mesh")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch × shape) on this mesh")
+    ap.add_argument("--out", default=None,
+                    help="directory for per-combo JSON records")
+    args = ap.parse_args()
+
+    if args.all:
+        combos = [(a, s) for a in sorted(ARCHITECTURES)
+                  for s in INPUT_SHAPES]
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch, shape in combos:
+        rec = run_one(arch, shape, multi_pod=args.multi_pod)
+        n_ok += rec["ok"]
+        if args.out:
+            os.makedirs(args.out, exist_ok=True)
+            fn = f"{arch}__{shape}__{rec['mesh']}.json"
+            with open(os.path.join(args.out, fn), "w") as f:
+                json.dump(rec, f, indent=1)
+    print(f"\n{n_ok}/{len(combos)} combinations lowered+compiled OK")
+    raise SystemExit(0 if n_ok == len(combos) else 1)
+
+
+if __name__ == "__main__":
+    main()

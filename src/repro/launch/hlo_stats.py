@@ -1,0 +1,93 @@
+"""Post-optimization HLO statistics: collective-traffic extraction.
+
+``collective_bytes`` is NOT in ``compiled.cost_analysis()`` — we parse the
+compiled module text and sum the operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(the §Roofline methodology from the brief).
+
+Operand shapes are resolved in two steps: shapes printed inline inside the
+instruction's parentheses when present, otherwise a symbol table built from
+every instruction definition in the module.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    return sum(_shape_bytes(dt, dims) for dt, dims in _SHAPE_RE.findall(type_str))
+
+
+def collective_stats(hlo_text: str) -> Dict[str, dict]:
+    """Per-collective-kind {count, bytes} summed over the module.
+
+    Bytes are the *operand* sizes of each collective instruction.
+    """
+    # symbol table: instruction name -> result type bytes
+    sym: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, type_str, _op = m.groups()
+            sym[name] = _type_bytes(type_str)
+
+    stats: Dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op = m.groups()
+        kind = next((c for c in COLLECTIVE_OPS
+                     if op == c or op.startswith(c + ".")
+                     or op.startswith(c + "-start")), None)
+        if kind is None:
+            continue
+        # operand segment: inside the first balanced parens after the op name
+        start = line.index(op + "(") + len(op) + 1
+        depth, i = 1, start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = line[start:i - 1]
+        inline = _SHAPE_RE.findall(operands)
+        if inline:
+            nbytes = sum(_shape_bytes(dt, dims) for dt, dims in inline)
+        else:
+            nbytes = sum(sym.get(nm, 0)
+                         for nm in _OPERAND_RE.findall(operands))
+        stats[kind]["count"] += 1
+        stats[kind]["bytes"] += nbytes
+    return dict(stats)
+
+
+def total_collective_bytes(hlo_text: str) -> int:
+    return sum(v["bytes"] for v in collective_stats(hlo_text).values())

@@ -1,0 +1,211 @@
+"""Production mesh + parameter/activation sharding-spec derivation.
+
+``make_production_mesh`` builds the target TPU v5e mesh:
+
+  * single-pod:  (data=16, model=16)            — 256 chips
+  * multi-pod :  (pod=2, data=16, model=16)     — 512 chips
+
+Parameter specs are derived per-leaf with a deterministic heuristic on top
+of a name-based rule table (every model family in ``repro.models`` is
+covered by name; the heuristic is the safety net for new layers):
+
+  1. name table picks the *preferred* tensor-parallel dim (heads / ffn /
+     vocab / d_inner / lru width ...) -> "model" when divisible,
+  2. otherwise the largest remaining dim divisible by the model-axis size,
+  3. ZeRO/FSDP: the largest remaining dim divisible by the data-axis size
+     -> "data" (train AND serve: weight-gathered serving is what makes
+     grok-1-314b fit 16 GB HBM; see DESIGN.md §6),
+  4. stacked-layer leading dims (under "blocks"/"tail") are never sharded
+     (they are scanned over).
+
+KV-cache specs: batch dim over ("pod","data") when divisible, then the
+largest remaining dim over "model" (head_dim for GQA, latent rank for MLA,
+ssm heads for Mamba-2) — this is what bounds decode_32k cache memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Whatever devices exist, as a 1D 'data' mesh (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e) for the roofline terms
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+# name -> index of the preferred model-parallel dim (negative = from the end,
+# counted on the UNSTACKED shape).
+_PREFERRED_MODEL_DIM = {
+    # embeddings / head
+    "tok": 0,            # (V, d): shard vocab
+    "unembed": 1,        # (d, V): shard vocab
+    # attention
+    "wq": 1, "wk": 1, "wv": 1,      # (d, h, hd): shard heads
+    "wo": 0,                         # (h, hd, d): shard heads
+    "wq_b": 1,                       # (r, h, qk): shard heads
+    "wkv_b": 1,                      # (r, h, nope+v): shard heads
+    # dense MLP
+    "w_gate": -1, "w_up": -1,        # (d, ff) or (e, d, ff): shard ff
+    "w_down": -2,                    # (ff, d) or (e, ff, d): shard ff
+    # mamba-2
+    "w_z": -1, "w_x": -1,            # (d, di): shard d_inner
+    "out_proj": 0,                   # (di, d)
+    # rg-lru
+    "w_gate_branch": -1, "w_rec_branch": -1,   # (d, w)
+    "w_r": -1, "w_i": -1,                       # (w, w)
+    "w_out": 0,                                 # (w, d)
+}
+
+_STACKED_KEYS = ("blocks", "tail")
+
+
+def _path_keys(path) -> list:
+    return [str(getattr(p, "key", getattr(p, "name", p))) for p in path]
+
+
+def param_pspec(path, shape: Sequence[int], *, model_n: int, data_n: int,
+                fsdp: bool, pod: bool,
+                prefer: Optional[dict] = None) -> P:
+    keys = _path_keys(path)
+    name = keys[-1] if keys else ""
+    stacked = any(k in _STACKED_KEYS for k in keys)
+    start = 1 if stacked else 0
+    ndim = len(shape)
+    spec: list = [None] * ndim
+
+    def try_assign(dim: Optional[int], axis: str, n: int) -> bool:
+        if dim is None:
+            return False
+        d = dim + start if dim >= 0 else ndim + dim
+        if d < start or d >= ndim or spec[d] is not None:
+            return False
+        if shape[d] % n or shape[d] < n:
+            return False
+        spec[d] = axis
+        return True
+
+    # 1. preferred model dim by name (experiment overrides take precedence
+    #    — e.g. expert parallelism prefers the E dim of MoE weights)
+    table = dict(_PREFERRED_MODEL_DIM, **(prefer or {}))
+    ok = try_assign(table.get(name), "model", model_n)
+    # 2. heuristic fallback: largest unassigned dim divisible by model_n
+    if not ok and model_n > 1:
+        cand = sorted(range(start, ndim), key=lambda d: -shape[d])
+        for d in cand:
+            if spec[d] is None and shape[d] % model_n == 0 and shape[d] >= model_n:
+                spec[d] = "model"
+                break
+    # 3. FSDP over data
+    if fsdp and data_n > 1:
+        cand = sorted(range(start, ndim), key=lambda d: -shape[d])
+        for d in cand:
+            if spec[d] is None and shape[d] % data_n == 0 and shape[d] >= data_n:
+                spec[d] = "data"
+                break
+    return P(*spec)
+
+
+def param_pspecs(params_shape, *, mesh: Mesh, fsdp: bool = True,
+                 prefer: Optional[dict] = None):
+    """Pytree of PartitionSpec matching ``params_shape`` (from eval_shape)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    data_n = sizes.get("data", 1)
+    pod = "pod" in sizes
+
+    def one(path, leaf):
+        return param_pspec(path, leaf.shape, model_n=model_n, data_n=data_n,
+                           fsdp=fsdp, pod=pod, prefer=prefer)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def _batch_axes(mesh: Mesh, batch: int):
+    """Mesh axes to shard the global batch over (largest divisible prefix)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    axes = [a for a in ("pod", "data") if a in sizes]
+    total = int(np.prod([sizes[a] for a in axes])) if axes else 1
+    if axes and batch % total == 0 and batch >= total:
+        return tuple(axes)
+    if "data" in sizes and batch % sizes["data"] == 0 and batch >= sizes["data"]:
+        return ("data",)
+    return None
+
+
+def batch_pspecs(specs: dict, *, mesh: Mesh) -> dict:
+    """PartitionSpec tree for a dict of (B, ...) input arrays."""
+    out = {}
+    for k, v in specs.items():
+        axes = _batch_axes(mesh, v.shape[0])
+        spec = [axes] + [None] * (len(v.shape) - 1)
+        out[k] = P(*spec)
+    return out
+
+
+def cache_pspecs(cache_shape, *, mesh: Mesh, prefer: str = "trailing"):
+    """KV/state cache specs: dim0=layers (stacked), dim1=batch, then one dim
+    over "model".
+
+    prefer="trailing" (baseline): last divisible dim (head_dim / latent rank
+    / ssm state) — sharding the cache's time dim puts the decode scatter
+    across shards (involuntary full remat in the SPMD partitioner).
+
+    prefer="kv" (§Perf): the kv-head dim (index batch+2 on 4-D attention
+    caches), even when not divisible (GSPMD pads) — with grouped GQA decode
+    this keeps the whole attention contraction local per device.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    stacked_part, tail_part = cache_shape
+
+    def one(leaf, *, stacked: bool):
+        shape = leaf.shape
+        ndim = len(shape)
+        b_dim = 1 if stacked else 0
+        spec: list = [None] * ndim
+        axes = _batch_axes(mesh, shape[b_dim])
+        spec[b_dim] = axes
+        if model_n > 1:
+            kv_dim = b_dim + 2
+            if prefer == "kv" and ndim == b_dim + 4 and shape[kv_dim] > 1:
+                spec[kv_dim] = "model"
+                return P(*spec)
+            for d in reversed(range(b_dim + 1, ndim)):
+                if shape[d] % model_n == 0 and shape[d] >= model_n:
+                    spec[d] = "model"
+                    break
+        return P(*spec)
+
+    stacked_specs = jax.tree.map(lambda l: one(l, stacked=True), stacked_part)
+    tail_specs = jax.tree.map(lambda l: one(l, stacked=False), tail_part)
+    return (stacked_specs, tail_specs)
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

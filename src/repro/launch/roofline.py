@@ -1,0 +1,234 @@
+"""Roofline analysis from the compiled dry-run (deliverable (g)).
+
+XLA's ``cost_analysis`` counts a ``scan`` while-body ONCE (verified
+empirically: llama train flops ≈ head + one layer), so the full scanned
+dry-run cannot give exact FLOP/byte totals. Instead we lower *unrolled
+probes* at 1× and 2× the layer-pattern size and extrapolate linearly —
+every per-layer cost (flops, bytes, collective traffic) is exactly linear
+in depth, embedding/head/optimizer-fixed costs are the intercept:
+
+    per_unit = (C(2·base) - C(base)) / base
+    total    = C(base) - base·per_unit + num_layers·per_unit
+
+(base = hybrid block-pattern length, else 1; RecurrentGemma's 2 trailing
+rec layers are counted at the average-group rate — documented ~2% error.)
+
+Terms (TPU v5e constants in ``mesh.py``; all quantities below are
+per-device, which equals the global/chips normalization of the brief):
+
+    compute    = flops_per_device / 197e12
+    memory     = bytes_per_device / 819e9
+    collective = collective_operand_bytes_per_device / 50e9
+
+Usage:
+  python -m repro.launch.roofline --arch llama3.2-1b --shape train_4k --out results/roofline
+  python -m repro.launch.roofline --all --out results/roofline
+  python -m repro.launch.roofline --report results/roofline --dryrun results/dryrun
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import time
+
+from ..configs import ARCHITECTURES, INPUT_SHAPES, get_config, get_shape
+from ..models.cost import model_flops
+from . import hlo_stats
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh
+from .steps import lower_combo
+
+
+def _probe(arch: str, shape: str, mesh, L: int, *, extra_flags=None,
+           fsdp_override=None, rules_overrides=None, **kw) -> dict:
+    flags = {"use_scan": False}
+    if extra_flags:
+        flags.update(extra_flags)
+    lowered, _ = lower_combo(arch, shape, mesh,
+                             cfg_overrides={"num_layers": L},
+                             flag_overrides=flags,
+                             fsdp_override=fsdp_override,
+                             rules_overrides=rules_overrides, **kw)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    coll = hlo_stats.collective_stats(compiled.as_text())
+    mem = compiled.memory_analysis()
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": sum(v["bytes"] for v in coll.values()),
+        "coll": coll,
+        "arg_bytes": float(getattr(mem, "argument_size_in_bytes", 0) or 0),
+    }
+
+
+def probe_costs(arch: str, shape: str, *, multi_pod: bool = False,
+                extra_flags=None, fsdp_override=None,
+                rules_overrides=None, verbose=True,
+                mesh_shape=None, **kw) -> dict:
+    """Linear-extrapolated per-device costs for the full-depth model.
+
+    ``mesh_shape``: ((dims...), (axis names...)) overrides the production
+    mesh — used by §Perf experiments that re-shape the logical mesh
+    (e.g. the decode-optimized (data=32, model=8))."""
+    import jax
+    cfg = get_config(arch)
+    if mesh_shape is not None:
+        mesh = jax.make_mesh(*mesh_shape)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    base = len(cfg.hybrid.block_pattern) if cfg.hybrid is not None else 1
+    t0 = time.perf_counter()
+    c1 = _probe(arch, shape, mesh, base, extra_flags=extra_flags,
+                fsdp_override=fsdp_override, rules_overrides=rules_overrides,
+                **kw)
+    c2 = _probe(arch, shape, mesh, 2 * base, extra_flags=extra_flags,
+                fsdp_override=fsdp_override, rules_overrides=rules_overrides,
+                **kw)
+    dt = time.perf_counter() - t0
+
+    units = cfg.num_layers / base
+    out = {"arch": arch, "shape": shape,
+           "mesh": "pod2x16x16" if multi_pod else "pod16x16",
+           "probe_s": round(dt, 1)}
+    for key in ("flops", "bytes", "coll_bytes"):
+        per_unit = (c2[key] - c1[key]) / base
+        fixed = c1[key] - base * per_unit
+        out[key] = fixed + cfg.num_layers * per_unit
+        out[key + "_fixed"] = fixed
+        out[key + "_per_layer"] = per_unit
+    # per-kind collective extrapolation
+    kinds = set(c1["coll"]) | set(c2["coll"])
+    out["coll_kinds"] = {}
+    for k in sorted(kinds):
+        b1 = c1["coll"].get(k, {}).get("bytes", 0)
+        b2 = c2["coll"].get(k, {}).get("bytes", 0)
+        pu = (b2 - b1) / base
+        out["coll_kinds"][k] = b1 - base * pu + cfg.num_layers * pu
+    return out
+
+
+_HINTS = {
+    "compute": ("compute-bound: raise MXU efficiency — fuse small ops, "
+                "larger per-device tile of the dominant matmul, or shed "
+                "redundant (remat) FLOPs"),
+    "memory": ("HBM-bound: cut activation/weight traffic — fuse elementwise "
+               "chains (Pallas), reuse KV blocks in VMEM, or quantize "
+               "weights/cache"),
+    "collective": ("ICI-bound: reshard to shrink per-layer collectives — "
+                   "avoid weight all-gathers (no-FSDP serving), overlap "
+                   "collectives with compute, or move the axis the traffic "
+                   "crosses"),
+}
+
+
+def analytic_bytes(arch: str, shape_name: str, n_dev: int) -> float:
+    """Analytic per-device HBM traffic (weights + activations + KV), from
+    the cost model — the cross-check for the HLO 'bytes accessed' term,
+    which the CPU backend inflates (less fusion than TPU; bf16 scatters are
+    promoted to f32 copy chains). Train ≈ 3x forward traffic."""
+    from ..models.cost import step_costs
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    phase = {"train": "train", "prefill": "prefill",
+             "decode": "decode"}[shape.kind]
+    costs = step_costs(cfg, phase, shape.global_batch, shape.seq_len)
+    total = sum(c.weight_bytes + c.act_bytes for c in costs)
+    if shape.kind == "train":
+        total *= 3.0
+    return total / n_dev
+
+
+def terms_record(probe: dict, *, train: bool) -> dict:
+    """Roofline terms + MODEL_FLOPS cross-check for one probed combo."""
+    cfg = get_config(probe["arch"])
+    shape = get_shape(probe["shape"])
+    tokens = (shape.global_batch * shape.seq_len
+              if shape.kind in ("train", "prefill") else shape.global_batch)
+    mf = model_flops(cfg, tokens, train=shape.kind == "train")
+    n_dev = 512 if probe["mesh"] == "pod2x16x16" else 256
+    hlo_global = probe["flops"] * n_dev
+    compute = probe["flops"] / PEAK_FLOPS
+    memory = probe["bytes"] / HBM_BW
+    collective = probe["coll_bytes"] / ICI_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])[0]
+    total = max(compute, memory, collective)
+    return {
+        **probe,
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        "mfu_bound": (mf / n_dev / PEAK_FLOPS) / total if total else 0.0,
+        "analytic_memory_s": analytic_bytes(probe["arch"], probe["shape"],
+                                            n_dev) / HBM_BW,
+        "hint": _HINTS[dom],
+    }
+
+
+def fmt_seconds(s: float) -> str:
+    if s >= 1.0:
+        return f"{s:.2f}s"
+    if s >= 1e-3:
+        return f"{s * 1e3:.2f}ms"
+    return f"{s * 1e6:.1f}us"
+
+
+def render_table(records) -> str:
+    rows = ["| arch | shape | compute | memory | collective | bound | "
+            "useful FLOPs | roofline MFU |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(records, key=lambda r: (r["arch"], r["shape"])):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_seconds(r['compute_s'])} "
+            f"| {fmt_seconds(r['memory_s'])} | {fmt_seconds(r['collective_s'])} "
+            f"| **{r['dominant']}** | {r['useful_ratio'] * 100:.0f}% "
+            f"| {r['mfu_bound'] * 100:.0f}% |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES))
+    ap.add_argument("--shape", choices=sorted(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/roofline")
+    ap.add_argument("--report", metavar="DIR",
+                    help="render the markdown table from probe JSONs")
+    args = ap.parse_args()
+
+    if args.report:
+        recs = []
+        for fn in sorted(os.listdir(args.report)):
+            if fn.endswith(".json"):
+                with open(os.path.join(args.report, fn)) as f:
+                    recs.append(json.load(f))
+        print(render_table(recs))
+        return
+
+    combos = ([(a, s) for a in sorted(ARCHITECTURES) for s in INPUT_SHAPES]
+              if args.all else [(args.arch, args.shape)])
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in combos:
+        try:
+            p = probe_costs(arch, shape, multi_pod=args.multi_pod)
+            rec = terms_record(p, train=shape == "train_4k")
+            print(f"[{arch} × {shape}] compute {fmt_seconds(rec['compute_s'])} "
+                  f"memory {fmt_seconds(rec['memory_s'])} "
+                  f"collective {fmt_seconds(rec['collective_s'])} "
+                  f"-> {rec['dominant']} (useful {rec['useful_ratio']:.2f}, "
+                  f"probe {p['probe_s']}s)")
+        except Exception as e:    # noqa: BLE001
+            rec = {"arch": arch, "shape": shape, "error": f"{type(e).__name__}: {e}"}
+            print(f"[{arch} × {shape}] FAIL {rec['error']}")
+        fn = f"{arch}__{shape}__{rec.get('mesh', 'pod16x16')}.json"
+        with open(os.path.join(args.out, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

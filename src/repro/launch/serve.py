@@ -1,0 +1,94 @@
+"""Serving launcher.
+
+Two modes:
+  * ``--engine sim``  — discrete-event simulation on the NPU latency model
+    (any architecture/workload at any load, instantly),
+  * ``--engine jax``  — the real node-level JAX engine on a reduced model
+    (CPU-runnable end-to-end, generation-verified).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
+      --policy lazyb --rate 200 --engine sim
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from ..configs import ARCHITECTURES, get_config
+from ..core.policies import (CellularBatching, GraphBatching, LazyBatching,
+                             Oracle, Serial)
+from ..core.slack import OracleSlackPredictor, SlackPredictor
+from ..serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
+from ..serving.server import InferenceServer, SimExecutor
+from ..serving.traffic import Trace, bursty_trace, poisson_trace
+from ..serving.workload import PAPER_WORKLOADS, get_workload
+
+
+def build_policy(name: str, wl, perf, sla: float, max_batch: int,
+                 window: float):
+    if name == "serial":
+        return Serial()
+    if name == "graphb":
+        return GraphBatching(window=window, max_batch=max_batch)
+    if name == "cellular":
+        return CellularBatching(max_batch=max_batch)
+    if name == "lazyb":
+        return LazyBatching(SlackPredictor.build([wl], perf, sla),
+                            max_batch=max_batch)
+    if name == "oracle":
+        return Oracle(OracleSlackPredictor(sla, perf), max_batch=max_batch)
+    raise KeyError(name)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="transformer",
+                    help="paper workload or assigned architecture id")
+    ap.add_argument("--policy", default="lazyb",
+                    choices=["serial", "graphb", "cellular", "lazyb",
+                             "oracle"])
+    ap.add_argument("--engine", default="sim", choices=["sim", "jax"])
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--duration", type=float, default=1.0)
+    ap.add_argument("--sla", type=float, default=0.1)
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--window", type=float, default=0.025)
+    ap.add_argument("--bursty", action="store_true",
+                    help="MMPP bursty arrivals instead of Poisson")
+    ap.add_argument("--hw", default="paper", choices=["paper", "v5e"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.engine == "jax":
+        # delegate to the verified end-to-end driver
+        import runpy
+        import sys
+        sys.argv = ["serve_real_model.py", "--arch",
+                    args.arch if args.arch in ARCHITECTURES else "llama3.2-1b"]
+        runpy.run_path("examples/serve_real_model.py", run_name="__main__")
+        return
+
+    wl = get_workload(args.arch)
+    perf = NPUPerfModel(PAPER_NPU if args.hw == "paper" else TPU_V5E)
+    if args.bursty:
+        trace = bursty_trace(wl, args.rate * 0.3, args.rate * 2.0,
+                             switch_period=args.duration / 6,
+                             duration=args.duration, seed=args.seed)
+    else:
+        trace = poisson_trace(wl, args.rate, args.duration, seed=args.seed)
+    policy = build_policy(args.policy, wl, perf, args.sla, args.max_batch,
+                          args.window)
+    server = InferenceServer(policy, SimExecutor(perf))
+    stats = server.run(trace)
+    s = stats.summary(sla=args.sla)
+    print(f"{wl.name} @ {args.rate:g} r/s ({'bursty' if args.bursty else 'poisson'})"
+          f" policy={s['policy']}")
+    print(f"  completed {s['completed']}  avg {s['avg_latency_ms']:.2f}ms  "
+          f"p99 {s['p99_ms']:.2f}ms  thr {s['throughput_rps']:.0f} r/s  "
+          f"SLA viol {s['sla_violation_rate'] * 100:.1f}%  "
+          f"avg batch {server.log.avg_batch_size:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Per-(architecture × input-shape) step builders for the dry-run.
+
+One function — ``lower_combo`` — is the single entry point: it builds the
+model, derives shardings (``repro.launch.mesh``), installs the logical-axis
+rules, and returns the ``jax.stages.Lowered`` for the requested phase:
+
+  * ``train_4k``     -> ``train_step(state, batch)``          (AdamW update)
+  * ``prefill_32k``  -> ``prefill_step(params, batch)``       (logits + cache)
+  * ``decode_32k``   -> ``serve_step(params, cache, token, pos)`` (ONE token)
+  * ``long_500k``    -> ``serve_step`` with the sliding-window cache
+                        (attention archs) / constant state (SSM, hybrid)
+
+Everything is ShapeDtypeStruct-driven: no parameter or cache is ever
+allocated (the dry-run pattern from the brief).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import get_config, get_shape
+from ..configs.base import InputShape, ModelConfig
+from ..data.pipeline import make_batch_specs
+from ..models.model import Model, RuntimeFlags
+from ..sharding import make_rules, use_rules
+from ..training import OptimizerConfig, init_state, make_train_step
+from . import mesh as M
+
+
+def input_specs(arch: str, shape_name: str = "train_4k") -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of one phase."""
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    return make_batch_specs(cfg, shape)
+
+
+def make_flags(cfg: ModelConfig, shape: InputShape, *,
+               overrides: Optional[dict] = None) -> RuntimeFlags:
+    kw = dict(use_scan=True)
+    if shape.kind == "train":
+        kw["remat"] = True
+    if shape.name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        # sub-quadratic long-context variant: ring-buffer sliding window
+        kw["window"] = cfg.long_context_window
+    if cfg.moe is not None and shape.kind == "decode":
+        kw["moe_group_rows"] = max(1, shape.global_batch // 32)
+    if overrides:
+        kw.update(overrides)
+    return RuntimeFlags(**kw)
+
+
+def serve_fsdp(cfg: ModelConfig, model_n: int, *,
+               budget_bytes: float = 8e9) -> bool:
+    """Weight-gather (ZeRO-inference) serving only when pure tensor
+    parallelism cannot fit the parameters (grok-1-314b)."""
+    return cfg.param_count() * 2 / model_n > budget_bytes
+
+
+@dataclass
+class Combo:
+    """Everything needed to lower one (arch × shape × mesh) combination."""
+    cfg: ModelConfig
+    shape: InputShape
+    mesh: Mesh
+    model: Model
+    fn: object                 # the step callable
+    args: tuple                # ShapeDtypeStruct pytrees
+    in_shardings: tuple
+    donate: tuple = ()
+
+
+def build_combo(arch: str, shape_name: str, mesh: Mesh, *,
+                flag_overrides: Optional[dict] = None,
+                fsdp_override: Optional[bool] = None,
+                rules_overrides: Optional[dict] = None,
+                cfg_overrides: Optional[dict] = None,
+                cache_prefer: str = "trailing",
+                param_prefer: Optional[dict] = None) -> Combo:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = get_shape(shape_name)
+    flags = make_flags(cfg, shape, overrides=flag_overrides)
+    model = Model(cfg, flags)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_n = sizes.get("model", 1)
+    key = jax.random.key(0)
+    batch = make_batch_specs(cfg, shape)
+    batch_sh = M.named(mesh, M.batch_pspecs(batch, mesh=mesh))
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig()
+        state_shape = jax.eval_shape(lambda: init_state(model, key))
+        state_spec = M.param_pspecs(state_shape, mesh=mesh, fsdp=True,
+                                    prefer=param_prefer)
+        state_sh = M.named(mesh, state_spec)
+        fn = make_train_step(model, opt_cfg)
+        return Combo(cfg, shape, mesh, model, fn,
+                     (state_shape, batch), (state_sh, batch_sh))
+
+    fsdp = serve_fsdp(cfg, model_n) if fsdp_override is None else fsdp_override
+    params_shape = jax.eval_shape(model.init, key)
+    params_sh = M.named(mesh, M.param_pspecs(params_shape, mesh=mesh,
+                                             fsdp=fsdp, prefer=param_prefer))
+
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            return model.prefill(params, batch["tokens"],
+                                 prefix=batch.get("prefix"),
+                                 max_len=shape.seq_len)
+
+        return Combo(cfg, shape, mesh, model, prefill_step,
+                     (params_shape, batch), (params_sh, batch_sh))
+
+    # decode: ONE new token against a seq_len-deep cache
+    B = shape.global_batch
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(B, shape.seq_len))
+    cache_sh = M.named(mesh, M.cache_pspecs(cache_shape, mesh=mesh,
+                                            prefer=cache_prefer))
+
+    def serve_step(params, cache, token, pos):
+        return model.decode_step(params, cache, token, pos)
+
+    tok = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32)
+    tok_sh = NamedSharding(mesh, M.batch_pspecs({"t": tok}, mesh=mesh)["t"])
+    return Combo(cfg, shape, mesh, model, serve_step,
+                 (params_shape, cache_shape, tok, pos),
+                 (params_sh, cache_sh, tok_sh, tok_sh))
+
+
+def lower_combo(arch: str, shape_name: str, mesh: Mesh, *,
+                donate_cache: bool = False, **kw):
+    """Lower (but do not compile) one combination on ``mesh``.
+
+    ``donate_cache``: donate the KV-cache argument of decode steps (the
+    production serving behavior — the cache updates in place instead of
+    being copied into a fresh output buffer).
+    """
+    combo = build_combo(arch, shape_name, mesh, **kw)
+    rules = make_rules(mesh, "train" if combo.shape.kind == "train" else "serve")
+    rk = kw.get("rules_overrides")
+    if rk:
+        rules.mapping.update(rk)
+    donate = (1,) if (donate_cache and combo.shape.kind == "decode") else ()
+    with mesh, use_rules(rules):
+        jitted = jax.jit(combo.fn, in_shardings=combo.in_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*combo.args)
+    return lowered, combo

@@ -1,0 +1,65 @@
+"""Training launcher.
+
+On real hardware this runs the sharded train step on the production mesh;
+in this container it runs reduced configs on CPU end-to-end (the same code
+path — the mesh is just smaller).
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+      --reduced --steps 50 --batch 8 --seq 256
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHITECTURES, get_config
+from ..data.pipeline import DataConfig, TokenPipeline
+from ..models.model import Model, RuntimeFlags
+from ..sharding import make_rules, use_rules
+from ..training import OptimizerConfig, train_loop
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=sorted(ARCHITECTURES),
+                    default="llama3.2-1b")
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (smoke) variant of the family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    model = Model(cfg, RuntimeFlags(dtype=jnp.float32, remat=False))
+    opt_cfg = OptimizerConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                              total_steps=args.steps)
+    data = TokenPipeline(DataConfig(vocab_size=cfg.vocab_size,
+                                    seq_len=args.seq,
+                                    batch_size=args.batch))
+    mesh = make_host_mesh()
+    rules = make_rules(mesh, "train")
+    print(f"training {cfg.name} ({'reduced' if args.reduced else 'full'}): "
+          f"{cfg.param_count() / 1e6:.1f}M params, "
+          f"{args.steps} steps of {args.batch}x{args.seq}")
+    with mesh, use_rules(rules):
+        state, log = train_loop(model, opt_cfg, iter(data), args.steps,
+                                checkpoint_path=args.checkpoint,
+                                log_every=args.log_every)
+    first, last = log.losses[0], log.losses[-1]
+    print(f"loss {first:.4f} -> {last:.4f} "
+          f"({(first - last) / first * 100:.1f}% reduction) "
+          f"in {log.wall[-1]:.1f}s")
+    assert last < first, "training did not reduce the loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from .model import Model, RuntimeFlags
+from .cost import NodeCost, block_cost, step_costs, model_flops
+
+__all__ = ["Model", "RuntimeFlags", "NodeCost", "block_cost", "step_costs",
+           "model_flops"]

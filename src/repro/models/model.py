@@ -1,0 +1,470 @@
+"""Architecture-generic decoder model.
+
+A single ``Model`` class consumes a ``ModelConfig`` and provides:
+
+  * ``init(key)``            — parameter pytree (works under ``jax.eval_shape``
+                               for the dry-run: no device allocation),
+  * ``loss(params, batch)``  — training loss (+ MoE aux),
+  * ``prefill(params, tokens[, prefix])`` — full-context forward, returns
+                               (last-token logits, decode cache),
+  * ``decode_step(params, cache, token, pos)`` — ONE token with ragged
+                               per-row positions (lazily merged batches),
+  * ``init_cache(batch, max_len)``,
+  * per-layer block application (``num_blocks`` / ``apply_block_*``) for the
+    LazyBatching node-level engine.
+
+Homogeneous layer stacks are ``lax.scan``-ned over stacked parameters
+(compact HLO — one while body regardless of depth). ``RuntimeFlags.use_scan
+= False`` unrolls the python loop instead; the roofline probe lowers 1- and
+2-layer unrolled variants to recover exact per-layer costs (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import shard
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import ssm as SSM
+
+
+@dataclass(frozen=True)
+class RuntimeFlags:
+    dtype: object = jnp.bfloat16
+    use_scan: bool = True
+    scan_unroll: int = 1
+    remat: bool = False
+    attn_chunk: int = 2048
+    moe_group_rows: int = 1
+    # sliding-window variant for long-context decode on attention archs
+    window: Optional[int] = None
+    # §Perf beyond-paper optimizations (default off = paper-faithful baseline)
+    grouped_decode: bool = False     # GQA decode without repeat_kv
+    mla_absorbed: bool = False       # MLA prefill in the latent space
+    kv_quant: bool = False           # int8 KV cache (GQA decode)
+    pallas_decode: bool = False      # ragged-attention Pallas kernel
+    # remat policy: "full" recomputes everything; "dots" saves matmul
+    # outputs (jax.checkpoint_policies.checkpoint_dots) — trades saved-
+    # activation memory for ~25% less recompute FLOPs
+    remat_policy: str = "full"
+
+
+def _stack(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _index(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, flags: RuntimeFlags = RuntimeFlags()):
+        self.cfg = cfg
+        self.flags = flags
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            self.n_groups, self.n_tail = divmod(cfg.num_layers, len(pat))
+        else:
+            self.n_groups, self.n_tail = cfg.num_layers, 0
+
+    # ------------------------------------------------------------------
+    # Block kinds
+    # ------------------------------------------------------------------
+    @property
+    def block_kind(self) -> str:
+        c = self.cfg
+        if c.family == "ssm":
+            return "ssm"
+        if c.moe is not None:
+            return "moe"
+        if c.attention == "mla":
+            return "mla"
+        return "dense"
+
+    def _init_block(self, key, kind: str) -> dict:
+        cfg, dtype = self.cfg, self.flags.dtype
+        k1, k2 = jax.random.split(key)
+        d = cfg.d_model
+        if kind == "ssm":
+            return {"ln1": L.init_rmsnorm(d), "ssm": SSM.init_ssm(k1, cfg, dtype)}
+        if kind == "rec":
+            return {"ln1": L.init_rmsnorm(d), "rec": RG.init_rglru_block(k1, cfg, dtype),
+                    "ln2": L.init_rmsnorm(d), "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype)}
+        if kind == "mla":
+            return {"ln1": L.init_rmsnorm(d), "attn": L.init_mla(k1, cfg, dtype),
+                    "ln2": L.init_rmsnorm(d), "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype)}
+        if kind == "moe":
+            return {"ln1": L.init_rmsnorm(d), "attn": L.init_attention(k1, cfg, dtype),
+                    "ln2": L.init_rmsnorm(d), "moe": MOE.init_moe(k2, cfg, dtype)}
+        # dense (also the attention block of hybrids)
+        return {"ln1": L.init_rmsnorm(d), "attn": L.init_attention(k1, cfg, dtype),
+                "ln2": L.init_rmsnorm(d), "mlp": L.init_mlp(k2, d, cfg.d_ff, dtype)}
+
+    # ------------------------------------------------------------------
+    # Parameters
+    # ------------------------------------------------------------------
+    def init(self, key) -> dict:
+        cfg, dtype = self.cfg, self.flags.dtype
+        k_emb, k_blocks, k_head, k_tail = jax.random.split(key, 4)
+        d = cfg.d_model
+        params = {
+            "embed": {"tok": (jax.random.normal(k_emb, (cfg.vocab_size, d))
+                              * (1.0 / math.sqrt(d))).astype(dtype)},
+            "final_norm": L.init_rmsnorm(d),
+        }
+        if not cfg.tie_embeddings:
+            params["unembed"] = (jax.random.normal(k_head, (d, cfg.vocab_size))
+                                 * (1.0 / math.sqrt(d))).astype(dtype)
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            gkeys = jax.random.split(k_blocks, self.n_groups)
+            groups = []
+            for gk in gkeys:
+                bkeys = jax.random.split(gk, len(pat))
+                groups.append({f"b{i}_{kind}": self._init_block(bk, kind)
+                               for i, (kind, bk) in enumerate(zip(pat, bkeys))})
+            params["blocks"] = _stack(groups)
+            if self.n_tail:
+                tkeys = jax.random.split(k_tail, self.n_tail)
+                params["tail"] = _stack(
+                    [self._init_block(tk, pat[i % len(pat)])
+                     for i, tk in enumerate(tkeys)])
+        else:
+            bkeys = jax.random.split(k_blocks, cfg.num_layers)
+            params["blocks"] = _stack(
+                [self._init_block(bk, self.block_kind) for bk in bkeys])
+        return params
+
+    # ------------------------------------------------------------------
+    # Single-block application (dense sequence)
+    # ------------------------------------------------------------------
+    def apply_block_dense(self, bp: dict, x, kind: str, *, return_cache: bool,
+                          window=None, positions=None):
+        cfg, f = self.cfg, self.flags
+        cache = None
+        if kind == "ssm":
+            h, cache = SSM.apply_ssm_dense(
+                bp["ssm"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg)
+            x = x + h
+        elif kind == "rec":
+            h, cache = RG.apply_rglru_dense(
+                bp["rec"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg)
+            x = x + h
+            x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        elif kind == "mla":
+            h, cache = L.apply_mla_dense(
+                bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg,
+                chunk=f.attn_chunk, positions=positions, window=window,
+                absorbed=f.mla_absorbed)
+            x = x + h
+            x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        else:
+            h, kv = L.apply_attention_dense(
+                bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cfg,
+                window=window, chunk=f.attn_chunk, positions=positions)
+            cache = {"k": kv[0], "v": kv[1]}
+            x = x + h
+            if "moe" in bp:
+                h, aux = MOE.apply_moe(bp["moe"],
+                                       L.rms_norm(x, bp["ln2"], cfg.norm_eps),
+                                       cfg, group_rows=f.moe_group_rows)
+                x = x + h
+                cache = (cache, aux)
+            else:
+                x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        if not return_cache and not (isinstance(cache, tuple)):
+            cache = None
+        return x, cache
+
+    def apply_block_decode(self, bp: dict, x, cache, pos, kind: str, *, window=None):
+        cfg, f = self.cfg, self.flags
+        if kind == "ssm":
+            h, cache = SSM.apply_ssm_decode(
+                bp["ssm"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, cfg)
+            return x + h, cache
+        if kind == "rec":
+            h, cache = RG.apply_rglru_decode(
+                bp["rec"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, cfg)
+            x = x + h
+            x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+            return x, cache
+        if kind == "mla":
+            h, cache = L.apply_mla_decode(
+                bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos,
+                cfg, window=window)
+            x = x + h
+            x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+            return x, cache
+        h, cache = L.apply_attention_decode(
+            bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos, cfg,
+            window=window, grouped=f.grouped_decode,
+            use_pallas=f.pallas_decode)
+        x = x + h
+        if "moe" in bp:
+            y, _aux = MOE.apply_moe(bp["moe"],
+                                    L.rms_norm(x, bp["ln2"], cfg.norm_eps)[:, None, :],
+                                    cfg, group_rows=f.moe_group_rows)
+            x = x + y[:, 0, :]
+        else:
+            x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
+        return x, cache
+
+    # ------------------------------------------------------------------
+    # Stacked execution
+    # ------------------------------------------------------------------
+    def _block_kinds_and_windows(self, decode_window):
+        """Per-pattern-position (kind, window) for hybrid; scalar otherwise."""
+        cfg = self.cfg
+        if cfg.hybrid is None:
+            return self.block_kind, decode_window
+        out = []
+        for kind in cfg.hybrid.block_pattern:
+            out.append((kind if kind == "rec" else "dense",
+                        cfg.hybrid.local_window if kind == "attn" else None))
+        return out, None
+
+    def _run_dense(self, params, x, *, return_cache: bool, window=None,
+                   positions=None):
+        cfg, f = self.cfg, self.flags
+
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            kinds = [("rec", None) if k == "rec"
+                     else ("dense", cfg.hybrid.local_window) for k in pat]
+
+            def group_body(x, gp):
+                caches = {}
+                for i, (kind, win) in enumerate(kinds):
+                    key = f"b{i}_{pat[i]}"
+                    x, c = self.apply_block_dense(gp[key], x, kind,
+                                                  return_cache=return_cache,
+                                                  window=win, positions=positions)
+                    caches[key] = c
+                return x, caches
+
+            x, caches = self._scan_blocks(group_body, x, params["blocks"])
+            tail_caches = []
+            if self.n_tail:
+                for i in range(self.n_tail):
+                    kind, win = kinds[i % len(kinds)]
+                    bp = _index(params["tail"], i)
+                    x, c = self.apply_block_dense(bp, x, kind,
+                                                  return_cache=return_cache,
+                                                  window=win, positions=positions)
+                    tail_caches.append(c)
+            return x, (caches, tail_caches), jnp.float32(0.0)
+
+        kind = self.block_kind
+
+        def body(x, bp):
+            x, cache = self.apply_block_dense(bp, x, kind,
+                                              return_cache=return_cache,
+                                              window=window, positions=positions)
+            aux = jnp.float32(0.0)
+            if isinstance(cache, tuple):      # moe: (kv_cache, aux)
+                cache, aux = cache
+                if not return_cache:
+                    cache = None
+            return x, (cache, aux)
+
+        x, (caches, auxs) = self._scan_blocks(body, x, params["blocks"])
+        aux = jnp.sum(auxs) if auxs is not None else jnp.float32(0.0)
+        return x, (caches, []), aux
+
+    def _remat(self, body):
+        if self.flags.remat_policy == "dots":
+            return jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        return jax.checkpoint(body)
+
+    def _scan_blocks(self, body, x, blocks):
+        f = self.flags
+        if f.use_scan:
+            fn = self._remat(body) if f.remat else body
+            return jax.lax.scan(fn, x, blocks, unroll=f.scan_unroll)
+        fn = self._remat(body) if f.remat else body
+        n = jax.tree.leaves(blocks)[0].shape[0]
+        ys = []
+        for i in range(n):
+            x, y = fn(x, _index(blocks, i))
+            ys.append(y)
+        stacked = jax.tree.map(lambda *v: jnp.stack(v), *ys) if ys else None
+        return x, stacked
+
+    # ------------------------------------------------------------------
+    # Embedding / head
+    # ------------------------------------------------------------------
+    def embed(self, params, tokens):
+        emb = jnp.take(params["embed"]["tok"], tokens, axis=0)
+        return emb.astype(self.flags.dtype)
+
+    def unembed(self, params, x):
+        """x: (..., d) -> logits (..., V) sharded over vocab."""
+        cfg = self.cfg
+        if cfg.tie_embeddings:
+            table = params["embed"]["tok"]                  # (V, d)
+            table = shard(table, "vocab", None)             # reshard for head
+            return jnp.einsum("...d,vd->...v", x, table)
+        logits = jnp.einsum("...d,dv->...v", x, params["unembed"])
+        if logits.ndim == 3:
+            logits = shard(logits, "batch", "seq", "vocab")
+        return logits
+
+    # ------------------------------------------------------------------
+    # Public steps
+    # ------------------------------------------------------------------
+    def loss(self, params, batch) -> tuple:
+        """batch: {"tokens": (B,S), "targets": (B,S), ["prefix": (B,P,d)]}."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self.embed(params, tokens)
+        prefix = batch.get("prefix")
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        x = shard(x, "batch", "act_seq", "embed")
+        S_total = x.shape[1]
+        positions = jnp.arange(S_total)[None, :]
+        x, _, aux = self._run_dense(params, x, return_cache=False,
+                                    positions=positions)
+        if prefix is not None:
+            x = x[:, prefix.shape[1]:, :]
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x).astype(jnp.float32)
+        targets = batch["targets"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        tgt = jnp.sum(jnp.where(iota == targets[..., None], logits, 0.0), axis=-1)
+        ce = jnp.mean(lse - tgt)
+        return ce + 0.01 * aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, tokens, prefix=None, max_len: Optional[int] = None):
+        """Returns (last-token logits (B, V), cache)."""
+        cfg, f = self.cfg, self.flags
+        x = self.embed(params, tokens)
+        if prefix is not None:
+            x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+        x = shard(x, "batch", "act_seq", "embed")
+        S = x.shape[1]
+        positions = jnp.arange(S)[None, :]
+        x, caches, _ = self._run_dense(params, x, return_cache=True,
+                                       window=f.window, positions=positions)
+        x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x)
+        return logits, caches
+
+    def decode_step(self, params, cache, token, pos):
+        """token: (B,) int32; pos: (B,) int32 ragged positions.
+
+        Returns (logits (B, V), new_cache).
+        """
+        cfg, f = self.cfg, self.flags
+        x = self.embed(params, token)
+        x = shard(x, "batch", "embed")
+
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            kinds = [("rec", None) if k == "rec"
+                     else ("dense", cfg.hybrid.local_window) for k in pat]
+
+            def group_body(x, blk_cache):
+                gp, gc = blk_cache
+                new_c = {}
+                for i, (kind, win) in enumerate(kinds):
+                    key = f"b{i}_{pat[i]}"
+                    x, c = self.apply_block_decode(gp[key], x, gc[key], pos,
+                                                   kind, window=win)
+                    new_c[key] = c
+                return x, new_c
+
+            group_caches, tail_caches = cache
+            if self.flags.use_scan:
+                x, new_caches = jax.lax.scan(group_body, x,
+                                             (params["blocks"], group_caches),
+                                             unroll=f.scan_unroll)
+            else:
+                n = self.n_groups
+                ys = []
+                for i in range(n):
+                    x, y = group_body(x, (_index(params["blocks"], i),
+                                          _index(group_caches, i)))
+                    ys.append(y)
+                new_caches = jax.tree.map(lambda *v: jnp.stack(v), *ys)
+            new_tail = []
+            for i in range(self.n_tail):
+                kind, win = kinds[i % len(kinds)]
+                x, c = self.apply_block_decode(_index(params["tail"], i), x,
+                                               tail_caches[i], pos, kind,
+                                               window=win)
+                new_tail.append(c)
+            new_cache = (new_caches, new_tail)
+        else:
+            kind = self.block_kind
+            window = f.window
+
+            def body(x, blk_cache):
+                bp, c = blk_cache
+                x, nc = self.apply_block_decode(bp, x, c, pos, kind,
+                                                window=window)
+                return x, nc
+
+            group_caches, _tail = cache
+            if self.flags.use_scan:
+                x, new_caches = jax.lax.scan(body, x,
+                                             (params["blocks"], group_caches),
+                                             unroll=f.scan_unroll)
+            else:
+                n = self.cfg.num_layers
+                ys = []
+                for i in range(n):
+                    x, y = body(x, (_index(params["blocks"], i),
+                                    _index(group_caches, i)))
+                    ys.append(y)
+                new_caches = jax.tree.map(lambda *v: jnp.stack(v), *ys)
+            new_cache = (new_caches, [])
+
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = self.unembed(params, x)
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # Cache construction
+    # ------------------------------------------------------------------
+    def _init_layer_cache(self, kind: str, batch: int, max_len: int, window):
+        cfg, dtype = self.cfg, self.flags.dtype
+        if kind == "ssm":
+            return SSM.init_ssm_cache(cfg, batch, dtype)
+        if kind == "rec":
+            return RG.init_rglru_cache(cfg, batch, dtype)
+        if kind == "mla":
+            return L.init_mla_cache(cfg, batch, max_len, dtype, window=window)
+        return L.init_attention_cache(cfg, batch, max_len, dtype,
+                                      window=window,
+                                      quant=self.flags.kv_quant)
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg, f = self.cfg, self.flags
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            kinds = [("rec", None) if k == "rec"
+                     else ("dense", cfg.hybrid.local_window) for k in pat]
+            one = {f"b{i}_{pat[i]}": self._init_layer_cache(kind, batch, max_len, win)
+                   for i, (kind, win) in enumerate(kinds)}
+            groups = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_groups, *x.shape)), one)
+            tail = [self._init_layer_cache(kinds[i % len(kinds)][0], batch,
+                                           max_len, kinds[i % len(kinds)][1])
+                    for i in range(self.n_tail)]
+            return (groups, tail)
+        kind = self.block_kind
+        one = self._init_layer_cache(kind, batch, max_len, f.window)
+        caches = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.num_layers, *x.shape)), one)
+        return (caches, [])

@@ -1,0 +1,101 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrence: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+with a_t = exp(-c * softplus(Lambda) * r_t), r_t/i_t sigmoid gates,
+c = 8. The full-sequence path uses ``jax.lax.associative_scan`` (log-depth;
+TPU-friendly, exactly counted by cost analysis — DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+
+_C = 8.0
+
+
+def init_rglru_block(key, cfg, dtype) -> dict:
+    h = cfg.hybrid
+    d = cfg.d_model
+    w = h.lru_width or d
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    sw = 1.0 / math.sqrt(w)
+    # a initialised so that a^c in [0.9, 0.999]
+    a_init = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(a_init) / _C))   # inverse softplus
+    return {
+        "w_gate_branch": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),
+        "w_rec_branch": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(ks[2], (h.conv_width, w)) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": (jax.random.normal(ks[3], (w, w)) * sw).astype(dtype),
+        "w_i": (jax.random.normal(ks[5], (w, w)) * sw).astype(dtype),
+        "lambda": lam,
+        "w_out": (jax.random.normal(ks[6], (w, d)) * sw).astype(dtype),
+    }
+
+
+def _gates(p, x):
+    """x: (..., w) conv output -> (log_a, gated_input) in f32."""
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a2 = jnp.exp(2 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1 - a2, 1e-6)) * i * x.astype(jnp.float32)
+    return log_a, gated
+
+
+def _causal_conv(x, w, b):
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return out + b
+
+
+def apply_rglru_dense(p: dict, x_in: jax.Array, cfg):
+    """Full-sequence recurrent block. x_in: (B, S, d) -> (y, cache)."""
+    gate = jax.nn.gelu(x_in @ p["w_gate_branch"])
+    rec = x_in @ p["w_rec_branch"]
+    rec = _causal_conv(rec, p["conv_w"], p["conv_b"])
+    rec = shard(rec, "batch", "seq", "lru")
+    log_a, gated = _gates(p, rec)
+
+    def combine(a, b):
+        la, ha = a
+        lb, hb = b
+        return la + lb, ha * jnp.exp(lb) + hb
+
+    _, h = jax.lax.associative_scan(combine, (log_a, gated), axis=1)
+    y = (h.astype(x_in.dtype) * gate) @ p["w_out"]
+    W = p["conv_w"].shape[0]
+    conv_cache = (x_in @ p["w_rec_branch"])[:, -(W - 1):, :]
+    cache = {"state": h[:, -1], "conv": conv_cache}
+    return shard(y, "batch", "act_seq", "embed"), cache
+
+
+def apply_rglru_decode(p: dict, x_in: jax.Array, cache: dict, cfg):
+    """Single-step update. x_in: (B, d)."""
+    gate = jax.nn.gelu(x_in @ p["w_gate_branch"])
+    rec_new = x_in @ p["w_rec_branch"]
+    conv_in = jnp.concatenate([cache["conv"], rec_new[:, None]], axis=1)
+    rec = jnp.einsum("bwc,wc->bc", conv_in, p["conv_w"]) + p["conv_b"]
+    log_a, gated = _gates(p, rec)
+    h = cache["state"] * jnp.exp(log_a) + gated
+    y = (h.astype(x_in.dtype) * gate) @ p["w_out"]
+    new_conv = jnp.concatenate([cache["conv"][:, 1:], rec_new[:, None]], axis=1)
+    return y, {"state": h, "conv": new_conv}
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    h = cfg.hybrid
+    w = h.lru_width or cfg.d_model
+    return {
+        "state": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, h.conv_width - 1, w), dtype),
+    }

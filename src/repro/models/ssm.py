@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD — state-space duality) mixer.
+
+Chunked SSD algorithm (arXiv:2405.21060 §6): within-chunk quadratic
+("attention-like") term + across-chunk linear recurrence. The across-chunk
+recurrence is a first-order linear scan computed with
+``jax.lax.associative_scan`` — log-depth, fully unrolled in HLO so
+(a) cost analysis counts it exactly and (b) no sequential while-loop on the
+TPU critical path (hardware adaptation: the original CUDA kernel uses a
+sequential inter-chunk pass; on TPU the log-depth scan maps to large
+batched matmuls).
+
+Projections are stored as separate parameters (w_z / w_x / w_bc / w_dt)
+rather than one fused in_proj so each can carry its own partition spec
+without split boundaries crossing shards; XLA fuses the matmuls anyway.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import shard
+from .layers import init_rmsnorm, rms_norm
+
+
+def init_ssm(key, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    gn = 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 8)
+    scale = 1.0 / math.sqrt(d)
+    dt = jnp.exp(jax.random.uniform(ks[5], (nh,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "w_z": (jax.random.normal(ks[0], (d, di)) * scale).astype(dtype),
+        "w_x": (jax.random.normal(ks[1], (d, di)) * scale).astype(dtype),
+        "w_bc": (jax.random.normal(ks[2], (d, gn)) * scale).astype(dtype),
+        "w_dt": (jax.random.normal(ks[3], (d, nh)) * scale).astype(dtype),
+        "conv_x": (jax.random.normal(ks[4], (s.conv_width, di)) * 0.2).astype(dtype),
+        "conv_bc": (jax.random.normal(ks[6], (s.conv_width, gn)) * 0.2).astype(dtype),
+        "conv_bias_x": jnp.zeros((di,), dtype),
+        "conv_bias_bc": jnp.zeros((gn,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(dt)),          # inverse softplus
+        "norm": init_rmsnorm(di),
+        "out_proj": (jax.random.normal(ks[7], (di, d)) * (1 / math.sqrt(di))).astype(dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv along the sequence axis.
+
+    x: (B, S, C); w: (W, C). Implemented as a sum of shifted copies
+    (width <= 4), which XLA fuses — no conv primitive needed.
+    """
+    W = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, W):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i]
+        out = out + shifted * w[W - 1 - i]
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(x, dt, A, B_ssm, C_ssm, chunk: int):
+    """SSD forward over a full sequence.
+
+    x: (B, S, nh, hd); dt: (B, S, nh) (post-softplus);
+    A: (nh,) negative reals; B_ssm, C_ssm: (B, S, N) (n_groups == 1).
+    Returns y: (B, S, nh, hd) and the final state (B, nh, hd, N).
+    """
+    Bb, S, nh, hd = x.shape
+    N = B_ssm.shape[-1]
+    nc = S // chunk
+    xc = x.reshape(Bb, nc, chunk, nh, hd)
+    dtc = dt.reshape(Bb, nc, chunk, nh)
+    Bc = B_ssm.reshape(Bb, nc, chunk, N)
+    Cc = C_ssm.reshape(Bb, nc, chunk, N)
+
+    dA = dtc * A[None, None, None, :]                     # (B,nc,cs,nh), <= 0
+    cum = jnp.cumsum(dA, axis=2)                          # within-chunk cumsum
+    total = cum[:, :, -1]                                 # (B,nc,nh)
+
+    # ---- intra-chunk (quadratic) term: L[i,j] = exp(cum_i - cum_j), j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,i,j,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B,nc,i,j)
+    w = scores[..., None] * L * dtc[:, :, None, :, :]     # weight on x_j
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w.astype(x.dtype), xc)
+
+    # ---- chunk summary states: S_c = sum_j exp(total - cum_j) dt_j x_j B_j^T
+    decay_to_end = jnp.exp(total[:, :, None, :] - cum)    # (B,nc,cs,nh)
+    xw = xc * (decay_to_end * dtc)[..., None]
+    states = jnp.einsum("bcjhp,bcjn->bchpn", xw, Bc.astype(x.dtype))
+
+    # ---- inter-chunk linear recurrence via associative scan
+    decay = jnp.exp(total)                                # (B,nc,nh)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sa * db[..., None, None] + sb
+
+    dec_s, st_s = jax.lax.associative_scan(
+        combine, (decay.astype(jnp.float32), states.astype(jnp.float32)), axis=1)
+    # state *entering* chunk c = scanned state of chunk c-1
+    h_prev = jnp.pad(st_s[:, :-1], ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))
+    # decay from chunk start to position i: exp(cum_i)
+    Ci = Cc[:, :, :, None, :] * jnp.exp(cum)[..., None]   # (B,nc,cs,nh,N)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ci.astype(jnp.float32),
+                         h_prev).astype(x.dtype)
+
+    y = (y_intra + y_inter).reshape(Bb, S, nh, hd)
+    final_state = st_s[:, -1]                             # (B,nh,hd,N)
+    return y, final_state
+
+
+def apply_ssm_dense(p: dict, x_in: jax.Array, cfg, *, chunk: Optional[int] = None):
+    """Full-sequence Mamba-2 mixer. x_in: (B, S, d) -> (y, cache)."""
+    s = cfg.ssm
+    B, S, d = x_in.shape
+    chunk = chunk or s.chunk_size
+    while S % chunk:
+        chunk //= 2
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    N = s.d_state
+
+    z = x_in @ p["w_z"]
+    x_raw = x_in @ p["w_x"]
+    bc_raw = x_in @ p["w_bc"]
+    dt = x_in @ p["w_dt"]
+    xs = _causal_conv(x_raw, p["conv_x"], p["conv_bias_x"])
+    bc = _causal_conv(bc_raw, p["conv_bc"], p["conv_bias_bc"])
+    xs = shard(xs.reshape(B, S, nh, s.head_dim), "batch", "seq", "ssm_heads", None)
+    Bs, Cs = jnp.split(bc, 2, axis=-1)                    # (B,S,N) each (g==1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    dtv = shard(dtv, "batch", "seq", "ssm_heads")
+    A = -jnp.exp(p["A_log"])
+
+    y, final_state = ssd_chunked(xs, dtv, A, Bs, Cs, chunk)
+    y = y + xs * p["D"][None, None, :, None].astype(x_in.dtype)
+    y = y.reshape(B, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+
+    W = s.conv_width
+    conv_cache = jnp.concatenate([x_raw, bc_raw], axis=-1)[:, -(W - 1):, :]
+    cache = {"state": final_state.astype(jnp.float32), "conv": conv_cache}
+    return shard(out, "batch", "act_seq", "embed"), cache
+
+
+def apply_ssm_decode(p: dict, x_in: jax.Array, cache: dict, cfg):
+    """Single-token recurrent update. x_in: (B, d)."""
+    s = cfg.ssm
+    B, d = x_in.shape
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    N = s.d_state
+
+    z = x_in @ p["w_z"]
+    x_raw = x_in @ p["w_x"]
+    bc_raw = x_in @ p["w_bc"]
+    dt = x_in @ p["w_dt"]
+    new_tail = jnp.concatenate([x_raw, bc_raw], axis=-1)   # (B, di+gn)
+    conv_in = jnp.concatenate([cache["conv"], new_tail[:, None]], axis=1)
+    xs_in, bc_in = jnp.split(conv_in, [di], axis=-1)
+    xs = jax.nn.silu(jnp.einsum("bwc,wc->bc", xs_in, p["conv_x"]) + p["conv_bias_x"])
+    bc = jax.nn.silu(jnp.einsum("bwc,wc->bc", bc_in, p["conv_bc"]) + p["conv_bias_bc"])
+    xs = xs.reshape(B, nh, s.head_dim)
+    Bs, Cs = jnp.split(bc, 2, axis=-1)                     # (B,N)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,nh)
+    A = -jnp.exp(p["A_log"])
+
+    decay = jnp.exp(dtv * A)                               # (B,nh)
+    h = cache["state"]                                     # (B,nh,hd,N) f32
+    contrib = (dtv[..., None, None] * xs.astype(jnp.float32)[..., None]
+               * Bs.astype(jnp.float32)[:, None, None, :])
+    h = h * decay[..., None, None] + contrib
+    y = jnp.einsum("bhpn,bn->bhp", h, Cs.astype(jnp.float32)).astype(x_in.dtype)
+    y = y + xs * p["D"][None, :, None].astype(x_in.dtype)
+    y = y.reshape(B, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    new_conv = conv_in[:, 1:]
+    return out, {"state": h, "conv": new_conv}
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return {
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+    }

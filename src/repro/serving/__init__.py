@@ -1,0 +1,15 @@
+from .workload import (Workload, NodeDesc, Segment, LengthDist,
+                       wmt_like_length_dist, fixed_length, get_workload,
+                       from_model_config, PAPER_WORKLOADS)
+from .npu_model import NPUPerfModel, HardwareSpec, PAPER_NPU, TPU_V5E
+from .traffic import Trace, poisson_trace, bursty_trace, colocated_trace
+from .server import InferenceServer, SimExecutor, Executor, run_policy
+from .metrics import ServeStats
+
+__all__ = [
+    "Workload", "NodeDesc", "Segment", "LengthDist", "wmt_like_length_dist",
+    "fixed_length", "get_workload", "from_model_config", "PAPER_WORKLOADS",
+    "NPUPerfModel", "HardwareSpec", "PAPER_NPU", "TPU_V5E",
+    "Trace", "poisson_trace", "bursty_trace", "colocated_trace",
+    "InferenceServer", "SimExecutor", "Executor", "run_policy", "ServeStats",
+]

@@ -1,0 +1,226 @@
+"""Real-JAX node-level serving engine.
+
+The discrete-event simulator (``server.py``) models latency analytically;
+this engine executes the SAME policies against the ACTUAL model: every
+``(sub_batch, node_id)`` the scheduler emits dispatches a jitted per-layer
+function on device and mutates real request state (activations, KV caches,
+generated tokens). It is the existence proof of the paper's claim that
+node-level preemption needs no hardware support — preemption is just
+"which jitted node fn we dispatch next" (DESIGN.md §3).
+
+Node ids come from ``workload.from_model_config``:
+
+  * ``emb``   — embed the prompt,
+  * ``P<i>``  — prefill layer i over the prompt (builds the KV cache),
+  * ``D<i>``  — decode layer i for ONE token, *batched with ragged per-row
+               positions* across the merged sub-batch (each member joined
+               at a different time — the ragged-decode situation the
+               Pallas kernel targets),
+  * ``head``  — unembed + greedy-sample the next token.
+
+Token semantics are exact: the prompt's last token is fed as the first
+decode-cycle input (prefill covers ``prompt[:-1]``), so every token is
+processed exactly once. Decode nodes execute truly batched (stacked rows +
+ragged ``pos``); prefill nodes run per-request (prompts have unequal
+lengths — padding buys nothing on the CPU demo and the simulator covers
+the batching economics). Per-request per-layer caches are stored unstacked
+and stacked/unstacked around each batched dispatch.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..core.request import Request, SubBatch
+from ..models import layers as L
+from ..models.cost import _layer_kinds
+from ..models.model import Model, RuntimeFlags, _index
+from .server import Executor
+
+# cache leaves whose leading (post-batch) axis is the KV time axis
+_TIME_AXIS_KEYS = ("k", "v", "ckv", "krope")
+
+
+class EngineState:
+    """Mutable per-request execution state."""
+
+    def __init__(self, prompt_tokens: np.ndarray):
+        assert len(prompt_tokens) >= 2, "engine needs prompts of >= 2 tokens"
+        self.prompt = jnp.asarray(prompt_tokens, jnp.int32)
+        self.prefill_len = int(len(prompt_tokens) - 1)
+        self.x: Optional[jax.Array] = None       # activations in flight
+        self.caches: Dict[int, object] = {}      # layer -> cache pytree
+        self.generated: List[int] = []
+        self.next_token: int = int(prompt_tokens[-1])
+        self.pos: int = self.prefill_len         # next KV slot to write
+
+
+class JaxEngine(Executor):
+    """Executes workload nodes on a real (reduced) model."""
+
+    def __init__(self, cfg: ModelConfig, *, max_len: int = 512, seed: int = 0,
+                 dtype=jnp.float32):
+        self.cfg = cfg
+        self.model = Model(cfg, RuntimeFlags(dtype=dtype))
+        self.params = self.model.init(jax.random.key(seed))
+        self.kinds = _layer_kinds(cfg)
+        self.max_len = max_len
+        self.states: Dict[int, EngineState] = {}
+        self.nodes_executed = 0
+        self._jit_cache: Dict[tuple, object] = {}
+
+    # ------------------------------------------------------------------
+    def register(self, req: Request, prompt_tokens: np.ndarray):
+        self.states[req.rid] = EngineState(prompt_tokens)
+
+    def state(self, req: Request) -> EngineState:
+        return self.states[req.rid]
+
+    # ------------------------------------------------------------------
+    def _layer_params(self, i: int):
+        cfg = self.cfg
+        if cfg.hybrid is not None:
+            pat = cfg.hybrid.block_pattern
+            g, j = divmod(i, len(pat))
+            if g < self.model.n_groups:
+                return _index(self.params["blocks"], g)[f"b{j}_{pat[j]}"]
+            return _index(self.params["tail"], i - self.model.n_groups * len(pat))
+        return _index(self.params["blocks"], i)
+
+    def _kind_window(self, i: int):
+        cfg = self.cfg
+        kind = self.kinds[i]
+        if cfg.hybrid is not None:
+            if kind == "attn":
+                return "dense", cfg.hybrid.local_window
+            return kind, None
+        return ("dense" if kind == "attn" else kind), None
+
+    # ------------------------------------------------------------------
+    def _fn_prefill(self, i: int):
+        key = ("prefill", i)
+        if key not in self._jit_cache:
+            kind, window = self._kind_window(i)
+
+            def fn(bp, x):
+                positions = jnp.arange(x.shape[1])[None, :]
+                x, cache = self.model.apply_block_dense(
+                    bp, x, kind, return_cache=True, window=window,
+                    positions=positions)
+                if isinstance(cache, tuple):      # moe: (kv_cache, aux)
+                    cache = cache[0]
+                return x, cache
+
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def _fn_decode(self, i: int):
+        key = ("decode", i)
+        if key not in self._jit_cache:
+            kind, window = self._kind_window(i)
+
+            def fn(bp, x, cache, pos):
+                return self.model.apply_block_decode(
+                    bp, x, cache, pos, kind, window=window)
+
+            self._jit_cache[key] = jax.jit(fn)
+        return self._jit_cache[key]
+
+    def _fn_head(self):
+        if "head" not in self._jit_cache:
+            def fn(params, x):
+                h = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+                logits = self.model.unembed(params, h)
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            self._jit_cache["head"] = jax.jit(fn)
+        return self._jit_cache[key] if False else self._jit_cache["head"]
+
+    # ------------------------------------------------------------------
+    def execute(self, sb: SubBatch, node_id: str) -> float:
+        t0 = time.perf_counter()
+        reqs = sb.live_requests
+        outs = []
+        if node_id == "emb":
+            for r in reqs:
+                st = self.state(r)
+                st.x = self.model.embed(
+                    self.params, st.prompt[None, :st.prefill_len])
+                outs.append(st.x)
+        elif node_id.startswith("P"):
+            i = int(node_id[1:])
+            fn = self._fn_prefill(i)
+            bp = self._layer_params(i)
+            for r in reqs:
+                st = self.state(r)
+                st.x, cache = fn(bp, st.x)
+                st.caches[i] = self._pad_cache(cache, st.prefill_len)
+                outs.append(st.x)
+                if i == len(self.kinds) - 1:      # prefill done
+                    st.x = None
+        elif node_id.startswith("D"):
+            i = int(node_id[1:])
+            fn = self._fn_decode(i)
+            bp = self._layer_params(i)
+            sts = [self.state(r) for r in reqs]
+            if i == 0:
+                for st in sts:
+                    st.x = self.model.embed(
+                        self.params,
+                        jnp.asarray([st.next_token], jnp.int32))[0]
+            x = jnp.stack([st.x for st in sts])                  # (B, d)
+            cache = jax.tree.map(lambda *ls: jnp.stack(ls),
+                                 *[st.caches[i] for st in sts])
+            pos = jnp.asarray([st.pos for st in sts], jnp.int32)
+            x, new_cache = fn(bp, x, cache, pos)
+            for bi, st in enumerate(sts):
+                st.x = x[bi]
+                st.caches[i] = jax.tree.map(lambda l: l[bi], new_cache)
+            outs.append(x)
+        elif node_id == "head":
+            fn = self._fn_head()
+            sts = [self.state(r) for r in reqs]
+            x = jnp.stack([st.x for st in sts])
+            toks = fn(self.params, x)
+            outs.append(toks)
+            toks = np.asarray(toks)
+            for bi, st in enumerate(sts):
+                st.next_token = int(toks[bi])
+                st.generated.append(st.next_token)
+                st.pos += 1
+        else:
+            raise KeyError(f"unknown node {node_id!r}")
+        self.nodes_executed += 1
+        for o in outs:
+            jax.block_until_ready(o)
+        return time.perf_counter() - t0
+
+    # ------------------------------------------------------------------
+    def _pad_cache(self, cache, prefill_len: int):
+        """Prefill returns time-axis caches sized to the prompt; pad them to
+        ``max_len`` so merged decode batches share one cache shape. Only
+        leaves named in ``_TIME_AXIS_KEYS`` (k/v/ckv/krope) have a time
+        axis; recurrent state/conv leaves pass through untouched."""
+
+        def pad(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name not in _TIME_AXIS_KEYS:
+                return leaf
+            if leaf.ndim >= 2 and leaf.shape[0] == 1:
+                leaf = leaf[0]                    # drop the batch=1 dim
+            pad_n = self.max_len - leaf.shape[0]
+            assert pad_n >= 0, (leaf.shape, self.max_len)
+            return jnp.pad(leaf, [(0, pad_n)] + [(0, 0)] * (leaf.ndim - 1))
+
+        padded = jax.tree_util.tree_map_with_path(pad, cache)
+        # non-time leaves still carry the batch=1 dim — drop it
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: (l[0] if str(getattr(p[-1], "key", ""))
+                          not in _TIME_AXIS_KEYS and l.ndim >= 1
+                          and l.shape[0] == 1 else l),
+            padded)

@@ -1,0 +1,61 @@
+"""Serving metrics: latency distribution, throughput, SLA satisfaction."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from ..core.request import Request
+
+
+@dataclass
+class ServeStats:
+    policy: str
+    duration: float
+    finished: List[Request] = field(default_factory=list)
+
+    @property
+    def latencies(self) -> np.ndarray:
+        return np.array([r.latency() for r in self.finished])
+
+    @property
+    def avg_latency(self) -> float:
+        lat = self.latencies
+        return float(lat.mean()) if len(lat) else float("nan")
+
+    def percentile(self, q: float) -> float:
+        lat = self.latencies
+        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+
+    @property
+    def makespan(self) -> float:
+        if not self.finished:
+            return self.duration
+        return max(r.t_finish for r in self.finished)
+
+    @property
+    def throughput(self) -> float:
+        """Completed requests per second over the busy window (arrival span
+        + drain) — policies that stall requests pay for the longer drain."""
+        return len(self.finished) / max(self.duration, self.makespan)
+
+    def sla_violation_rate(self, sla: float) -> float:
+        lat = self.latencies
+        if not len(lat):
+            return float("nan")
+        return float((lat > sla).mean())
+
+    def summary(self, sla: Optional[float] = None) -> Dict[str, float]:
+        out = {
+            "policy": self.policy,
+            "completed": len(self.finished),
+            "avg_latency_ms": self.avg_latency * 1e3,
+            "p25_ms": self.percentile(25) * 1e3,
+            "p75_ms": self.percentile(75) * 1e3,
+            "p99_ms": self.percentile(99) * 1e3,
+            "throughput_rps": self.throughput,
+        }
+        if sla is not None:
+            out["sla_violation_rate"] = self.sla_violation_rate(sla)
+        return out

@@ -1,0 +1,107 @@
+"""Discrete-event inference server (paper Fig. 9 serving architecture).
+
+One backend processor executes one (sub-)batched *node* at a time; the
+scheduler (policy) is consulted at every node boundary and on arrivals when
+idle — exactly the node-level execution model the paper builds on. The
+executor is pluggable:
+
+  * ``SimExecutor``  — analytical NPU latency model (paper's methodology),
+  * the real-JAX engine in ``repro.serving.engine`` implements the same
+    interface and measures wall-clock node latencies on device.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
+
+from ..core.policies import Policy
+from ..core.request import Request, SubBatch
+from .metrics import ServeStats
+from .npu_model import NPUPerfModel
+from .traffic import Trace
+from .workload import NodeDesc
+
+
+class Executor:
+    def execute(self, sb: SubBatch, node_id: str) -> float:
+        """Execute one node for a sub-batch; returns latency in seconds."""
+        raise NotImplementedError
+
+
+class SimExecutor(Executor):
+    def __init__(self, perf_model: NPUPerfModel):
+        self.perf = perf_model
+
+    def execute(self, sb: SubBatch, node_id: str) -> float:
+        reqs = sb.live_requests
+        wl = reqs[0].workload
+        node = wl.nodes[node_id]
+        ctxs = [r.next_ctx for r in reqs]
+        return self.perf.node_latency(node, ctxs)
+
+
+@dataclass
+class ServerLog:
+    nodes_executed: int = 0
+    busy_time: float = 0.0
+    batch_size_sum: int = 0
+
+    @property
+    def avg_batch_size(self) -> float:
+        return self.batch_size_sum / max(1, self.nodes_executed)
+
+
+class InferenceServer:
+    def __init__(self, policy: Policy, executor: Executor):
+        self.policy = policy
+        self.executor = executor
+        self.log = ServerLog()
+
+    def run(self, trace: Trace, *, drain: bool = True) -> ServeStats:
+        """Run the trace to completion; returns serving statistics."""
+        arrivals = sorted(trace.requests, key=lambda r: r.arrival)
+        ai = 0
+        now = 0.0
+        finished: List[Request] = []
+        stats = ServeStats(policy=self.policy.name, duration=trace.duration)
+
+        while True:
+            # admit all arrivals up to `now`
+            while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
+                self.policy.enqueue(arrivals[ai], now)
+                ai += 1
+
+            work = self.policy.next_work(now)
+            if work is None:
+                # idle: jump to the next arrival or policy timer
+                candidates = []
+                if ai < len(arrivals):
+                    candidates.append(arrivals[ai].arrival)
+                t = self.policy.next_timer(now)
+                if t is not None:
+                    candidates.append(max(t, now))
+                if not candidates:
+                    break                       # fully drained
+                now = min(candidates)
+                continue
+
+            sb, node_id = work
+            latency = self.executor.execute(sb, node_id)
+            self.log.nodes_executed += 1
+            self.log.busy_time += latency
+            self.log.batch_size_sum += sb.size
+            now += latency
+            finished.extend(self.policy.work_done(sb, now))
+            if not drain and now > trace.duration and ai >= len(arrivals):
+                break
+
+        stats.finished = finished
+        return stats
+
+
+def run_policy(policy: Policy, trace: Trace,
+               perf_model: Optional[NPUPerfModel] = None) -> ServeStats:
+    perf_model = perf_model or NPUPerfModel()
+    server = InferenceServer(policy, SimExecutor(perf_model))
+    return server.run(trace.fresh())

@@ -1,0 +1,70 @@
+"""Inference query traffic generation (paper §V).
+
+Poisson arrivals per the MLPerf cloud-inference methodology; rate buckets
+low/medium/high = 0-256 / 256-500 / 500+ queries/sec. Also supports a
+bursty MMPP-style generator (beyond-paper robustness studies) and
+multi-model traces for the co-location experiment (§VI-C).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.request import Request
+from .workload import Workload
+
+
+@dataclass
+class Trace:
+    """Arrival-sorted list of requests."""
+    requests: List[Request]
+    duration: float
+
+    def __len__(self):
+        return len(self.requests)
+
+    def fresh(self) -> "Trace":
+        """Unexecuted copy — required when replaying one trace across
+        several policies (request state is mutated by a run)."""
+        return Trace([r.clone() for r in self.requests], self.duration)
+
+
+def poisson_trace(wl: Workload, rate: float, duration: float,
+                  seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    t, reqs = 0.0, []
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            break
+        reqs.append(wl.sample_request(rng, t))
+    return Trace(reqs, duration)
+
+
+def bursty_trace(wl: Workload, rate_low: float, rate_high: float,
+                 switch_period: float, duration: float, seed: int = 0) -> Trace:
+    """Two-state MMPP: alternates between low/high Poisson rates."""
+    rng = np.random.default_rng(seed)
+    t, reqs, high = 0.0, [], False
+    next_switch = switch_period
+    while t < duration:
+        rate = rate_high if high else rate_low
+        t += rng.exponential(1.0 / rate)
+        if t >= next_switch:
+            high = not high
+            next_switch += switch_period
+        if t < duration:
+            reqs.append(wl.sample_request(rng, t))
+    return Trace(reqs, duration)
+
+
+def colocated_trace(workloads: Sequence[Workload], rates: Sequence[float],
+                    duration: float, seed: int = 0) -> Trace:
+    """Superposition of per-model Poisson processes (co-location, §VI-C)."""
+    reqs: List[Request] = []
+    for i, (wl, rate) in enumerate(zip(workloads, rates)):
+        reqs.extend(poisson_trace(wl, rate, duration, seed=seed + i).requests)
+    reqs.sort(key=lambda r: r.arrival)
+    return Trace(reqs, duration)

@@ -1,0 +1,106 @@
+"""Logical-axis sharding helpers.
+
+Model code annotates activations with *logical* axis names
+("batch", "seq", "heads", "embed", "ffn", "vocab", "experts", ...).
+The launcher installs a mapping logical-axis -> mesh-axis; outside a mesh
+context the annotations are no-ops, so the same model code runs on a single
+CPU device (tests) and on the production mesh (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+class AxisRules:
+    """Maps logical axis names to mesh axis names (or None = replicated)."""
+
+    def __init__(self, mesh: Mesh, mapping: Mapping[str, object]):
+        self.mesh = mesh
+        self.mapping = dict(mapping)
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        out = []
+        for ax in logical:
+            m = self.mapping.get(ax) if ax is not None else None
+            out.append(m)
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield
+    finally:
+        _STATE.rules = prev
+
+
+def shard(x, *logical: Optional[str]):
+    """Apply a sharding constraint if logical rules are installed."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank mismatch: {x.shape} vs logical axes {logical}")
+    return jax.lax.with_sharding_constraint(x, rules.sharding(logical))
+
+
+# Default logical->mesh mappings -----------------------------------------
+
+# Tensor-parallel serving: params replicated over `data`, sharded over
+# `model`; batch over (`pod`, `data`).
+SERVE_RULES = {
+    "batch": ("pod", "data"),
+    "batch_nopod": "data",
+    "seq": None,
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": None,
+    "expert_ffn": "model",
+    "moe_out": None,       # §Perf hook: -> "model" defers the TP all-reduce
+    "act_seq": None,       # §Perf hook: -> "model" = Megatron-style seq parallel
+    "lru": "model",
+    "ssm_heads": "model",
+    "state": None,
+    "layers": None,
+    "fsdp": None,
+}
+
+# Training: same tensor parallelism + params FSDP-sharded over `data`.
+TRAIN_RULES = dict(SERVE_RULES, fsdp="data")
+
+
+def make_rules(mesh: Mesh, kind: str = "serve") -> AxisRules:
+    base = TRAIN_RULES if kind == "train" else SERVE_RULES
+    mapping = dict(base)
+    names = mesh.axis_names
+    if "pod" not in names:
+        mapping["batch"] = "data"
+    if "data" not in names:
+        mapping["batch"] = None
+        mapping["batch_nopod"] = None
+        mapping["fsdp"] = None
+    if "model" not in names:
+        for k, v in list(mapping.items()):
+            if v == "model":
+                mapping[k] = None
+    return AxisRules(mesh, mapping)

@@ -1,0 +1,12 @@
+"""Training substrate: AdamW, train loop, checkpointing."""
+from .optimizer import (OptimizerConfig, AdamWState, adamw_update,
+                        init_adamw, cosine_lr, clip_by_global_norm,
+                        global_norm)
+from .trainer import TrainState, make_train_step, init_state, train_loop
+from . import checkpoint
+
+__all__ = [
+    "OptimizerConfig", "AdamWState", "adamw_update", "init_adamw",
+    "cosine_lr", "clip_by_global_norm", "global_norm",
+    "TrainState", "make_train_step", "init_state", "train_loop", "checkpoint",
+]

@@ -1,0 +1,71 @@
+"""Minimal, dependency-free checkpointing.
+
+Pytrees are flattened with jax.tree_util key-paths into a single ``.npz``
+(atomic rename on save). Works for params, optimizer state, and data-pipeline
+RNG state. Restores verify structure + shapes so a config change can't load
+an incompatible checkpoint silently.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Optional
+
+import numpy as np
+
+import jax
+
+
+_NATIVE = set("?bhilqBHILQefdgFD")
+
+
+def _to_numpy(leaf) -> np.ndarray:
+    arr = np.asarray(leaf)
+    if arr.dtype.char not in _NATIVE:      # ml_dtypes (bf16, fp8, ...)
+        arr = arr.astype(np.float32)       # lossless widening for bf16
+    return arr
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = _to_numpy(leaf)
+    return out, treedef
+
+
+def save(path: str, tree, step: Optional[int] = None):
+    arrays, _ = _flatten(tree)
+    if step is not None:
+        arrays["__step__"] = np.asarray(step)
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d or ".", suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **arrays)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+
+
+def restore(path: str, like):
+    """Restore into the structure of ``like`` (shape/dtype checked)."""
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        leaves = []
+        for p, leaf in flat:
+            key = jax.tree_util.keystr(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(leaf.shape):
+                raise ValueError(
+                    f"{key}: checkpoint shape {arr.shape} != model {leaf.shape}")
+            leaves.append(arr.astype(leaf.dtype))
+        step = int(data["__step__"]) if "__step__" in data else None
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,106 @@
+"""AdamW + cosine LR schedule + global-norm gradient clipping.
+
+Hand-rolled (no optax in this environment) as pure pytree transforms so the
+optimizer state shards exactly like the parameters (FSDP over ``data`` in
+TRAIN_RULES — this is what makes grok-1-314b's optimizer state fit in the
+dry-run's memory analysis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array      # int32 scalar
+    mu: dict             # first moment  (pytree like params)
+    nu: dict             # second moment (pytree like params)
+
+
+def cosine_lr(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup then cosine decay to ``min_lr_ratio * lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio * cfg.lr + (1 - cfg.min_lr_ratio) * cfg.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+_NO_DECAY = ("scale", "bias", "A_log", "D", "dt_bias", "a_param")
+
+
+def _decay_mask(path) -> bool:
+    keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+    return not any(k in _NO_DECAY for k in keys)
+
+
+def adamw_update(cfg: OptimizerConfig, params, grads, state: AdamWState):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = cosine_lr(cfg, step)
+    b1, b2 = cfg.betas
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, m, v):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    p_leaves = [l for _, l in flat[0]]
+    g_leaves = jax.tree.leaves(grads)
+    m_leaves = jax.tree.leaves(state.mu)
+    v_leaves = jax.tree.leaves(state.nu)
+    out = [upd(pa, p, g, m, v) for pa, p, g, m, v
+           in zip(paths, p_leaves, g_leaves, m_leaves, v_leaves)]
+    treedef = flat[1]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    return new_params, AdamWState(step, new_mu, new_nu), {
+        "lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,97 @@
+"""Training loop: jitted train_step factory + host-side driver.
+
+``make_train_step`` is the single source of truth for the training step —
+the same function is (a) executed by the training example on CPU and
+(b) lowered against ShapeDtypeStructs on the production mesh by the dry-run
+(deliverable (e)). Sharding flows in through logical-axis rules installed by
+the caller (see ``repro.sharding``), not through this module.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.model import Model, RuntimeFlags
+from .optimizer import OptimizerConfig, AdamWState, adamw_update, init_adamw
+
+
+@dataclass
+class TrainState:
+    params: dict
+    opt: AdamWState
+
+
+def make_train_step(model: Model, opt_cfg: OptimizerConfig) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: dict):
+        def loss_fn(params):
+            loss, parts = model.loss(params, batch)
+            return loss, parts
+
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params)
+        new_params, new_opt, om = adamw_update(
+            opt_cfg, state.params, grads, state.opt)
+        metrics = {"loss": loss, **parts, **om}
+        return TrainState(new_params, new_opt), metrics
+
+    return train_step
+
+
+def init_state(model: Model, key) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=init_adamw(params))
+
+
+jax.tree_util.register_dataclass(
+    TrainState, data_fields=["params", "opt"], meta_fields=[])
+
+
+@dataclass
+class TrainLog:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    wall: list = field(default_factory=list)
+
+
+def train_loop(model: Model, opt_cfg: OptimizerConfig, data_iter,
+               num_steps: int, *, key=None, log_every: int = 10,
+               checkpoint_path: Optional[str] = None,
+               checkpoint_every: int = 0,
+               state: Optional[TrainState] = None,
+               verbose: bool = True) -> tuple:
+    """Host driver: returns (final_state, TrainLog)."""
+    from . import checkpoint as ckpt
+
+    key = key if key is not None else jax.random.key(0)
+    if state is None:
+        state = init_state(model, key)
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0,))
+    log = TrainLog()
+    t0 = time.perf_counter()
+    for step, batch in enumerate(data_iter):
+        if step >= num_steps:
+            break
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        state, metrics = step_fn(state, jb)
+        if step % log_every == 0 or step == num_steps - 1:
+            loss = float(metrics["loss"])
+            log.steps.append(step)
+            log.losses.append(loss)
+            log.wall.append(time.perf_counter() - t0)
+            if verbose:
+                print(f"step {step:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}")
+        if (checkpoint_path and checkpoint_every
+                and step and step % checkpoint_every == 0):
+            ckpt.save(checkpoint_path, state.params, step=step)
+    if checkpoint_path:
+        ckpt.save(checkpoint_path, state.params, step=num_steps)
+    return state, log

@@ -1,0 +1,77 @@
+"""Unit tests for BatchTable stack semantics (paper Fig. 10 walk-through)."""
+import pytest
+
+from repro.core.batch_table import BatchTable
+from repro.core.request import Request, SubBatch
+
+
+def mk_req(node_ids, arrival=0.0):
+    return Request(workload=None, arrival=arrival,
+                   sequence=[(n, 1) for n in node_ids])
+
+
+def test_fig10_walkthrough():
+    """Reproduce the paper's Fig. 10 BatchTable trace (8-node graph A..H)."""
+    nodes = list("ABCDEFGH")
+    bt = BatchTable(max_batch=64)
+
+    # t=2: Req1 arrives, pushed at node A
+    r1 = mk_req(nodes)
+    bt.push([r1])
+    assert bt.active.node_id == "A"
+
+    # Req1 executes A, B; at end of B, Req2 is pushed (preempting Req1)
+    r1.advance(); r1.advance()
+    assert r1.next_node_id == "C"
+    r2 = mk_req(nodes)
+    bt.push([r2])
+    assert bt.active.live_requests == [r2]
+    assert bt.num_entries == 2
+
+    # Req2 executes A; Req3 arrives and is pushed (t=5)
+    r2.advance()
+    r3 = mk_req(nodes)
+    bt.push([r3])
+    assert bt.num_entries == 3
+
+    # Req3 executes A -> now Req2 and Req3 both at node B: merge (t=6)
+    r3.advance()
+    assert bt.merge_top() == 1
+    assert bt.num_entries == 2
+    assert sorted(r.rid for r in bt.active.live_requests) == sorted(
+        [r2.rid, r3.rid])
+    assert bt.active.node_id == "B"
+
+    # merged Req2-3 execute B -> all three at node C: merge again (t=7)
+    r2.advance(); r3.advance()
+    assert bt.merge_top() == 1
+    assert bt.num_entries == 1
+    assert bt.active.size == 3
+    assert bt.active.node_id == "C"
+
+
+def test_merge_respects_max_batch():
+    bt = BatchTable(max_batch=2)
+    r1, r2, r3 = mk_req("AB"), mk_req("AB"), mk_req("AB")
+    bt.push([r1, r2])
+    bt.push([r3])
+    assert bt.merge_top() == 0          # 2 + 1 > max_batch
+    assert bt.num_entries == 2
+
+
+def test_subbatch_invariant_detects_divergence():
+    r1, r2 = mk_req("AB"), mk_req("AB")
+    sb = SubBatch([r1, r2])
+    r1.advance()
+    with pytest.raises(AssertionError):
+        _ = sb.node_id
+
+
+def test_finished_members_leave_subbatch():
+    r1, r2 = mk_req("A"), mk_req("AB")
+    sb = SubBatch([r1, r2])
+    done = sb.advance(now=1.0)
+    assert done == [r1]
+    assert r1.t_finish == 1.0
+    assert sb.live_requests == [r2]
+    assert sb.node_id == "B"

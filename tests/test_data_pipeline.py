@@ -1,0 +1,60 @@
+"""Data pipeline: determinism, shapes, next-token alignment, length stats."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.pipeline import DataConfig, TokenPipeline, make_batch_specs
+from repro.configs import get_config, get_shape
+from repro.serving.workload import wmt_like_length_dist
+
+
+def test_shapes_and_alignment():
+    cfg = DataConfig(vocab_size=1000, seq_len=128, batch_size=4, seed=1)
+    b = TokenPipeline(cfg).next_batch()
+    assert b["tokens"].shape == (4, 128)
+    assert b["targets"].shape == (4, 128)
+    # targets are tokens shifted by one (same underlying stream)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["targets"][:, :-1])
+    assert b["tokens"].max() < 1000 and b["tokens"].min() >= 0
+
+
+def test_determinism_by_seed():
+    mk = lambda s: TokenPipeline(DataConfig(500, 64, 2, seed=s)).next_batch()
+    a, b, c = mk(7), mk(7), mk(8)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(16, 100))
+def test_stream_properties(batch, seq):
+    cfg = DataConfig(vocab_size=300, seq_len=seq, batch_size=batch, seed=3)
+    b = TokenPipeline(cfg).next_batch()
+    assert b["tokens"].shape == (batch, seq)
+    assert (b["tokens"] != cfg.pad_id).any()
+
+
+def test_wmt_length_dist_anchors():
+    """Fig. 11 anchors: ~70% of sentences <= 20 words, ~90% <= 30."""
+    d = wmt_like_length_dist(80)
+    probs = np.asarray(d.probs)
+    le20 = probs[:20].sum()
+    le30 = probs[:30].sum()
+    assert 0.60 < le20 < 0.85, le20
+    assert 0.85 < le30 < 0.95, le30
+    assert d.quantile(0.9) <= 35
+
+
+def test_batch_specs_cover_all_shapes():
+    cfg = get_config("internvl2-26b")
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+        shape = get_shape(shape_name)
+        specs = make_batch_specs(cfg, shape)
+        if shape.kind == "train":
+            assert specs["tokens"].shape == (shape.global_batch, shape.seq_len)
+            assert "prefix" in specs          # VLM stub embeddings
+        elif shape.kind == "prefill":
+            assert "tokens" in specs
+        else:
+            assert specs["token"].shape == (shape.global_batch,)
+            assert specs["pos"].shape == (shape.global_batch,)

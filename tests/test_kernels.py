@@ -1,0 +1,178 @@
+"""Per-kernel allclose validation against the pure-jnp oracles.
+
+Every kernel is swept over shapes/dtypes and executed in interpret=True
+mode (the kernel body runs in Python on CPU — the brief's validation
+path for TPU-target Pallas kernels).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_enable_x64", False)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# ragged decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,D,T", [
+    (4, 8, 8, 64, 256),      # MHA
+    (4, 8, 2, 64, 256),      # GQA 4:1
+    (2, 16, 1, 128, 512),    # MQA, large D
+    (3, 6, 3, 32, 128),      # odd sizes
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ragged_decode_attention(B, H, KV, D, T, dtype):
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (B, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, KV, D), dtype)
+    # ragged lengths incl. edge cases: 1, exactly one block, full T
+    lengths = jnp.array(
+        [1, T // 4 + 3, T // 2, T][:B] + [T // 3] * max(0, B - 4), jnp.int32)
+    out = ops.ragged_decode_attention(q, k, v, lengths, block_t=64,
+                                      interpret=True)
+    expect = ref.ragged_decode_attention_ref(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_ragged_decode_blocksize_invariance():
+    key = jax.random.key(1)
+    ks = jax.random.split(key, 3)
+    B, H, KV, D, T = 2, 4, 2, 64, 256
+    q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, T, KV, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, T, KV, D), jnp.float32)
+    lengths = jnp.array([100, 256], jnp.int32)
+    outs = [ops.ragged_decode_attention(q, k, v, lengths, block_t=bt,
+                                        interpret=True)
+            for bt in (32, 64, 128, 256)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash prefill attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,D,window,q_offset", [
+    (2, 256, 4, 64, None, 0),
+    (2, 256, 4, 64, 64, 0),           # sliding window
+    (1, 128, 2, 32, None, 128),       # catch-up chunk: q_offset > 0, T > S
+    (2, 128, 8, 128, 96, 64),         # window + offset
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, D, window, q_offset, dtype):
+    key = jax.random.key(2)
+    ks = jax.random.split(key, 3)
+    T = q_offset + S
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, T, H, D), dtype)
+    v = jax.random.normal(ks[2], (B, T, H, D), dtype)
+    out = ops.flash_attention(q, k, v, window=window, q_offset=q_offset,
+                              block_q=64, block_k=64, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, window=window,
+                                     q_offset=q_offset)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_flash_matches_model_chunked_attention():
+    """Cross-check against the model's chunked attention (the serving path)."""
+    from repro.models.layers import chunked_causal_attention
+    key = jax.random.key(3)
+    ks = jax.random.split(key, 3)
+    B, S, H, D = 2, 256, 4, 64
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.float32)
+    a = ops.flash_attention(q, k, v, block_q=64, block_k=64, interpret=True)
+    b = chunked_causal_attention(q, k, v, chunk=128)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(8, 128), (2, 64, 256), (3, 5, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm(shape, dtype):
+    key = jax.random.key(4)
+    x = jax.random.normal(key, shape, dtype) * 3.0
+    scale = jax.random.normal(jax.random.key(5), (shape[-1],), jnp.float32)
+    out = ops.fused_rmsnorm(x, scale, interpret=True)
+    expect = ref.fused_rmsnorm_ref(x, scale)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), **_tol(dtype))
+
+
+def test_fused_rmsnorm_matches_layer():
+    from repro.models.layers import rms_norm
+    x = jax.random.normal(jax.random.key(6), (4, 16, 128), jnp.float32)
+    p = {"scale": jnp.full((128,), 1.5, jnp.float32)}
+    a = ops.fused_rmsnorm(x, p["scale"], eps=1e-5, interpret=True)
+    b = rms_norm(x, p, 1e-5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SSD intra-chunk kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,nh,hd,N,chunk", [
+    (2, 128, 4, 32, 16, 32),
+    (1, 256, 2, 64, 32, 64),
+    (2, 64, 8, 16, 8, 16),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssd_chunked_pallas(B, S, nh, hd, N, chunk, dtype):
+    key = jax.random.key(7)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,), jnp.float32) * 0.3)
+    B_ssm = jax.random.normal(ks[3], (B, S, N), dtype)
+    C_ssm = jax.random.normal(ks[4], (B, S, N), dtype)
+    y, st = ops.ssd_chunked_pallas(x, dt, A, B_ssm, C_ssm, chunk,
+                                   interpret=True)
+    y_ref, st_ref = ref.ssd_chunked_ref(x, dt, A, B_ssm, C_ssm, chunk)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(st_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssd_pallas_chunk_invariance():
+    """Different chunk sizes give the same sequence semantics."""
+    key = jax.random.key(8)
+    ks = jax.random.split(key, 5)
+    B, S, nh, hd, N = 1, 128, 2, 16, 8
+    x = jax.random.normal(ks[0], (B, S, nh, hd), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,), jnp.float32) * 0.3)
+    B_ssm = jax.random.normal(ks[3], (B, S, N), jnp.float32)
+    C_ssm = jax.random.normal(ks[4], (B, S, N), jnp.float32)
+    y32, st32 = ops.ssd_chunked_pallas(x, dt, A, B_ssm, C_ssm, 32,
+                                       interpret=True)
+    y64, st64 = ops.ssd_chunked_pallas(x, dt, A, B_ssm, C_ssm, 64,
+                                       interpret=True)
+    np.testing.assert_allclose(np.asarray(y32), np.asarray(y64),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st32), np.asarray(st64),
+                               rtol=1e-4, atol=1e-4)

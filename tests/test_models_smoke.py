@@ -1,0 +1,125 @@
+"""Per-architecture smoke tests on REDUCED variants (brief requirement):
+
+<=2 layers (hybrid: one pattern group), d_model<=512, <=4 experts; one
+forward/train step + one prefill + one ragged decode step on CPU, asserting
+output shapes and absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHITECTURES, get_config
+from repro.models import Model, RuntimeFlags
+
+ARCHS = sorted(ARCHITECTURES)
+FLAGS = RuntimeFlags(dtype=jnp.float32, attn_chunk=64)
+
+
+def _batch_for(cfg, key, batch=2, seq=32):
+    tokens = jax.random.randint(key, (batch, seq), 0, cfg.vocab_size)
+    out = {"tokens": tokens, "targets": jnp.roll(tokens, -1, axis=1)}
+    if cfg.modality is not None:
+        out["prefix"] = jax.random.normal(
+            key, (batch, cfg.num_prefix_embeddings, cfg.d_model)) * 0.02
+    return out
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_is_reduced(arch):
+    red = get_config(arch).reduced()
+    assert red.d_model <= 512
+    assert red.num_layers <= max(2, len(red.hybrid.block_pattern) if red.hybrid else 2)
+    if red.moe:
+        assert red.moe.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_forward(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, FLAGS)
+    params = model.init(rng)
+    batch = _batch_for(cfg, rng)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    flat = jax.tree.leaves(grads)
+    assert all(np.all(np.isfinite(np.asarray(g))) for g in flat), \
+        f"{arch}: non-finite grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_and_ragged_decode(arch, rng):
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, FLAGS)
+    params = model.init(rng)
+    B, S = 2, 16
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    prefix = None
+    if cfg.modality is not None:
+        prefix = jax.random.normal(rng, (B, cfg.num_prefix_embeddings,
+                                         cfg.d_model)) * 0.02
+    max_len = 64
+    logits, _prefill_cache = jax.jit(
+        lambda p, t: model.prefill(p, t, prefix=prefix))(params, tokens)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+    # ragged decode: rows at different positions (lazily merged batch)
+    cache = model.init_cache(B, max_len)
+    pos = jnp.array([0, 5], jnp.int32)
+    tok = jnp.array([1, 2], jnp.int32)
+    dec = jax.jit(model.decode_step)
+    logits2, cache2 = dec(params, cache, tok, pos)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits2, np.float32)))
+    logits3, _ = dec(params, cache2, tok, pos + 1)
+    assert np.all(np.isfinite(np.asarray(logits3, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_matches_analytic(arch, rng):
+    """Analytic param_count() tracks the real pytree within 12%."""
+    cfg = get_config(arch).reduced()
+    model = Model(cfg, FLAGS)
+    params = jax.eval_shape(model.init, rng)
+    real = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    analytic = cfg.param_count()
+    assert abs(real - analytic) / real < 0.12, (arch, real, analytic)
+
+
+def test_scan_matches_unrolled(rng):
+    """use_scan=True and False must be numerically identical."""
+    cfg = get_config("llama3.2-1b").reduced()
+    batch = _batch_for(cfg, rng)
+    m1 = Model(cfg, RuntimeFlags(dtype=jnp.float32, use_scan=True, attn_chunk=64))
+    m2 = Model(cfg, RuntimeFlags(dtype=jnp.float32, use_scan=False, attn_chunk=64))
+    params = m1.init(rng)
+    l1, _ = m1.loss(params, batch)
+    l2, _ = m2.loss(params, batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-5)
+
+
+def test_sliding_window_variant_decodes(rng):
+    """Dense arch long-context variant: ring-buffer window cache."""
+    cfg = get_config("mistral-nemo-12b").reduced()
+    flags = RuntimeFlags(dtype=jnp.float32, window=8, attn_chunk=64)
+    model = Model(cfg, flags)
+    params = model.init(rng)
+    B = 2
+    cache = model.init_cache(B, max_len=1024)
+    # cache length must be the window, not max_len (axis 0 = layers, 1 = batch)
+    kv = jax.tree.leaves(cache)[0]
+    assert kv.shape[2] == 8
+    tok = jnp.zeros((B,), jnp.int32)
+    dec = jax.jit(model.decode_step)
+    for step in range(12):   # wrap the ring buffer
+        pos = jnp.full((B,), step, jnp.int32)
+        logits, cache = dec(params, cache, tok, pos)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))

@@ -1,0 +1,87 @@
+"""NPU latency model + traffic generator tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving import (get_workload, poisson_trace, bursty_trace,
+                           colocated_trace, NPUPerfModel, PAPER_NPU, TPU_V5E)
+from repro.serving.workload import NodeDesc
+
+PERF = NPUPerfModel(PAPER_NPU)
+
+
+# Table II calibration: single-batch latencies within a 2x band.
+@pytest.mark.parametrize("name,target_ms", [
+    ("resnet", 1.1), ("gnmt", 7.2), ("transformer", 2.4)])
+def test_table2_single_batch_latency(name, target_ms):
+    wl = get_workload(name)
+    p = wl.prompt_dist.quantile(0.5) if wl.prompt_dist else 0
+    d = wl.decode_dist.quantile(0.5) if wl.decode_dist else 0
+    ours = PERF.single_input_exec_time(wl, p, d) * 1e3
+    assert target_ms / 2 <= ours <= target_ms * 2, (name, ours, target_ms)
+
+
+@settings(max_examples=30, deadline=None)
+@given(flops=st.floats(1e6, 1e12), wb=st.floats(1e3, 1e9),
+       b1=st.integers(1, 32), b2=st.integers(1, 32))
+def test_batching_amortizes_per_sample_latency(flops, wb, b1, b2):
+    """Latency/sample is non-increasing in batch size (Fig. 3 blue curve)."""
+    node = NodeDesc("n", flops, wb, act_bytes=1e3)
+    if b1 > b2:
+        b1, b2 = b2, b1
+    l1 = PERF.node_latency(node, [128] * b1) / b1
+    l2 = PERF.node_latency(node, [128] * b2) / b2
+    assert l2 <= l1 * (1 + 1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(flops=st.floats(1e6, 1e12), wb=st.floats(1e3, 1e9),
+       batch=st.integers(1, 64))
+def test_latency_monotone_in_batch_and_ctx(flops, wb, batch):
+    node = NodeDesc("n", flops, wb, act_bytes=1e3, flops_per_ctx=flops / 100,
+                    bytes_per_ctx=16.0)
+    l_small = PERF.node_latency(node, [10] * batch)
+    l_big = PERF.node_latency(node, [1000] * batch)
+    assert l_big >= l_small
+    l_more = PERF.node_latency(node, [10] * (batch + 1))
+    assert l_more >= l_small
+
+
+def test_throughput_saturates_with_batch():
+    """Fig. 3: effective throughput rises then levels out."""
+    wl = get_workload("resnet")
+    def thr(n):
+        lat = sum(PERF.node_latency(nd, [1] * n)
+                  for nd, _ in ((wl.nodes[i], 0) for i in wl.nodes))
+        return n / lat
+    t1, t16, t64 = thr(1), thr(16), thr(64)
+    assert t16 > 1.8 * t1                     # batching helps a lot early
+    assert t64 < t16 * 1.5                    # ... then levels out
+
+
+def test_poisson_trace_statistics():
+    wl = get_workload("resnet")
+    rate, dur = 500, 4.0
+    tr = poisson_trace(wl, rate, dur, seed=3)
+    n = len(tr)
+    assert abs(n - rate * dur) < 4 * np.sqrt(rate * dur)
+    gaps = np.diff([r.arrival for r in tr.requests])
+    assert abs(gaps.mean() - 1 / rate) / (1 / rate) < 0.15
+
+
+def test_bursty_and_colocated_traces():
+    wl1, wl2 = get_workload("resnet"), get_workload("transformer")
+    tr = bursty_trace(wl1, 50, 500, switch_period=0.5, duration=2.0, seed=0)
+    assert len(tr) > 0
+    co = colocated_trace([wl1, wl2], [100, 100], duration=1.0, seed=0)
+    names = {r.workload.name for r in co.requests}
+    assert names == {"resnet", "transformer"}
+    arr = [r.arrival for r in co.requests]
+    assert arr == sorted(arr)
+
+
+def test_tpu_profile_is_faster():
+    wl = get_workload("resnet")
+    t_npu = PERF.single_input_exec_time(wl, 0, 0)
+    t_tpu = NPUPerfModel(TPU_V5E).single_input_exec_time(wl, 0, 0)
+    assert t_tpu < t_npu

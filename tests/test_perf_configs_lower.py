@@ -1,0 +1,53 @@
+"""The §Perf winning configurations must keep lowering+compiling
+(regression guard for the hillclimb results recorded in EXPERIMENTS.md)."""
+import subprocess
+import sys
+
+_SNIPPET = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
+import jax
+from repro.launch.steps import lower_combo
+
+small = dict(num_layers=2, d_model=256, d_ff=512, vocab_size=512)
+
+# Target 1 winner: grouped decode on a kv-divisible serving mesh
+mesh = jax.make_mesh((4, 8), ("data", "model"))
+lowered, _ = lower_combo(
+    "qwen2.5-32b", "decode_32k", mesh,
+    cfg_overrides=dict(num_heads=8, num_kv_heads=8, head_dim=64, **small),
+    flag_overrides={"use_scan": False, "grouped_decode": True},
+    cache_prefer="kv", donate_cache=True)
+lowered.compile()
+print("QWEN-PERF-OK")
+
+# Target 2 winner: sequence parallelism on MLA prefill
+mesh = jax.make_mesh((4, 8), ("data", "model"))
+lowered, _ = lower_combo(
+    "minicpm3-4b", "prefill_32k", mesh,
+    cfg_overrides=dict(num_heads=8, num_kv_heads=8, head_dim=64, **small),
+    flag_overrides={"use_scan": False},
+    rules_overrides={"act_seq": "model"})
+lowered.compile()
+print("MINICPM-PERF-OK")
+
+# Target 3 winner: expert parallelism on a E-divisible mesh
+mesh = jax.make_mesh((8, 4), ("data", "model"))
+lowered, _ = lower_combo(
+    "granite-moe-3b-a800m", "train_4k", mesh,
+    cfg_overrides=dict(num_heads=8, num_kv_heads=4, head_dim=64, **small),
+    flag_overrides={"use_scan": False},
+    param_prefer={"w_gate": 0, "w_up": 0, "w_down": 0},
+    rules_overrides={"experts": "model", "expert_ffn": None})
+lowered.compile()
+print("GRANITE-PERF-OK")
+"""
+
+
+def test_perf_configs_lower():
+    r = subprocess.run([sys.executable, "-c", _SNIPPET],
+                       capture_output=True, text=True, timeout=900,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    for tag in ("QWEN-PERF-OK", "MINICPM-PERF-OK", "GRANITE-PERF-OK"):
+        assert tag in r.stdout, (tag, r.stderr[-3000:])

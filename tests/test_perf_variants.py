@@ -1,0 +1,143 @@
+"""§Perf optimization variants must be numerically equivalent to the
+paper-faithful baselines (optimizations change HLO, not math)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import layers as L
+from repro.models.model import Model, RuntimeFlags
+
+
+def test_grouped_decode_matches_baseline():
+    cfg = get_config("llama3.2-1b").reduced()
+    key = jax.random.key(0)
+    p = L.init_attention(key, cfg, jnp.float32)
+    B, T = 3, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, cfg.d_model), jnp.float32)
+    cache = {
+        "k": jax.random.normal(ks[1], (B, T, cfg.num_kv_heads, cfg.head_dim)),
+        "v": jax.random.normal(ks[2], (B, T, cfg.num_kv_heads, cfg.head_dim)),
+    }
+    pos = jnp.array([5, 20, 63], jnp.int32)
+    y0, c0 = L.apply_attention_decode(p, x, cache, pos, cfg, grouped=False)
+    y1, c1 = L.apply_attention_decode(p, x, cache, pos, cfg, grouped=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(c0["k"]), np.asarray(c1["k"]))
+
+
+@pytest.mark.parametrize("window", [None, 24])
+def test_mla_absorbed_matches_baseline(window):
+    cfg = get_config("minicpm3-4b").reduced()
+    key = jax.random.key(1)
+    p = L.init_mla(key, cfg, jnp.float32)
+    B, S = 2, 64
+    x = jax.random.normal(jax.random.key(2), (B, S, cfg.d_model), jnp.float32)
+    y0, cache0 = L.apply_mla_dense(p, x, cfg, chunk=32, window=window,
+                                   absorbed=False)
+    y1, cache1 = L.apply_mla_dense(p, x, cfg, chunk=32, window=window,
+                                   absorbed=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(cache0["ckv"]),
+                               np.asarray(cache1["ckv"]), rtol=1e-6)
+
+
+def test_mla_absorbed_prefill_consistent_with_decode():
+    """Prefill with absorbed attention then one decode step == prefill of
+    the extended sequence (same final logits)."""
+    cfg = get_config("minicpm3-4b").reduced()
+    model_a = Model(cfg, RuntimeFlags(dtype=jnp.float32, attn_chunk=16,
+                                      mla_absorbed=True))
+    model_b = Model(cfg, RuntimeFlags(dtype=jnp.float32, attn_chunk=16))
+    params = model_a.init(jax.random.key(3))
+    toks = jax.random.randint(jax.random.key(4), (1, 17), 0, cfg.vocab_size)
+    la, _ = model_a.prefill(params, toks)
+    lb, _ = model_b.prefill(params, toks)
+    np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_grouped_decode_full_model_equivalence():
+    cfg = get_config("qwen2.5-32b").reduced()
+    m0 = Model(cfg, RuntimeFlags(dtype=jnp.float32, attn_chunk=16))
+    m1 = Model(cfg, RuntimeFlags(dtype=jnp.float32, attn_chunk=16,
+                                 grouped_decode=True))
+    params = m0.init(jax.random.key(5))
+    toks = jax.random.randint(jax.random.key(6), (2, 9), 0, cfg.vocab_size)
+    _, cache = m0.prefill(params, toks, max_len=32)
+
+    def pad(leaf):
+        if leaf.ndim >= 3 and leaf.shape[2] == 9:     # (L, B, T, ...)
+            return jnp.pad(leaf, [(0, 0), (0, 0), (0, 32 - 9)]
+                           + [(0, 0)] * (leaf.ndim - 3))
+        return leaf
+
+    cache = jax.tree.map(pad, cache)
+    tok = jnp.array([3, 4], jnp.int32)
+    pos = jnp.array([9, 9], jnp.int32)
+    l0, _ = m0.decode_step(params, cache, tok, pos)
+    l1, _ = m1.decode_step(params, cache, tok, pos)
+    np.testing.assert_allclose(np.asarray(l0), np.asarray(l1),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_int8_kv_cache_close_to_exact():
+    cfg = get_config("llama3.2-1b").reduced()
+    key = jax.random.key(7)
+    p = L.init_attention(key, cfg, jnp.float32)
+    B, T = 2, 64
+    ks = jax.random.split(key, 4)
+    x = jax.random.normal(ks[0], (B, cfg.d_model), jnp.float32)
+    pos = jnp.array([10, 40], jnp.int32)
+    # build matching exact + quantized caches from the same history
+    hist = jax.random.normal(ks[1], (B, T, cfg.num_kv_heads, cfg.head_dim))
+    valid = jnp.arange(T)[None, :, None, None] < pos[:, None, None, None]
+    hist = jnp.where(valid, hist, 0.0)
+    exact = {"k": hist, "v": hist * 0.7}
+    kq, ksc = L._quantize_rows(hist)
+    vq, vsc = L._quantize_rows(hist * 0.7)
+    quant = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+    y0, c0 = L.apply_attention_decode(p, x, exact, pos, cfg)
+    y1, c1 = L.apply_attention_decode(p, x, quant, pos, cfg)
+    assert c1["k"].dtype == jnp.int8
+    # int8 cache: outputs agree to quantization tolerance
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=0.1, atol=0.05)
+
+
+def test_int8_kv_cache_full_model_decodes():
+    cfg = get_config("llama3.2-1b").reduced()
+    m = Model(cfg, RuntimeFlags(dtype=jnp.float32, kv_quant=True))
+    params = m.init(jax.random.key(8))
+    cache = m.init_cache(2, 32)
+    tok = jnp.array([3, 4], jnp.int32)
+    pos = jnp.array([0, 5], jnp.int32)
+    logits, new_cache = m.decode_step(params, cache, tok, pos)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert np.all(np.isfinite(np.asarray(logits, np.float32)))
+
+
+def test_pallas_decode_path_matches_baseline():
+    """The integrated ragged-attention kernel path (RuntimeFlags.
+    pallas_decode) equals the jnp decode across a merged ragged batch."""
+    cfg = get_config("llama3.2-1b").reduced()
+    key = jax.random.key(9)
+    p = L.init_attention(key, cfg, jnp.float32)
+    B, T = 3, 64
+    ks = jax.random.split(key, 3)
+    x = jax.random.normal(ks[0], (B, cfg.d_model), jnp.float32)
+    cache = {
+        "k": jax.random.normal(ks[1], (B, T, cfg.num_kv_heads, cfg.head_dim)),
+        "v": jax.random.normal(ks[2], (B, T, cfg.num_kv_heads, cfg.head_dim)),
+    }
+    pos = jnp.array([0, 17, 63], jnp.int32)          # ragged progress
+    y0, _ = L.apply_attention_decode(p, x, cache, pos, cfg)
+    y1, _ = L.apply_attention_decode(p, x, cache, pos, cfg, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y0), np.asarray(y1),
+                               rtol=1e-5, atol=1e-5)

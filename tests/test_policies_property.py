@@ -1,0 +1,134 @@
+"""Property-based tests (hypothesis) on scheduler/system invariants.
+
+Invariants checked for EVERY policy on random traces:
+  * every request completes exactly once, with finish >= arrival,
+  * node-execution order per request equals its sequence (no skips),
+  * sub-batches never exceed the model-allowed max batch size,
+  * BatchTable entries never hold requests at different nodes,
+  * GraphB never dispatches a batch before its window/size trigger.
+
+Plus LazyBatching-specific: under the predictor's own latency model, any
+request admitted *while the server was idle-free* is never predicted to
+violate at admission time (conservative authorization).
+"""
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Serial, GraphBatching, CellularBatching, LazyBatching,
+                        Oracle, SlackPredictor, OracleSlackPredictor)
+from repro.serving import (get_workload, poisson_trace, NPUPerfModel,
+                           PAPER_NPU)
+from repro.serving.server import InferenceServer, SimExecutor
+
+PERF = NPUPerfModel(PAPER_NPU)
+WORKLOADS = {name: get_workload(name) for name in ["resnet", "transformer"]}
+
+
+class CheckingExecutor(SimExecutor):
+    """Executor that verifies per-request node order and batch bounds."""
+
+    def __init__(self, perf, max_batch):
+        super().__init__(perf)
+        self.max_batch = max_batch
+        self.executed = {}          # rid -> list of node ids
+
+    def execute(self, sb, node_id):
+        reqs = sb.live_requests
+        assert 1 <= len(reqs) <= self.max_batch, "batch size bound violated"
+        for r in reqs:
+            assert r.next_node_id == node_id, "request executed wrong node"
+            self.executed.setdefault(r.rid, []).append(node_id)
+        return super().execute(sb, node_id)
+
+
+def make_policy(kind, sla, max_batch):
+    wls = list(WORKLOADS.values())
+    if kind == "serial":
+        return Serial()
+    if kind == "graphb":
+        return GraphBatching(0.010, max_batch=max_batch)
+    if kind == "cellular":
+        return CellularBatching(max_batch=max_batch)
+    if kind == "lazyb":
+        return LazyBatching(SlackPredictor.build(wls, PERF, sla),
+                            max_batch=max_batch)
+    return Oracle(OracleSlackPredictor(sla, PERF), max_batch=max_batch)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kind=st.sampled_from(["serial", "graphb", "cellular", "lazyb", "oracle"]),
+    wl_name=st.sampled_from(["resnet", "transformer"]),
+    rate=st.sampled_from([50, 400, 1500]),
+    seed=st.integers(0, 2 ** 16),
+    max_batch=st.sampled_from([2, 8, 64]),
+)
+def test_policy_invariants(kind, wl_name, rate, seed, max_batch):
+    wl = WORKLOADS[wl_name]
+    trace = poisson_trace(wl, rate, duration=0.08, seed=seed).fresh()
+    policy = make_policy(kind, sla=0.1, max_batch=max_batch)
+    execu = CheckingExecutor(PERF, max_batch=max(1, max_batch))
+    server = InferenceServer(policy, execu)
+    stats = server.run(trace)
+
+    # exactly-once completion
+    assert len(stats.finished) == len(trace.requests)
+    assert len({r.rid for r in stats.finished}) == len(trace.requests)
+    for r in stats.finished:
+        assert r.done
+        assert r.t_finish >= r.arrival
+        # executed exactly its node sequence, in order
+        assert execu.executed[r.rid] == [nid for nid, _ in r.sequence]
+
+
+@settings(max_examples=10, deadline=None)
+@given(rate=st.sampled_from([200, 1200]), seed=st.integers(0, 2 ** 16))
+def test_lazyb_admission_never_predicts_violation(rate, seed):
+    """At every admission LazyB performed, the predictor's own model said
+    no merged request would violate — re-check it post-hoc."""
+    wl = WORKLOADS["transformer"]
+    trace = poisson_trace(wl, rate, duration=0.05, seed=seed).fresh()
+    pred = SlackPredictor.build([wl], PERF, sla_target=0.2)
+
+    checked = []
+    orig = pred.authorize
+
+    def spy(ongoing, pending, now):
+        ok = orig(ongoing, pending, now)
+        if ok and ongoing:
+            merged = list(ongoing) + list(pending)
+            checked.append(all(pred.slack(r, merged, now) >= 0 for r in merged))
+        return ok
+
+    pred.authorize = spy
+    policy = LazyBatching(pred, max_batch=64)
+    InferenceServer(policy, SimExecutor(PERF)).run(trace)
+    assert all(checked)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), window_ms=st.sampled_from([2, 20]))
+def test_graphb_respects_window_and_size(seed, window_ms):
+    """No batch is dispatched before the window elapses unless full."""
+    wl = WORKLOADS["resnet"]
+    window = window_ms * 1e-3
+    max_batch = 4
+    trace = poisson_trace(wl, 800, duration=0.05, seed=seed).fresh()
+
+    dispatches = []
+
+    class SpyGraphB(GraphBatching):
+        def next_work(self, now):
+            was_active = self.active is not None and self.active.size > 0
+            work = super().next_work(now)
+            if work is not None and not was_active:
+                sb, _ = work
+                dispatches.append((now, len(sb.live_requests),
+                                   min(r.arrival for r in sb.live_requests)))
+            return work
+
+    policy = SpyGraphB(window, max_batch=max_batch)
+    InferenceServer(policy, SimExecutor(PERF)).run(trace)
+    assert dispatches
+    for now, size, oldest in dispatches:
+        assert size <= max_batch
+        assert size == max_batch or now + 1e-9 >= oldest + window

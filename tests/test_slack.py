@@ -1,0 +1,106 @@
+"""Slack predictor unit tests (paper Eq. 1-2, Algorithm 1)."""
+import numpy as np
+import pytest
+
+from repro.core.request import Request
+from repro.core.slack import SlackPredictor, OracleSlackPredictor
+from repro.serving.npu_model import NPUPerfModel, PAPER_NPU
+from repro.serving.workload import (Workload, NodeDesc, Segment, LengthDist,
+                                    get_workload)
+
+PERF = NPUPerfModel(PAPER_NPU)
+MS = 1e-3
+
+
+def toy_workload(n_nodes=8):
+    """Static graph whose nodes cost ~1ms each (weight-traffic bound)."""
+    wb = 360e9 * (1e-3 - PAPER_NPU.node_overhead)
+    nodes = {f"n{i}": NodeDesc(f"n{i}", flops=0.0, weight_bytes=wb,
+                               act_bytes=0.0) for i in range(n_nodes)}
+    return Workload("toy", nodes, [Segment(tuple(nodes))], kind="static")
+
+
+def mk_static_req(wl, arrival=0.0):
+    seq, pl, cl = wl.build_sequence(0, 0)
+    return Request(workload=wl, arrival=arrival, sequence=seq,
+                   prefix_len=pl, cycle_len=cl)
+
+
+def test_eq1_slack_without_batching():
+    """Paper running example: SLA=30u, T_wait=2u, exec=8u -> slack=20u."""
+    wl = toy_workload(8)
+    pred = SlackPredictor.build([wl], PERF, sla_target=30 * MS)
+    req = mk_static_req(wl)
+    slack = pred.slack(req, [req], now=2 * MS)
+    assert slack == pytest.approx(20 * MS, rel=0.01)
+
+
+def test_eq2_batched_slack_is_sum_of_singles():
+    """Eq. 2: batching with N-1 others subtracts each one's single time."""
+    wl = toy_workload(8)
+    pred = SlackPredictor.build([wl], PERF, sla_target=30 * MS)
+    reqs = [mk_static_req(wl) for _ in range(3)]
+    slack1 = pred.slack(reqs[0], reqs[:1], now=0.0)
+    slack3 = pred.slack(reqs[0], reqs, now=0.0)
+    single = pred.single_remaining(reqs[0])
+    assert slack1 - slack3 == pytest.approx(2 * single, rel=1e-6)
+
+
+def test_slack_shrinks_with_wait_time():
+    wl = toy_workload(4)
+    pred = SlackPredictor.build([wl], PERF, sla_target=30 * MS)
+    req = mk_static_req(wl)
+    s0 = pred.slack(req, [req], now=0.0)
+    s5 = pred.slack(req, [req], now=5 * MS)
+    assert s5 == pytest.approx(s0 - 5 * MS, rel=1e-9)
+
+
+def test_conservative_vs_oracle_ordering():
+    """Conservative slack (sum of singles) <= oracle slack (batched curve)."""
+    wl = get_workload("gnmt")
+    pred = SlackPredictor.build([wl], PERF, sla_target=100 * MS)
+    oracle = OracleSlackPredictor(100 * MS, PERF)
+    rng = np.random.default_rng(0)
+    reqs = [wl.sample_request(rng, 0.0) for _ in range(4)]
+    s_cons = pred.slack(reqs[0], reqs, now=0.0)
+    s_orac = oracle.slack(reqs[0], reqs, now=0.0)
+    assert s_cons <= s_orac + 1e-9
+
+
+def test_dec_timesteps_overprovision():
+    """Predicted remaining decode length uses the N%-quantile, never the
+    request's true (hidden) output length (Algorithm 1 lines 8-9)."""
+    wl = get_workload("gnmt")
+    pred = SlackPredictor.build([wl], PERF, sla_target=1.0, coverage=0.90)
+    dec_ts = pred.dec_timesteps["gnmt"]
+    assert dec_ts == wl.decode_dist.quantile(0.90)
+    rng = np.random.default_rng(1)
+    # find a short-output request: prediction must exceed its true remaining
+    for _ in range(50):
+        req = wl.sample_request(rng, 0.0)
+        if req.decode_len <= dec_ts // 2:
+            break
+    assert req.decode_len <= dec_ts // 2
+    predicted = pred.single_remaining(req)
+    true_nodes = req.sequence[req.idx:]
+    table = pred.tables["gnmt"]
+    true_rem = sum(table[nid] for nid, _ in true_nodes)
+    assert predicted > true_rem     # conservative overprovision
+
+
+def test_authorize_monotone_in_pending():
+    """Adding pending requests can only flip authorize True -> False."""
+    wl = toy_workload(8)
+    pred = SlackPredictor.build([wl], PERF, sla_target=10 * MS)
+    ongoing = [mk_static_req(wl)]
+    pend = [mk_static_req(wl) for _ in range(8)]
+    results = [pred.authorize(ongoing, pend[:k], now=0.0)
+               for k in range(len(pend) + 1)]
+    # once False, stays False
+    seen_false = False
+    for r in results:
+        if seen_false:
+            assert not r
+        seen_false = seen_false or (not r)
+    assert results[0] is True        # no pending: trivially fine
+    assert results[-1] is False      # 9 x ~8ms >> 10ms SLA
