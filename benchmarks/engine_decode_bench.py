@@ -1,0 +1,105 @@
+"""Per-token decode dispatch cost: persistent slot arena vs seed restacking.
+
+The seed engine restacked every layer's full ``max_len`` KV cache across
+the merged sub-batch on EVERY decode node dispatch (an
+O(B x max_len x d_model) copy per layer per token); the arena engine keeps
+caches device-resident in per-layer slot arenas and gathers/scatters rows
+in-jit. This benchmark drives both engines through identical merged decode
+cycles at batch 8 and reports steady-state wall-clock per generated token
+(compile-warmup tokens excluded). The acceptance bar for the arena PR is
+>= 2x.
+
+  PYTHONPATH=src python benchmarks/engine_decode_bench.py \
+      [--arch llama3.2-1b] [--batch 8] [--max-len 256] [--tokens 24]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.request import SubBatch
+from repro.serving.engine import JaxEngine
+from repro.serving.workload import LengthDist, from_model_config
+
+
+def _build_batch(engine, wl, cfg, batch, prompt_len, decode_len, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for _ in range(batch):
+        r = wl.sample_request(rng, 0.0)
+        seq, prefix_len, cycle_len = wl.build_sequence(prompt_len, decode_len)
+        r.sequence, r.prefix_len, r.cycle_len = seq, prefix_len, cycle_len
+        r.prompt_len, r.decode_len = prompt_len, decode_len
+        engine.register(r, rng.integers(2, cfg.vocab_size, size=prompt_len))
+        reqs.append(r)
+    return reqs
+
+
+def bench_mode(mode, cfg, wl, *, batch, max_len, tokens, warmup):
+    engine = JaxEngine(cfg, max_len=max_len, cache_mode=mode,
+                       n_slots=max(batch, 8))
+    reqs = _build_batch(engine, wl, cfg, batch, prompt_len=16,
+                        decode_len=tokens + warmup)
+    # prefill each request to completion of its prefix (emb + P-nodes)
+    n_prefill = 1 + len(engine.kinds)
+    for r in reqs:
+        sb = SubBatch([r])
+        for _ in range(n_prefill):
+            engine.execute(sb, r.next_node_id)
+            sb.advance(0.0)
+    # merged decode: one sub-batch, lockstep cycles of D-nodes + head
+    sb = SubBatch(list(reqs))
+    per_token = []
+    for t in range(tokens + warmup):
+        t0 = time.perf_counter()
+        for _ in range(len(wl.cycle_ids())):
+            engine.execute(sb, sb.node_id)
+            sb.advance(0.0)
+        per_token.append(time.perf_counter() - t0)
+    steady = per_token[warmup:]
+    return float(np.mean(steady)), float(np.min(steady))
+
+
+def run(quick: bool = True) -> dict:
+    args = argparse.Namespace(arch="llama3.2-1b", batch=8, max_len=256,
+                              tokens=12 if quick else 24, warmup=3)
+    return _run(args)
+
+
+def _run(args) -> dict:
+    cfg = get_config(args.arch).reduced()
+    wl = from_model_config(cfg,
+                          prompt_dist=LengthDist((16,), (1.0,)),
+                          decode_dist=LengthDist((4,), (1.0,)))
+    rec = {"arch": args.arch, "batch": args.batch, "max_len": args.max_len}
+    for mode in ("legacy", "arena"):
+        mean_s, min_s = bench_mode(mode, cfg, wl, batch=args.batch,
+                                   max_len=args.max_len, tokens=args.tokens,
+                                   warmup=args.warmup)
+        rec[mode] = {"mean_ms_per_token": mean_s * 1e3,
+                     "min_ms_per_token": min_s * 1e3}
+        print(f"{mode:>7}: {mean_s * 1e3:8.2f} ms/token mean "
+              f"({min_s * 1e3:.2f} min) over {args.tokens} steady tokens")
+    speedup = (rec["legacy"]["mean_ms_per_token"]
+               / rec["arena"]["mean_ms_per_token"])
+    rec["speedup"] = speedup
+    print(f"speedup: {speedup:.1f}x (arena vs seed restacking, "
+          f"batch {args.batch}, max_len {args.max_len})")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--tokens", type=int, default=24,
+                    help="steady-state tokens timed per mode")
+    ap.add_argument("--warmup", type=int, default=3,
+                    help="compile-warmup tokens excluded from timing")
+    _run(ap.parse_args())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+"""LazyBatching reproduction: SLA-aware node-level batching on JAX/Pallas."""

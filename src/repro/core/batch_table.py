@@ -44,10 +44,13 @@ class BatchTable:
         self.stack.append(sb)
         return sb
 
-    def merge_top(self) -> int:
+    def merge_top(self, predicate=None) -> int:
         """Merge the topmost entries while they share a node id (Fig. 10 t=6).
 
-        Returns the number of merges performed.
+        ``predicate`` (optional ``callable(top, below) -> bool``) lets a
+        policy further restrict merges beyond the structural
+        ``mergeable_with`` rule — e.g. cellular batching only merges at
+        weight-shared *cell* nodes. Returns the number of merges performed.
         """
         merges = 0
         while len(self.stack) >= 2:
@@ -58,12 +61,13 @@ class BatchTable:
             if below.size == 0:
                 del self.stack[-2]
                 continue
-            if top.mergeable_with(below, self.max_batch):
-                below.merge(top)
-                self.stack.pop()
-                merges += 1
-            else:
+            if not top.mergeable_with(below, self.max_batch):
                 break
+            if predicate is not None and not predicate(top, below):
+                break
+            below.merge(top)
+            self.stack.pop()
+            merges += 1
         self._drop_empty()
         return merges
 

@@ -145,27 +145,13 @@ class _TableBased(Policy):
         super().__init__(max_batch=max_batch)
         self.table = BatchTable(max_batch=max_batch)
 
-    def _cell_merge_only(self) -> bool:
-        return False
+    # optional callable(top, below) -> bool restricting merges beyond the
+    # structural BatchTable rule (None = paper LazyBatching: always merge)
+    merge_predicate = None
 
     def _merge_top(self):
         """Merge the topmost entries subject to the policy's merge rule."""
-        while len(self.table.stack) >= 2:
-            top, below = self.table.stack[-1], self.table.stack[-2]
-            if top.size == 0:
-                self.table.stack.pop()
-                continue
-            if below.size == 0:
-                del self.table.stack[-2]
-                continue
-            if not top.mergeable_with(below, self.max_batch):
-                break
-            if self._cell_merge_only():
-                wl = top.live_requests[0].workload
-                if not wl.nodes[top.node_id].cell:
-                    break
-            below.merge(top)
-            self.table.stack.pop()
+        self.table.merge_top(self.merge_predicate)
         self.table.pop_if_done()
 
     def _admit(self, now: float):
@@ -197,8 +183,12 @@ class _TableBased(Policy):
 class CellularBatching(_TableBased):
     name = "cellular"
 
-    def _cell_merge_only(self):
-        return True
+    @staticmethod
+    def merge_predicate(top, below):
+        # application-specific baseline: merges permitted only at
+        # weight-shared *cell* nodes [Gao et al.]
+        wl = top.live_requests[0].workload
+        return wl.nodes[top.node_id].cell
 
     def _admit(self, now):
         # iteration-level scheduling: admit new requests unconditionally at

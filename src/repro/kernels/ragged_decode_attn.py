@@ -31,8 +31,9 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            block_t: int, scale: float):
+def _kernel(slot_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+            acc_ref, *, block_t: int, scale: float):
+    del slot_ref          # consumed by the BlockSpec index maps only
     b = pl.program_id(0)
     j = pl.program_id(1)
     nt = pl.num_programs(1)
@@ -88,30 +89,42 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
-def ragged_decode_attention(q, k, v, lengths, *, block_t: int = 512,
+def ragged_decode_attention(q, k, v, lengths, *, slots=None,
+                            block_t: int = 512,
                             interpret: bool | None = None):
-    """q: (B, H, D); k, v: (B, T, KV, D); lengths: (B,) int32 — row i attends
-    to k[i, :lengths[i]]. Returns (B, H, D).
+    """q: (B, H, D); k, v: (N, T, KV, D); lengths: (B,) int32 — row i attends
+    to k[row_i, :lengths[i]]. Returns (B, H, D).
+
+    ``slots`` ((B,) int32, optional) maps query row i to K/V arena row
+    ``slots[i]`` — the zero-copy path for the serving engine's persistent
+    slot arena (N = n_slots >= B): the scalar-prefetched slot vector drives
+    the K/V BlockSpec index maps, so each grid step DMAs exactly the KV
+    block of its request's slot and no (B, T, KV, D) gather is ever
+    materialized. Without ``slots``, row i reads k[i] (N == B).
     """
     B, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
     assert H % KV == 0, (H, KV)
     block_t = min(block_t, T)
     assert T % block_t == 0, (T, block_t)
+    if slots is None:
+        slots = jnp.arange(B, dtype=jnp.int32)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     scale = 1.0 / math.sqrt(D)
 
     kernel = functools.partial(_kernel, block_t=block_t, scale=scale)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
+        num_scalar_prefetch=2,
         grid=(B, T // block_t),
         in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, j, lens: (b, 0, 0)),
-            pl.BlockSpec((1, block_t, KV, D), lambda b, j, lens: (b, j, 0, 0)),
-            pl.BlockSpec((1, block_t, KV, D), lambda b, j, lens: (b, j, 0, 0)),
+            pl.BlockSpec((1, H, D), lambda b, j, slot, lens: (b, 0, 0)),
+            pl.BlockSpec((1, block_t, KV, D),
+                         lambda b, j, slot, lens: (slot[b], j, 0, 0)),
+            pl.BlockSpec((1, block_t, KV, D),
+                         lambda b, j, slot, lens: (slot[b], j, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, H, D), lambda b, j, lens: (b, 0, 0)),
+        out_specs=pl.BlockSpec((1, H, D), lambda b, j, slot, lens: (b, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((H, 1), jnp.float32),
             pltpu.VMEM((H, 1), jnp.float32),
@@ -123,4 +136,4 @@ def ragged_decode_attention(q, k, v, lengths, *, block_t: int = 512,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, H, D), q.dtype),
         interpret=interpret,
-    )(lengths, q, k, v)
+    )(slots, lengths, q, k, v)

@@ -180,13 +180,22 @@ def apply_attention_dense(p: dict, x: jax.Array, cfg, *,
 def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                            cfg, *, window: Optional[int] = None,
                            grouped: bool = False,
-                           use_pallas: bool = False):
+                           use_pallas: bool = False,
+                           slots: Optional[jax.Array] = None):
     """Single-token decode with ragged per-row positions.
 
     x: (B, d); pos: (B,) int32 — the index of the token being generated
     (ragged across the batch: lazily merged requests have different
     progress). cache: {"k": (B, T, KV, D), "v": ...} where T is either the
     max context or the sliding window size (ring buffer when ``window``).
+
+    ``slots`` ((B,) int32, optional): the cache is a persistent slot ARENA
+    of leading size n_slots >= B and batch row i lives in arena row
+    ``slots[i]``. The new k/v token is scattered in-place into the arena
+    (``.at[slots, pos]``), attention reads the gathered rows (or, on the
+    Pallas path, reads the arena directly via slot-indexed BlockSpecs), and
+    the returned cache is the FULL updated arena — no per-request
+    stack/unstack, no host round-trips.
 
     ``grouped`` (§Perf beyond-paper optimization): GQA scores computed per
     KV group via a batched einsum — no ``repeat_kv`` materialization of the
@@ -203,24 +212,25 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     q = apply_rope(q[:, None], pos[:, None], cfg.rope_theta)[:, 0]
     k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
     slot = pos % T if window is not None else pos
-    b_idx = jnp.arange(B)
+    row_idx = slots if slots is not None else jnp.arange(B)
+    rows = (lambda l: l) if slots is None else (lambda l: l[slots])
     quant = "k_scale" in cache
     if quant:
         kq, ks = _quantize_rows(k)
         vq, vs = _quantize_rows(v)
         new_cache = {
-            "k": cache["k"].at[b_idx, slot].set(kq),
-            "v": cache["v"].at[b_idx, slot].set(vq),
-            "k_scale": cache["k_scale"].at[b_idx, slot].set(ks),
-            "v_scale": cache["v_scale"].at[b_idx, slot].set(vs),
+            "k": cache["k"].at[row_idx, slot].set(kq),
+            "v": cache["v"].at[row_idx, slot].set(vq),
+            "k_scale": cache["k_scale"].at[row_idx, slot].set(ks),
+            "v_scale": cache["v_scale"].at[row_idx, slot].set(vs),
         }
-        ck = (new_cache["k"].astype(x.dtype)
-              * new_cache["k_scale"][..., None].astype(x.dtype))
-        cv = (new_cache["v"].astype(x.dtype)
-              * new_cache["v_scale"][..., None].astype(x.dtype))
+        ck = (rows(new_cache["k"]).astype(x.dtype)
+              * rows(new_cache["k_scale"])[..., None].astype(x.dtype))
+        cv = (rows(new_cache["v"]).astype(x.dtype)
+              * rows(new_cache["v_scale"])[..., None].astype(x.dtype))
     else:
-        ck = cache["k"].at[b_idx, slot].set(k)
-        cv = cache["v"].at[b_idx, slot].set(v)
+        new_cache = {"k": cache["k"].at[row_idx, slot].set(k),
+                     "v": cache["v"].at[row_idx, slot].set(v)}
 
     scale = 1.0 / math.sqrt(cfg.head_dim)
     t_idx = jnp.arange(T)[None, :]
@@ -232,11 +242,17 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
 
     if use_pallas and window is None and not quant:
         # TPU target path: ONE ragged-attention kernel for the whole merged
-        # sub-batch (per-row lengths = pos + 1). interpret=True on CPU.
+        # sub-batch (per-row lengths = pos + 1); slot indirection happens
+        # inside the kernel's index maps. interpret=True on CPU.
         from ..kernels.ragged_decode_attn import ragged_decode_attention
-        out = ragged_decode_attention(q, ck, cv, pos + 1)
+        out = ragged_decode_attention(q, new_cache["k"], new_cache["v"],
+                                      pos + 1, slots=slots)
         y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
-        return y, (new_cache if quant else {"k": ck, "v": cv})
+        return y, new_cache
+
+    if not quant:
+        ck = rows(new_cache["k"])
+        cv = rows(new_cache["v"])
 
     if grouped:
         KV, G = cfg.num_kv_heads, cfg.num_heads // cfg.num_kv_heads
@@ -255,7 +271,7 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
         probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
         out = jnp.einsum("bht,bthk->bhk", probs, vf)
     y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
-    return y, (new_cache if quant else {"k": ck, "v": cv})
+    return y, new_cache
 
 
 def init_attention_cache(cfg, batch: int, max_len: int, dtype,
@@ -382,10 +398,14 @@ def apply_mla_dense(p: dict, x: jax.Array, cfg, *, chunk: int = 2048,
 
 
 def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
-                     *, window: Optional[int] = None):
+                     *, window: Optional[int] = None,
+                     slots: Optional[jax.Array] = None):
     """Absorbed-matmul MLA decode over the compressed latent cache.
 
-    cache: {"ckv": (B, T, R), "krope": (B, T, P)}.
+    cache: {"ckv": (B, T, R), "krope": (B, T, P)}. With ``slots`` the cache
+    is a persistent (n_slots, T, ·) arena and batch row i lives in arena
+    row ``slots[i]`` (see ``apply_attention_decode``); the full updated
+    arena is returned.
     """
     m = cfg.mla
     B, d = x.shape
@@ -397,9 +417,13 @@ def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
     krope_t = apply_rope(kv[:, None, None, m.kv_lora_rank:], pos[:, None],
                          cfg.rope_theta)[:, 0, 0]
     slot = pos % T if window is not None else pos
-    b_idx = jnp.arange(B)
-    ckv = cache["ckv"].at[b_idx, slot].set(ckv_t)
-    krope = cache["krope"].at[b_idx, slot].set(krope_t)
+    row_idx = slots if slots is not None else jnp.arange(B)
+    ckv_full = cache["ckv"].at[row_idx, slot].set(ckv_t)
+    krope_full = cache["krope"].at[row_idx, slot].set(krope_t)
+    if slots is None:
+        ckv, krope = ckv_full, krope_full
+    else:
+        ckv, krope = ckv_full[slots], krope_full[slots]
 
     wkv_b_k = p["wkv_b"][..., :m.qk_nope_head_dim]        # (R, H, nope)
     wkv_b_v = p["wkv_b"][..., m.qk_nope_head_dim:]        # (R, H, v)
@@ -418,7 +442,7 @@ def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
     ctx = jnp.einsum("bht,btr->bhr", probs, ckv)
     out = jnp.einsum("bhr,rhv->bhv", ctx, wkv_b_v)
     y = jnp.einsum("bhv,hvd->bd", out, p["wo"])
-    return y, {"ckv": ckv, "krope": krope}
+    return y, {"ckv": ckv_full, "krope": krope_full}
 
 
 def init_mla_cache(cfg, batch: int, max_len: int, dtype,

@@ -65,6 +65,21 @@ def _index(tree, i):
     return jax.tree.map(lambda x: x[i], tree)
 
 
+def _gather_rows(tree, slots):
+    """Select per-batch rows out of a slot arena pytree (no-op w/o slots)."""
+    if slots is None:
+        return tree
+    return jax.tree.map(lambda l: l[slots], tree)
+
+
+def _scatter_rows(arena, rows, slots):
+    """Write updated batch rows back into their arena slots."""
+    if slots is None:
+        return rows
+    return jax.tree.map(lambda a, r: a.at[slots].set(r.astype(a.dtype)),
+                        arena, rows)
+
+
 class Model:
     def __init__(self, cfg: ModelConfig, flags: RuntimeFlags = RuntimeFlags()):
         self.cfg = cfg
@@ -184,29 +199,36 @@ class Model:
             cache = None
         return x, cache
 
-    def apply_block_decode(self, bp: dict, x, cache, pos, kind: str, *, window=None):
+    def apply_block_decode(self, bp: dict, x, cache, pos, kind: str, *,
+                           window=None, slots=None):
+        """One decode step for one block. With ``slots`` ((B,) int32) the
+        cache is a persistent slot arena (leading axis n_slots >= B): rows
+        are gathered / scattered in-place on device and the full updated
+        arena is returned (attention/MLA do the indexed update natively)."""
         cfg, f = self.cfg, self.flags
         if kind == "ssm":
-            h, cache = SSM.apply_ssm_decode(
-                bp["ssm"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, cfg)
-            return x + h, cache
+            h, rows = SSM.apply_ssm_decode(
+                bp["ssm"], L.rms_norm(x, bp["ln1"], cfg.norm_eps),
+                _gather_rows(cache, slots), cfg)
+            return x + h, _scatter_rows(cache, rows, slots)
         if kind == "rec":
-            h, cache = RG.apply_rglru_decode(
-                bp["rec"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, cfg)
+            h, rows = RG.apply_rglru_decode(
+                bp["rec"], L.rms_norm(x, bp["ln1"], cfg.norm_eps),
+                _gather_rows(cache, slots), cfg)
             x = x + h
             x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
-            return x, cache
+            return x, _scatter_rows(cache, rows, slots)
         if kind == "mla":
             h, cache = L.apply_mla_decode(
                 bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos,
-                cfg, window=window)
+                cfg, window=window, slots=slots)
             x = x + h
             x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
             return x, cache
         h, cache = L.apply_attention_decode(
             bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos, cfg,
             window=window, grouped=f.grouped_decode,
-            use_pallas=f.pallas_decode)
+            use_pallas=f.pallas_decode, slots=slots)
         x = x + h
         if "moe" in bp:
             y, _aux = MOE.apply_moe(bp["moe"],

@@ -28,6 +28,12 @@ class Executor:
         """Execute one node for a sub-batch; returns latency in seconds."""
         raise NotImplementedError
 
+    def on_finished(self, reqs: Sequence[Request]) -> None:
+        """Completion hook: the server calls this with every request that
+        finished at the last node boundary, so stateful executors can
+        release per-request resources (e.g. KV-cache arena slots). The
+        analytic simulator keeps no per-request state — default no-op."""
+
 
 class SimExecutor(Executor):
     def __init__(self, perf_model: NPUPerfModel):
@@ -92,7 +98,10 @@ class InferenceServer:
             self.log.busy_time += latency
             self.log.batch_size_sum += sb.size
             now += latency
-            finished.extend(self.policy.work_done(sb, now))
+            done_now = self.policy.work_done(sb, now)
+            if done_now:
+                self.executor.on_finished(done_now)
+            finished.extend(done_now)
             if not drain and now > trace.duration and ai >= len(arrivals):
                 break
 

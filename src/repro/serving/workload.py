@@ -84,6 +84,10 @@ class NodeDesc:
     bytes_per_ctx: float = 0.0
     m_rows: int = 1          # systolic rows contributed per sample (MXU fill)
     cell: bool = False       # weight-shared across unroll steps
+    # execution metadata for real-engine dispatch (set by from_model_config;
+    # empty for the analytic paper workloads, which are never engine-served):
+    phase: str = ""          # "emb" | "prefill" | "decode" | "head"
+    layer: int = -1          # model layer index for prefill/decode nodes
 
     def sample_flops(self, ctx: int) -> float:
         return self.flops + self.flops_per_ctx * ctx
@@ -394,7 +398,8 @@ def from_model_config(cfg: ModelConfig, *, prompt_dist: LengthDist = None,
     nodes: Dict[str, NodeDesc] = {}
 
     d = cfg.d_model
-    emb = NodeDesc("emb", 0.0, d * dtype_bytes * 64, d * dtype_bytes)
+    emb = NodeDesc("emb", 0.0, d * dtype_bytes * 64, d * dtype_bytes,
+                   phase="emb")
     nodes["emb"] = emb
 
     kinds = C._layer_kinds(cfg)
@@ -415,17 +420,19 @@ def from_model_config(cfg: ModelConfig, *, prompt_dist: LengthDist = None,
             pid, 0.0, per_tok.weight_bytes, d * dtype_bytes,
             flops_per_ctx=per_tok.flops / typical_prompt,
             bytes_per_ctx=per_tok.act_bytes / typical_prompt,
-            m_rows=8, cell=True)
+            m_rows=8, cell=True, phase="prefill", layer=i)
         prefill_ids.append(pid)
         did = f"D{i}"
         nodes[did] = NodeDesc(
             did, c1.flops - dflops, c1.weight_bytes,
             c1.act_bytes - dbytes, flops_per_ctx=dflops,
-            bytes_per_ctx=dbytes, m_rows=1, cell=True)
+            bytes_per_ctx=dbytes, m_rows=1, cell=True,
+            phase="decode", layer=i)
         decode_ids.append(did)
     head = NodeDesc("head", 2 * d * cfg.vocab_size,
                     d * cfg.vocab_size * dtype_bytes,
-                    (d + cfg.vocab_size) * dtype_bytes, cell=True)
+                    (d + cfg.vocab_size) * dtype_bytes, cell=True,
+                    phase="head")
     nodes["head"] = head
     return Workload(
     # prefill executes once over the whole prompt (chunked internally)

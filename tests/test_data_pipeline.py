@@ -1,6 +1,8 @@
 """Data pipeline: determinism, shapes, next-token alignment, length stats."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.pipeline import DataConfig, TokenPipeline, make_batch_specs

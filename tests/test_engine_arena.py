@@ -1,0 +1,248 @@
+"""KV-cache slot arena: lifecycle, parity with the legacy path, raggedness.
+
+The arena engine must be a pure performance change: whatever slots requests
+land in and however sub-batches merge, generated tokens must be IDENTICAL
+to the seed per-request padded-cache (stack/unstack) path, which is kept
+as ``cache_mode="legacy"`` exactly for this comparison.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policies import LazyBatching
+from repro.core.request import SubBatch
+from repro.core.slack import SlackPredictor
+from repro.kernels.ragged_decode_attn import ragged_decode_attention
+from repro.serving.engine import JaxEngine
+from repro.serving.npu_model import NPUPerfModel, TPU_V5E
+from repro.serving.server import InferenceServer
+from repro.serving.traffic import Trace
+from repro.serving.workload import LengthDist, from_model_config
+
+
+def _tiny(arch):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, d_model=64, d_ff=128, vocab_size=128,
+                               num_prefix_embeddings=0)
+
+
+def _workload(cfg):
+    return from_model_config(cfg,
+                             prompt_dist=LengthDist((5, 7), (0.5, 0.5)),
+                             decode_dist=LengthDist((2, 3), (0.5, 0.5)))
+
+
+def _mk_req(wl, rng, prompt_len, decode_len):
+    r = wl.sample_request(rng, 0.0)
+    seq, prefix_len, cycle_len = wl.build_sequence(prompt_len, decode_len)
+    r.sequence, r.prefix_len, r.cycle_len = seq, prefix_len, cycle_len
+    r.prompt_len, r.decode_len = prompt_len, decode_len
+    return r
+
+
+def _run_nodes(engine, req, n_nodes=None):
+    """Drive ``req`` alone for ``n_nodes`` nodes (all remaining if None)."""
+    sb = SubBatch([req])
+    steps = 0
+    while not req.done and (n_nodes is None or steps < n_nodes):
+        engine.execute(sb, req.next_node_id)
+        sb.advance(0.0)
+        steps += 1
+
+
+def _serve(arch, mode, n=3, seed=0):
+    cfg = _tiny(arch)
+    rng = np.random.default_rng(seed)
+    wl = _workload(cfg)
+    engine = JaxEngine(cfg, max_len=32, cache_mode=mode, n_slots=8)
+    reqs = []
+    t = 0.0
+    for _ in range(n):
+        t += rng.exponential(0.05)
+        r = wl.sample_request(rng, t)
+        prompt = rng.integers(2, cfg.vocab_size, size=r.prompt_len)
+        engine.register(r, prompt)
+        reqs.append(r)
+    pred = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), 60.0)
+    stats = InferenceServer(LazyBatching(pred, max_batch=3), engine).run(
+        Trace(reqs, t))
+    assert len(stats.finished) == n
+    return engine, reqs
+
+
+# ---------------------------------------------------------------------------
+# Parity: arena vs the seed padded-cache restacking path, token-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "minicpm3-4b",
+                                  "recurrentgemma-9b"])
+def test_arena_matches_legacy_generations(arch):
+    eng_a, reqs_a = _serve(arch, "arena")
+    eng_l, reqs_l = _serve(arch, "legacy")
+    got = [eng_a.states[r.rid].generated for r in reqs_a]
+    ref = [eng_l.states[r.rid].generated for r in reqs_l]
+    assert got == ref, f"{arch}: {got} != {ref}"
+    # every slot returned to the free list once serving drained
+    assert eng_a.slots_in_use == 0
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle across overlapping request lifetimes
+# ---------------------------------------------------------------------------
+
+def test_slot_assignment_release_and_reuse():
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(0)
+    engine = JaxEngine(cfg, max_len=32, cache_mode="arena", n_slots=2)
+
+    ra = _mk_req(wl, rng, 5, 2)
+    rb = _mk_req(wl, rng, 5, 2)
+    rc = _mk_req(wl, rng, 5, 2)
+    for r in (ra, rb, rc):
+        engine.register(r, rng.integers(2, cfg.vocab_size, size=r.prompt_len))
+
+    # slots are lazy: registration alone holds nothing
+    assert engine.slots_in_use == 0
+    n_prefill = 1 + len(engine.kinds)            # emb + P-nodes
+    _run_nodes(engine, ra, n_prefill)
+    _run_nodes(engine, rb, n_prefill)
+    slot_a, slot_b = engine.slot_of(ra), engine.slot_of(rb)
+    assert engine.slots_in_use == 2 and slot_a != slot_b
+
+    # arena full while A and B are both live
+    with pytest.raises(RuntimeError, match="arena exhausted"):
+        _run_nodes(engine, rc, n_prefill)
+
+    # A finishing frees its slot; C then reuses it and generates fine
+    _run_nodes(engine, ra)
+    assert ra.done and engine.slots_in_use == 1
+    rc2 = _mk_req(wl, rng, 5, 2)
+    engine.register(rc2, rng.integers(2, cfg.vocab_size, size=rc2.prompt_len))
+    _run_nodes(engine, rc2)
+    assert rc2.done and engine.states[rc2.rid].generated
+    # on_finished is idempotent with the in-execute release
+    engine.on_finished([ra, rc2])
+    assert engine.slots_in_use == 1              # only B still live
+
+
+def test_arena_auto_grows_when_n_slots_unpinned():
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(3)
+    engine = JaxEngine(cfg, max_len=32)          # n_slots=None -> auto-grow
+    # shrink the arena to 2 slots to exercise growth cheaply
+    engine.n_slots = 2
+    engine._free_slots = [0, 1]
+    engine.arena = [jax.tree.map(lambda l: l[:2], layer)
+                    for layer in engine.arena]
+
+    reqs, prompts = [], []
+    n_prefill = 1 + len(engine.kinds)
+    for _ in range(3):                           # 3 concurrent > 2 slots
+        r = _mk_req(wl, rng, 5, 2)
+        p = rng.integers(2, cfg.vocab_size, size=5)
+        engine.register(r, p)
+        _run_nodes(engine, r, n_prefill)
+        reqs.append(r)
+        prompts.append(p)
+    assert engine.n_slots == 4 and engine.slots_in_use == 3
+    for r, p in zip(reqs, prompts):
+        _run_nodes(engine, r)
+        ref_engine = JaxEngine(cfg, max_len=32, n_slots=4)
+        ref = _mk_req(wl, np.random.default_rng(9), 5, 2)
+        ref_engine.register(ref, p)
+        _run_nodes(ref_engine, ref)
+        assert (engine.states[r.rid].generated
+                == ref_engine.states[ref.rid].generated)
+
+
+# ---------------------------------------------------------------------------
+# Ragged merged decode: members at different pos
+# ---------------------------------------------------------------------------
+
+def test_ragged_merged_decode_matches_isolated():
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(1)
+    engine = JaxEngine(cfg, max_len=32, cache_mode="arena", n_slots=4)
+
+    r1 = _mk_req(wl, rng, 5, 3)
+    r2 = _mk_req(wl, rng, 9, 2)
+    p1 = rng.integers(2, cfg.vocab_size, size=5)
+    p2 = rng.integers(2, cfg.vocab_size, size=9)
+    engine.register(r1, p1)
+    engine.register(r2, p2)
+
+    n_prefill = 1 + len(engine.kinds)
+    cycle = len(wl.cycle_ids())
+    _run_nodes(engine, r1, n_prefill + cycle)     # prefill + 1 decode cycle
+    _run_nodes(engine, r2, n_prefill)             # prefill only
+    assert r1.next_node_id == r2.next_node_id == "D0"
+    assert engine.states[r1.rid].pos != engine.states[r2.rid].pos
+
+    # merged ragged decode until drained (finished members leave the batch)
+    sb = SubBatch([r1, r2])
+    while sb.size:
+        engine.execute(sb, sb.node_id)
+        sb.advance(0.0)
+    got1 = engine.states[r1.rid].generated
+    got2 = engine.states[r2.rid].generated
+
+    for prompt, n_tok, got in ((p1, 3, got1), (p2, 2, got2)):
+        ref_engine = JaxEngine(cfg, max_len=32, cache_mode="arena")
+        ref = _mk_req(wl, np.random.default_rng(9), len(prompt), n_tok)
+        ref_engine.register(ref, prompt)
+        _run_nodes(ref_engine, ref)
+        assert got == ref_engine.states[ref.rid].generated
+
+
+# ---------------------------------------------------------------------------
+# Engine-level Pallas arena path: slot-indexed kernel wired into merged
+# ragged decode must reproduce the plain arena path (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def test_engine_pallas_arena_decode_matches_plain():
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    toks = {}
+    for pallas in (False, True):
+        rng = np.random.default_rng(2)
+        engine = JaxEngine(cfg, max_len=32, cache_mode="arena", n_slots=4,
+                           pallas=pallas)
+        r1 = _mk_req(wl, rng, 5, 3)
+        r2 = _mk_req(wl, rng, 7, 2)
+        engine.register(r1, rng.integers(2, cfg.vocab_size, size=5))
+        engine.register(r2, rng.integers(2, cfg.vocab_size, size=7))
+        n_prefill = 1 + len(engine.kinds)
+        _run_nodes(engine, r1, n_prefill + len(wl.cycle_ids()))
+        _run_nodes(engine, r2, n_prefill)
+        sb = SubBatch([r1, r2])             # merged, ragged pos
+        while sb.size:
+            engine.execute(sb, sb.node_id)
+            sb.advance(0.0)
+        toks[pallas] = [engine.states[r.rid].generated for r in (r1, r2)]
+    assert toks[True] == toks[False]
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel slot indirection == explicit gather (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def test_ragged_kernel_slot_indirection():
+    rng = np.random.default_rng(0)
+    B, N, T, H, KV, D = 3, 6, 32, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, H, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((N, T, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((N, T, KV, D)), jnp.float32)
+    lengths = jnp.asarray([5, 17, 32], jnp.int32)
+    slots = jnp.asarray([4, 0, 2], jnp.int32)
+    out = ragged_decode_attention(q, k, v, lengths, slots=slots,
+                                  interpret=True)
+    ref = ragged_decode_attention(q, k[slots], v[slots], lengths,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

@@ -93,6 +93,7 @@ print("MINI-DRYRUN-OK")
 """
 
 
+@pytest.mark.slow
 def test_mini_dryrun_subprocess():
     """End-to-end lower+compile of a reduced arch on a 16-device host mesh
     (subprocess: the 512-device flag must not leak into this test session)."""

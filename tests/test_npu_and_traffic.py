@@ -1,6 +1,8 @@
 """NPU latency model + traffic generator tests."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.serving import (get_workload, poisson_trace, bursty_trace,

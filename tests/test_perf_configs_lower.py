@@ -3,6 +3,8 @@
 import subprocess
 import sys
 
+import pytest
+
 _SNIPPET = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=32"
@@ -44,6 +46,7 @@ print("GRANITE-PERF-OK")
 """
 
 
+@pytest.mark.slow
 def test_perf_configs_lower():
     r = subprocess.run([sys.executable, "-c", _SNIPPET],
                        capture_output=True, text=True, timeout=900,

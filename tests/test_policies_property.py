@@ -11,6 +11,9 @@ Plus LazyBatching-specific: under the predictor's own latency model, any
 request admitted *while the server was idle-free* is never predicted to
 violate at admission time (conservative authorization).
 """
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Serial, GraphBatching, CellularBatching, LazyBatching,
