@@ -12,7 +12,7 @@ from repro.core.policies import GraphBatching, LazyBatching
 from repro.core.request import Request
 from repro.core.slack import SlackPredictor
 from repro.serving.npu_model import NPUPerfModel
-from repro.serving.server import InferenceServer, SimExecutor
+from repro.serving.server import InferenceServer, SimExecutor, run_label
 from repro.serving.traffic import Trace
 from repro.serving.workload import NodeDesc, Segment, Workload
 
@@ -34,16 +34,17 @@ class TimelineExecutor(SimExecutor):
         self.policy = policy
         self.events = []
 
-    def execute(self, sb, node_id):
-        lat = super().execute(sb, node_id)
+    def execute_run(self, sb, node_ids):
+        total, lats = super().execute_run(sb, node_ids)
         rids = sorted(r.rid for r in sb.live_requests)
-        self.events.append((node_id, rids))
+        for node_id in node_ids:
+            self.events.append((node_id, rids))
         stack = getattr(getattr(self.policy, "table", None), "stack", None)
         desc = ("  stack: " + " | ".join(
             f"{s.node_id}:{sorted(r.rid for r in s.live_requests)}"
             for s in stack)) if stack else ""
-        print(f"  exec node {node_id} for reqs {rids}{desc}")
-        return lat
+        print(f"  exec {run_label(node_ids)} for reqs {rids}{desc}")
+        return total, lats
 
 
 def run(policy_name: str):

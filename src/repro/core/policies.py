@@ -15,8 +15,27 @@
 All policies speak one interface consumed by both the discrete-event
 simulator and the real-JAX serving engine:
 
-    enqueue(req, now); next_work(now) -> (SubBatch, node_id) | None;
-    work_done(sub_batch, now) -> finished requests; next_timer(now).
+    enqueue(req, now); next_work(now) -> (SubBatch, run) | None;
+    work_done(sub_batch, now, n_nodes) -> finished requests; next_timer(now).
+
+``run`` is a tuple of *consecutive* node ids committed for dispatch in one
+go (the run-commit contract): the scheduler decides per node but commits
+the maximal span during which no scheduling decision could change the
+outcome, so the executor may fuse the whole run into one device dispatch.
+Each policy commits exactly the span to its next possible merge /
+preemption point:
+
+  * ``Serial`` / ``GraphBatching`` never merge into or preempt a running
+    batch — they commit whole remaining graphs (capped at the
+    earliest-finishing member, so completions stay run-boundary events);
+  * ``CellularBatching`` / ``LazyBatching`` stop *before* the node the
+    stack entry below is parked at (where a catch-up merge is possible —
+    for cellular only when that node is a weight-shared cell) and stop
+    *after* each decode-cycle boundary, the point where admission and
+    preemption are re-evaluated. On static (non-cyclic) graphs they keep
+    single-node commits: the paper's node granularity, unchanged.
+
+A single-node run is always a valid degenerate commit.
 """
 from __future__ import annotations
 
@@ -27,7 +46,7 @@ from .batch_table import BatchTable
 from .request import Request, SubBatch
 from .slack import SlackPredictor
 
-Work = Tuple[SubBatch, str]
+Work = Tuple[SubBatch, Tuple[str, ...]]
 
 
 def _group_pushable(reqs: List[Request]) -> List[List[Request]]:
@@ -52,7 +71,13 @@ class Policy:
     def next_work(self, now: float) -> Optional[Work]:
         raise NotImplementedError
 
-    def work_done(self, sb: SubBatch, now: float) -> List[Request]:
+    def commit_run(self, sb: SubBatch) -> Tuple[str, ...]:
+        """Run of node ids committed for the active batch (degenerate
+        default: one node — correct for any policy, fuses nothing)."""
+        return (sb.node_id,)
+
+    def work_done(self, sb: SubBatch, now: float,
+                  n_nodes: int = 1) -> List[Request]:
         raise NotImplementedError
 
     def next_timer(self, now: float) -> Optional[float]:
@@ -77,10 +102,14 @@ class Serial(Policy):
             req = self.queue.popleft()
             req.t_first_issue = now
             self.active = SubBatch([req])
-        return self.active, self.active.node_id
+        return self.active, self.commit_run(self.active)
 
-    def work_done(self, sb, now):
-        finished = sb.advance(now)
+    def commit_run(self, sb):
+        # no batching, no merging: the whole remaining graph is one run
+        return sb.run_nodes()
+
+    def work_done(self, sb, now, n_nodes=1):
+        finished = sb.advance_n(n_nodes, now)
         if sb.size == 0:
             self.active = None
         return finished
@@ -112,7 +141,7 @@ class GraphBatching(Policy):
 
     def next_work(self, now):
         if self.active is not None and self.active.size:
-            return self.active, self.active.node_id
+            return self.active, self.commit_run(self.active)
         if not self._batch_ready(now):
             return None
         reqs = self._head_group()
@@ -120,10 +149,15 @@ class GraphBatching(Policy):
             self.queue.remove(r)
             r.t_first_issue = now
         self.active = SubBatch(reqs)
-        return self.active, self.active.node_id
+        return self.active, self.commit_run(self.active)
 
-    def work_done(self, sb, now):
-        finished = sb.advance(now)
+    def commit_run(self, sb):
+        # whole-graph batches never merge mid-flight or preempt: commit the
+        # full remaining segment (capped at the earliest-finishing member)
+        return sb.run_nodes()
+
+    def work_done(self, sb, now, n_nodes=1):
+        finished = sb.advance_n(n_nodes, now)
         if sb.size == 0:
             self.active = None
         return finished
@@ -168,10 +202,43 @@ class _TableBased(Policy):
         active = self.table.active
         if active is None or active.size == 0:
             return None
-        return active, active.node_id
+        return active, self.commit_run(active)
 
-    def work_done(self, sb, now):
-        finished = sb.advance(now)
+    # does reaching ``node_id`` open a merge opportunity for this policy?
+    # (LazyBatching merges at any shared node — paper §IV-B)
+    def _merge_possible_at(self, wl, node_id: str) -> bool:
+        return True
+
+    def commit_run(self, sb):
+        """Span to the next possible merge / preemption point.
+
+        Static graphs keep the paper's single-node granularity (admission
+        and preemption are re-evaluated at every layer). Cyclic graphs
+        commit at most one *segment* — a run ends at every segment-final
+        node (the prefill/decode boundary and each decode cycle's last
+        node), the iteration-level points where admission, preemption, and
+        SLA slack are re-checked, so the slack burned by a committed run is
+        bounded by one prefill segment or one decode cycle (inside the
+        predictor's dec_timesteps overprovision) — and always stops
+        *before* the node the stack entry directly below is parked at,
+        where a catch-up merge could fire.
+        """
+        wl = sb.live_requests[0].workload
+        if wl.cycle_end_id() is None:
+            return (sb.node_id,)
+        stop_before = set()
+        stack = self.table.stack
+        if len(stack) >= 2:
+            below = stack[-2]
+            if (below.size
+                    and below.live_requests[0].workload is wl
+                    and self._merge_possible_at(wl, below.node_id)):
+                stop_before.add(below.node_id)
+        return sb.run_nodes(stop_before=stop_before,
+                            stop_after=wl.commit_boundaries())
+
+    def work_done(self, sb, now, n_nodes=1):
+        finished = sb.advance_n(n_nodes, now)
         self._merge_top()
         return finished
 
@@ -189,6 +256,9 @@ class CellularBatching(_TableBased):
         # weight-shared *cell* nodes [Gao et al.]
         wl = top.live_requests[0].workload
         return wl.nodes[top.node_id].cell
+
+    def _merge_possible_at(self, wl, node_id):
+        return wl.nodes[node_id].cell
 
     def _admit(self, now):
         # iteration-level scheduling: admit new requests unconditionally at

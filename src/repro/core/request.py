@@ -97,14 +97,51 @@ class SubBatch:
 
     def advance(self, now: float) -> List[Request]:
         """Advance every live member one node; return newly finished."""
+        return self.advance_n(1, now)
+
+    def advance_n(self, n: int, now: float) -> List[Request]:
+        """Advance every live member ``n`` nodes (one committed run);
+        return newly finished requests. ``n`` must not exceed any member's
+        remaining node count — runs are committed via :meth:`run_nodes`,
+        which caps at the earliest-finishing member."""
         finished = []
         for r in self.live_requests:
-            r.advance()
+            for _ in range(n):
+                r.advance()
             if r.done:
                 r.t_finish = now
                 finished.append(r)
         self.requests = self.live_requests
         return finished
+
+    def run_nodes(self, *, stop_before=(), stop_after=()) -> Tuple[str, ...]:
+        """Maximal run of consecutive node ids the batch can commit.
+
+        All live members share the same forward node-id stream from their
+        common current node (same workload, shared cycle ids), so the run is
+        read off any member and capped at ``min`` remaining nodes — no
+        member ever finishes *mid*-run, only exactly at a run boundary.
+
+        ``stop_before``: node ids the run must not enter (the entry below
+        on the BatchTable stack sits at such a node — stopping there keeps
+        every merge opportunity a single-node scheduler would have seen).
+        ``stop_after``: node ids the run ends on *inclusively* (decode-cycle
+        boundaries — the scheduler re-evaluates admission/preemption there).
+        The first node is always included: a single-node run is the
+        degenerate (always valid) case.
+        """
+        live = self.live_requests
+        n = min(len(r.sequence) - r.idx for r in live)
+        r0 = live[0]
+        ids = [nid for nid, _ in r0.sequence[r0.idx:r0.idx + n]]
+        run = [ids[0]]
+        for nid in ids[1:]:
+            if nid in stop_before:
+                break
+            run.append(nid)
+            if nid in stop_after:
+                break
+        return tuple(run)
 
     def mergeable_with(self, other: "SubBatch", max_batch: int) -> bool:
         a, b = self.node_id, other.node_id

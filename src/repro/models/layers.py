@@ -181,7 +181,8 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
                            cfg, *, window: Optional[int] = None,
                            grouped: bool = False,
                            use_pallas: bool = False,
-                           slots: Optional[jax.Array] = None):
+                           slots: Optional[jax.Array] = None,
+                           ctx: Optional[int] = None):
     """Single-token decode with ragged per-row positions.
 
     x: (B, d); pos: (B,) int32 — the index of the token being generated
@@ -195,15 +196,29 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     (``.at[slots, pos]``), attention reads the gathered rows (or, on the
     Pallas path, reads the arena directly via slot-indexed BlockSpecs), and
     the returned cache is the FULL updated arena — no per-request
-    stack/unstack, no host round-trips.
+    stack/unstack, no host round-trips. Batch-bucketed dispatch pads rows
+    with the out-of-bounds slot ``n_slots``: their scatters are DROPPED
+    (mode="drop" — a padded row must never corrupt a live slot) while
+    gathers/kernel reads use indices clamped in-bounds, so padded rows
+    read some live row and produce garbage that the caller discards.
 
     ``grouped`` (§Perf beyond-paper optimization): GQA scores computed per
     KV group via a batched einsum — no ``repeat_kv`` materialization of the
     H/KV-times-inflated cache, and the contraction batches over the kv-head
     dim so a kv-sharded cache keeps the whole attention local per device.
+
+    ``ctx`` (STATIC context bound, arena path only): gather/score only the
+    first ``ctx`` time rows instead of the full ``max_len`` — the caller
+    passes a power-of-two bucket covering ``max(pos) + 1``, so the per-token
+    gather and attention cost scale with actual context, not arena
+    capacity. Rows beyond each row's ``pos`` are masked exactly as before;
+    bit-identical to the unbounded read.
     """
     B, d = x.shape
     T = cache["k"].shape[1]
+    if ctx is not None and (window is not None or slots is None
+                            or ctx >= T):
+        ctx = None                                # bound only the arena path
     q = jnp.einsum("bd,dhk->bhk", x, p["wq"])
     k = jnp.einsum("bd,dhk->bhk", x, p["wk"])
     v = jnp.einsum("bd,dhk->bhk", x, p["wv"])
@@ -213,27 +228,32 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
     k = apply_rope(k[:, None], pos[:, None], cfg.rope_theta)[:, 0]
     slot = pos % T if window is not None else pos
     row_idx = slots if slots is not None else jnp.arange(B)
-    rows = (lambda l: l) if slots is None else (lambda l: l[slots])
+    if slots is None:
+        rows = lambda l: l
+    else:
+        gslots = jnp.minimum(slots, cache["k"].shape[0] - 1)
+        rows = ((lambda l: l[gslots]) if ctx is None
+                else (lambda l: l[gslots, :ctx]))
     quant = "k_scale" in cache
     if quant:
         kq, ks = _quantize_rows(k)
         vq, vs = _quantize_rows(v)
         new_cache = {
-            "k": cache["k"].at[row_idx, slot].set(kq),
-            "v": cache["v"].at[row_idx, slot].set(vq),
-            "k_scale": cache["k_scale"].at[row_idx, slot].set(ks),
-            "v_scale": cache["v_scale"].at[row_idx, slot].set(vs),
+            "k": cache["k"].at[row_idx, slot].set(kq, mode="drop"),
+            "v": cache["v"].at[row_idx, slot].set(vq, mode="drop"),
+            "k_scale": cache["k_scale"].at[row_idx, slot].set(ks, mode="drop"),
+            "v_scale": cache["v_scale"].at[row_idx, slot].set(vs, mode="drop"),
         }
         ck = (rows(new_cache["k"]).astype(x.dtype)
               * rows(new_cache["k_scale"])[..., None].astype(x.dtype))
         cv = (rows(new_cache["v"]).astype(x.dtype)
               * rows(new_cache["v_scale"])[..., None].astype(x.dtype))
     else:
-        new_cache = {"k": cache["k"].at[row_idx, slot].set(k),
-                     "v": cache["v"].at[row_idx, slot].set(v)}
+        new_cache = {"k": cache["k"].at[row_idx, slot].set(k, mode="drop"),
+                     "v": cache["v"].at[row_idx, slot].set(v, mode="drop")}
 
     scale = 1.0 / math.sqrt(cfg.head_dim)
-    t_idx = jnp.arange(T)[None, :]
+    t_idx = jnp.arange(T if ctx is None else ctx)[None, :]
     if window is None:
         valid = t_idx <= pos[:, None]
     else:
@@ -246,7 +266,8 @@ def apply_attention_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
         # inside the kernel's index maps. interpret=True on CPU.
         from ..kernels.ragged_decode_attn import ragged_decode_attention
         out = ragged_decode_attention(q, new_cache["k"], new_cache["v"],
-                                      pos + 1, slots=slots)
+                                      pos + 1,
+                                      slots=None if slots is None else gslots)
         y = jnp.einsum("bhk,hkd->bd", out, p["wo"])
         return y, new_cache
 
@@ -399,17 +420,22 @@ def apply_mla_dense(p: dict, x: jax.Array, cfg, *, chunk: int = 2048,
 
 def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
                      *, window: Optional[int] = None,
-                     slots: Optional[jax.Array] = None):
+                     slots: Optional[jax.Array] = None,
+                     ctx: Optional[int] = None):
     """Absorbed-matmul MLA decode over the compressed latent cache.
 
     cache: {"ckv": (B, T, R), "krope": (B, T, P)}. With ``slots`` the cache
     is a persistent (n_slots, T, ·) arena and batch row i lives in arena
     row ``slots[i]`` (see ``apply_attention_decode``); the full updated
-    arena is returned.
+    arena is returned. ``ctx`` bounds the gathered/scored time rows to a
+    static context bucket exactly as in ``apply_attention_decode``.
     """
     m = cfg.mla
     B, d = x.shape
     T = cache["ckv"].shape[1]
+    if ctx is not None and (window is not None or slots is None
+                            or ctx >= T):
+        ctx = None
     q_nope, q_rope = _mla_q(p, x[:, None], cfg, pos[:, None])
     q_nope, q_rope = q_nope[:, 0], q_rope[:, 0]           # (B, H, ·)
     kv = x @ p["wkv_a"]
@@ -418,12 +444,18 @@ def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
                          cfg.rope_theta)[:, 0, 0]
     slot = pos % T if window is not None else pos
     row_idx = slots if slots is not None else jnp.arange(B)
-    ckv_full = cache["ckv"].at[row_idx, slot].set(ckv_t)
-    krope_full = cache["krope"].at[row_idx, slot].set(krope_t)
+    ckv_full = cache["ckv"].at[row_idx, slot].set(ckv_t, mode="drop")
+    krope_full = cache["krope"].at[row_idx, slot].set(krope_t, mode="drop")
     if slots is None:
         ckv, krope = ckv_full, krope_full
     else:
-        ckv, krope = ckv_full[slots], krope_full[slots]
+        # clamp for the gather: batch-bucket padding rows carry the
+        # out-of-bounds slot n_slots (scatter dropped above)
+        gslots = jnp.minimum(slots, ckv_full.shape[0] - 1)
+        if ctx is None:
+            ckv, krope = ckv_full[gslots], krope_full[gslots]
+        else:
+            ckv, krope = ckv_full[gslots, :ctx], krope_full[gslots, :ctx]
 
     wkv_b_k = p["wkv_b"][..., :m.qk_nope_head_dim]        # (R, H, nope)
     wkv_b_v = p["wkv_b"][..., m.qk_nope_head_dim:]        # (R, H, v)
@@ -432,7 +464,7 @@ def apply_mla_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array, cfg,
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
     scores = (jnp.einsum("bhr,btr->bht", q_lat, ckv)
               + jnp.einsum("bhp,btp->bht", q_rope, krope)).astype(jnp.float32) * scale
-    t_idx = jnp.arange(T)[None, :]
+    t_idx = jnp.arange(T if ctx is None else ctx)[None, :]
     if window is None:
         valid = t_idx <= pos[:, None]
     else:

@@ -66,18 +66,28 @@ def _index(tree, i):
 
 
 def _gather_rows(tree, slots):
-    """Select per-batch rows out of a slot arena pytree (no-op w/o slots)."""
+    """Select per-batch rows out of a slot arena pytree (no-op w/o slots).
+
+    Slot indices are clamped in-bounds: batch-bucketed dispatch pads rows
+    with the out-of-bounds slot ``n_slots`` so their scatters drop — the
+    clamped gather just reads *some* live row, whose garbage output is
+    masked/discarded downstream.
+    """
     if slots is None:
         return tree
-    return jax.tree.map(lambda l: l[slots], tree)
+    return jax.tree.map(
+        lambda l: l[jnp.minimum(slots, l.shape[0] - 1)], tree)
 
 
 def _scatter_rows(arena, rows, slots):
-    """Write updated batch rows back into their arena slots."""
+    """Write updated batch rows back into their arena slots. Out-of-bounds
+    slots (batch-bucket padding rows) are dropped, not clamped — a padded
+    row must never corrupt a live slot."""
     if slots is None:
         return rows
-    return jax.tree.map(lambda a, r: a.at[slots].set(r.astype(a.dtype)),
-                        arena, rows)
+    return jax.tree.map(
+        lambda a, r: a.at[slots].set(r.astype(a.dtype), mode="drop"),
+        arena, rows)
 
 
 class Model:
@@ -200,11 +210,13 @@ class Model:
         return x, cache
 
     def apply_block_decode(self, bp: dict, x, cache, pos, kind: str, *,
-                           window=None, slots=None):
+                           window=None, slots=None, ctx=None):
         """One decode step for one block. With ``slots`` ((B,) int32) the
         cache is a persistent slot arena (leading axis n_slots >= B): rows
         are gathered / scattered in-place on device and the full updated
-        arena is returned (attention/MLA do the indexed update natively)."""
+        arena is returned (attention/MLA do the indexed update natively).
+        ``ctx`` (static int) bounds attention reads to a context bucket —
+        see ``layers.apply_attention_decode``."""
         cfg, f = self.cfg, self.flags
         if kind == "ssm":
             h, rows = SSM.apply_ssm_decode(
@@ -221,14 +233,14 @@ class Model:
         if kind == "mla":
             h, cache = L.apply_mla_decode(
                 bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos,
-                cfg, window=window, slots=slots)
+                cfg, window=window, slots=slots, ctx=ctx)
             x = x + h
             x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
             return x, cache
         h, cache = L.apply_attention_decode(
             bp["attn"], L.rms_norm(x, bp["ln1"], cfg.norm_eps), cache, pos, cfg,
             window=window, grouped=f.grouped_decode,
-            use_pallas=f.pallas_decode, slots=slots)
+            use_pallas=f.pallas_decode, slots=slots, ctx=ctx)
         x = x + h
         if "moe" in bp:
             y, _aux = MOE.apply_moe(bp["moe"],
@@ -238,6 +250,58 @@ class Model:
         else:
             x = x + L.apply_mlp(bp["mlp"], L.rms_norm(x, bp["ln2"], cfg.norm_eps))
         return x, cache
+
+    # ------------------------------------------------------------------
+    # Stacked-span application (run-fused serving dispatch)
+    # ------------------------------------------------------------------
+    def apply_span_decode(self, stacked_bp, x, flat_arena, pos, kind, *,
+                          offs, window=None, slots=None, ctx=None):
+        """One decode step through a *span* of same-kind layers as a single
+        ``lax.scan`` over stacked per-layer params.
+
+        ``flat_arena`` is the span's slot arena with the layer axis FOLDED
+        into the slot axis — leaves are ``(span_len * n_slots, ...)`` and
+        layer k's batch rows live at ``slots + offs[k]`` (``offs[k] =
+        k * n_slots``). The arena rides the scan CARRY, so XLA aliases it
+        in place across layers: each step only gathers the B live rows it
+        reads and scatters the rows it writes — no per-layer arena slice
+        is ever materialized (scanning the arena as xs/ys would copy every
+        layer's full cache twice per step).
+        """
+        def body(carry, xs):
+            x, arena = carry
+            bp, off = xs
+            x, arena = self.apply_block_decode(bp, x, arena, pos, kind,
+                                               window=window,
+                                               slots=slots + off, ctx=ctx)
+            return (x, arena), None
+
+        (x, flat_arena), _ = jax.lax.scan(body, (x, flat_arena),
+                                          (stacked_bp, offs))
+        return x, flat_arena
+
+    def apply_span_prefill(self, stacked_bp, flat_arena, x, kind, *,
+                           offs, window=None, positions=None, write=None):
+        """Full-prompt prefill through a span of same-kind layers in one
+        scanned dispatch (arena flat-layout as in ``apply_span_decode``).
+        ``write(flat_arena, cache, row_idx) -> flat_arena`` stores each
+        layer's prefill cache into its members' arena rows inside the scan
+        body (the caller owns the slot layout)."""
+        def body(carry, xs):
+            x, arena = carry
+            bp, off = xs
+            x, cache = self.apply_block_dense(bp, x, kind, return_cache=True,
+                                              window=window,
+                                              positions=positions)
+            if isinstance(cache, tuple):          # moe: (kv_cache, aux)
+                cache = cache[0]
+            if write is not None:
+                arena = write(arena, cache, off)
+            return (x, arena), None
+
+        (x, flat_arena), _ = jax.lax.scan(body, (x, flat_arena),
+                                          (stacked_bp, offs))
+        return x, flat_arena
 
     # ------------------------------------------------------------------
     # Stacked execution

@@ -1,12 +1,12 @@
-"""Real-JAX node-level serving engine with a persistent KV-cache slot arena.
+"""Real-JAX node-level serving engine: slot-arena caches + fused node runs.
 
 The discrete-event simulator (``server.py``) models latency analytically;
-this engine executes the SAME policies against the ACTUAL model: every
-``(sub_batch, node_id)`` the scheduler emits dispatches a jitted per-layer
-function on device and mutates real request state (activations, KV caches,
-generated tokens). It is the existence proof of the paper's claim that
-node-level preemption needs no hardware support — preemption is just
-"which jitted node fn we dispatch next" (DESIGN.md §3).
+this engine executes the SAME policies against the ACTUAL model. Scheduling
+stays node-granular — every ``(sub_batch, node_id)`` the scheduler emits is
+a valid dispatch — but execution is *run*-granular: when a policy commits a
+run of consecutive nodes (the run-commit contract, ``core.policies``), the
+engine fuses the whole run into a handful of jitted dispatches instead of
+one Python→device round-trip per layer. Decide per node, execute per run.
 
 Node ids come from ``workload.from_model_config`` (each ``NodeDesc``
 carries ``phase``/``layer`` metadata the dispatcher keys on):
@@ -15,53 +15,76 @@ carries ``phase``/``layer`` metadata the dispatcher keys on):
   * ``P<i>``  — prefill layer i over the prompt (writes the KV cache
                directly into the request's arena slot),
   * ``D<i>``  — decode layer i for ONE token, *batched with ragged per-row
-               positions* across the merged sub-batch (each member joined
-               at a different time — the ragged-decode situation the
-               Pallas kernel targets),
+               positions* across the merged sub-batch,
   * ``head``  — unembed + greedy-sample the next token.
 
-Cache arena (the serving hot path)
-----------------------------------
-Per-request caches live in a **preallocated, device-resident slot arena**:
-at engine init, each layer gets one cache pytree with leading axis
-``n_slots`` — time-axis leaves (``_TIME_AXIS_KEYS``: k/v/ckv/krope) are
-``(n_slots, max_len, ...)``, recurrent/conv state leaves are
-``(n_slots, ...)``. Slot lifecycle:
+Cache arena (PR 1, unchanged semantics)
+---------------------------------------
+Per-request caches live in a preallocated, device-resident slot arena;
+requests own a lazily-assigned slot for their lifetime, prefill writes
+into the slot in-jit, decode gathers/scatters rows by a ``(B,)`` slot
+vector, and slots are released on completion (idempotently again via
+``Executor.on_finished``). Storage is now **per-span, flat-indexed**:
+consecutive same-(kind, window) layers form a span whose arena pytree
+folds the layer axis into the slot axis — leaves are
+``(span_len * n_slots, max_len, ...)`` for time-axis keys (k/v/ckv/krope)
+and ``(span_len * n_slots, ...)`` for recurrent state, with layer k's
+batch rows at ``slots + k * n_slots``. A whole span is then one
+``lax.scan`` over stacked params with the arena riding the carry (aliased
+in place by XLA): each layer step gathers/scatters ONLY its B live rows —
+scanning the arena as scan inputs/outputs instead would materialize two
+full per-layer cache copies per step. Homogeneous models are a single
+span; hybrid models get maximal same-kind spans (their span param stacks
+duplicate block params once at init — the price of scanned dispatch over
+a heterogeneous stack).
 
-  * a request is **assigned a free slot lazily** at its first cache-touching
-    node (prefill) and owns it for its lifetime,
-  * prefill **writes into the slot in-place** inside the jitted layer fn
-    (time leaves zero-padded to ``max_len`` first, so slot reuse never
-    leaks a previous occupant's rows),
-  * decode nodes **gather** member rows by a ``(B,)`` slot-index vector,
-    run the batched block, and **scatter** updated rows back — on the
-    Pallas ragged-attention path the kernel reads the arena directly via
-    slot-indexed BlockSpecs and only the single new (k, v) token is
-    scattered,
-  * the slot is **released** when the request executes its final node (and
-    idempotently again via ``Executor.on_finished`` from the server loop).
+Fused node-run execution (this PR's hot path)
+---------------------------------------------
+``execute_run(sb, node_ids)`` parses a committed run into phase chunks and
+dispatches each chunk as ONE jitted call:
 
-No per-dispatch ``jnp.stack`` over per-request cache pytrees, no full-cache
-host round-trips: the per-token dispatch cost is O(B·d) for activations
-instead of O(B·max_len·d_model) per layer for cache restacking (the arena
-is additionally donated to each jitted fn, so the scatter updates it
-in-place rather than copying all n_slots rows). Measured with
-``benchmarks/engine_decode_bench.py`` (llama3.2-1b reduced, batch 8,
-max_len=256, CPU backend): 63.3 ms/token seed restacking -> 17.4 ms/token
-arena, a 3.6x speedup (see README §Serving). ``cache_mode="legacy"``
-keeps the seed stack/unstack path for parity tests and benchmarking.
+  * **decode megasteps** — a chunk ``D_i..D_j[+head]`` runs as a single
+    jitted ``lax.scan`` over the stacked span params + span arenas (the
+    whole arena list is passed and donated as one pytree), with the head
+    (final norm + unembed + argmax) folded into the same dispatch. A
+    multi-cycle run loops cycle megasteps *without host sync*: each
+    cycle's sampled tokens stay on device and feed the next cycle's
+    embedding directly.
+  * **bucketed batched prefill** — ``emb + P0..Pk`` prefills all members
+    of a sub-batch together: prompts are right-padded to power-of-two
+    length buckets (capped at ``max_len``) and same-bucket requests are
+    batched; causal attention masks the padding (a valid row only ever
+    attends to valid rows), so cache rows are bit-identical to isolated
+    prefill, and rows past a request's true length are overwritten by
+    decode before they can be read. Enabled for attention-family stacks
+    (dense/MLA); MoE/SSM/recurrent stacks prefill per-request but still
+    fused across layers in one scanned dispatch.
+  * **batch-size bucketing** — decode batches are padded to the next
+    power of two so recompiles are bounded by O(log max_batch) instead of
+    one per distinct membership size. Padded rows carry an out-of-bounds
+    slot sentinel: their arena scatters are dropped (mode="drop"), their
+    gathers are clamped, and their outputs discarded on host.
+  * **async dispatch** — no per-node ``block_until_ready``; dispatches
+    inside a run chain on device and the engine synchronizes ONCE at the
+    run boundary (the scheduler-visible point), so the server clock
+    measures run latency, not per-node latency.
+
+``execute(sb, node_id)`` (single-node dispatch, one blocking device call
+per node) remains fully supported — it is the degenerate run and the
+bit-exactness reference. ``cache_mode="legacy"`` keeps the seed
+stack/unstack path for parity tests; generated tokens are bit-exact
+across legacy / arena / fused-run for the same trace (enforced by
+``tests/test_engine_arena.py`` and ``benchmarks/engine_decode_bench.py``).
 
 Token semantics are exact: the prompt's last token is fed as the first
 decode-cycle input (prefill covers ``prompt[:-1]``), so every token is
-processed exactly once. Decode nodes execute truly batched (stacked
-activation rows + ragged ``pos``); prefill nodes run per-request (prompts
-have unequal lengths — padding buys nothing on the CPU demo and the
-simulator covers the batching economics).
+processed exactly once.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -71,36 +94,24 @@ from ..configs.base import ModelConfig
 from ..core.request import Request, SubBatch
 from ..models import layers as L
 from ..models.cost import _layer_kinds
-from ..models.model import Model, RuntimeFlags, _index
+from ..models.model import Model, RuntimeFlags, _index, _stack
 from .server import Executor
 
 # cache leaves whose leading (post-batch) axis is the KV time axis
 _TIME_AXIS_KEYS = ("k", "v", "ckv", "krope")
+
+# slot sentinel for batch-bucket padding rows: far out of bounds for any
+# arena size, so scatters drop and clamped gathers read an arbitrary live
+# row (output discarded). Must never be reachable by arena growth.
+_PAD_SLOT = np.int32(2 ** 30)
 
 
 def _is_time_leaf(path) -> bool:
     return str(getattr(path[-1], "key", "")) in _TIME_AXIS_KEYS
 
 
-def _write_slot(arena, cache, slot):
-    """Write one request's prefill cache into arena row ``slot`` (in-jit).
-
-    ``cache`` leaves carry a batch=1 leading dim from the per-request
-    prefill; time-axis leaves are zero-padded up to the arena's max_len so
-    the whole row is overwritten (slot reuse cannot leak stale tokens —
-    the padded region is masked at decode anyway, but zeroing keeps rows
-    bit-identical to a fresh engine's).
-    """
-    def write(path, a, c):
-        if c.ndim >= 1 and c.shape[0] == 1:
-            c = c[0]                              # drop the batch=1 dim
-        if _is_time_leaf(path):
-            pad_n = a.shape[1] - c.shape[0]
-            assert pad_n >= 0, (c.shape, a.shape)
-            c = jnp.pad(c, [(0, pad_n)] + [(0, 0)] * (c.ndim - 1))
-        return a.at[slot].set(c.astype(a.dtype))
-
-    return jax.tree_util.tree_map_with_path(write, arena, cache)
+def _pow2(n: int) -> int:
+    return 1 << max(0, n - 1).bit_length()
 
 
 class EngineState:
@@ -109,6 +120,7 @@ class EngineState:
     def __init__(self, prompt_tokens: np.ndarray):
         assert len(prompt_tokens) >= 2, "engine needs prompts of >= 2 tokens"
         self.prompt = jnp.asarray(prompt_tokens, jnp.int32)
+        self.prompt_np = np.asarray(prompt_tokens, np.int32)
         self.prefill_len = int(len(prompt_tokens) - 1)
         self.x: Optional[jax.Array] = None       # activations in flight
         self.caches: Dict[int, object] = {}      # legacy mode: layer -> cache
@@ -123,6 +135,10 @@ class JaxEngine(Executor):
     ``cache_mode``: "arena" (default) uses the persistent slot arena;
     "legacy" keeps per-request caches and restacks them per dispatch (the
     seed behavior — kept for parity tests and the decode benchmark).
+    ``fused``: fuse committed multi-node runs into scanned megastep
+    dispatches (defaults to on for arena mode; ``False`` forces one
+    dispatch per node even under the run-commit server loop — the PR-1
+    arena baseline).
     ``pallas``: route batched ragged decode attention through the Pallas
     kernel where the config allows (dense attention, no sliding window).
     Defaults to on for accelerator backends, off for CPU (interpret mode
@@ -131,7 +147,8 @@ class JaxEngine(Executor):
 
     def __init__(self, cfg: ModelConfig, *, max_len: int = 512, seed: int = 0,
                  dtype=jnp.float32, n_slots: Optional[int] = None,
-                 cache_mode: str = "arena", pallas: Optional[bool] = None):
+                 cache_mode: str = "arena", pallas: Optional[bool] = None,
+                 fused: Optional[bool] = None):
         assert cache_mode in ("arena", "legacy"), cache_mode
         # explicit n_slots pins the arena (exhaustion raises); the default
         # starts at 32 slots and doubles on demand, so any admission policy
@@ -151,8 +168,10 @@ class JaxEngine(Executor):
         self.kinds = _layer_kinds(cfg)
         self.max_len = max_len
         self.cache_mode = cache_mode
+        self.fused = (cache_mode == "arena") if fused is None else fused
         self.states: Dict[int, EngineState] = {}
         self.nodes_executed = 0
+        self.runs_executed = 0
         self._jit_cache: Dict[tuple, object] = {}
         # batched decode activations keyed by sub-batch membership: while a
         # merged batch advances in lockstep its (B, d) activation tensor is
@@ -161,19 +180,60 @@ class JaxEngine(Executor):
         self._xbatch: Optional[tuple] = None     # (rids tuple, (B, d) array)
         # (B,) slot-index device vector, also keyed by membership: slots are
         # pinned for a request's lifetime, so the vector is invariant until
-        # the sub-batch composition changes
-        self._slotbatch: Optional[tuple] = None  # (rids tuple, (B,) array)
+        # the sub-batch composition changes ((rids, padded_B, array))
+        self._slotbatch: Optional[tuple] = None
+        # device-resident (Bp,) position / last-token vectors carried across
+        # fused runs (keyed by (rids, Bp)): while membership is stable a new
+        # run needs NO host->device upload — pos advances by a lazy device
+        # add, tokens chain from the previous head. Host state (st.pos /
+        # st.next_token) stays authoritative; any membership change or
+        # single-node dispatch invalidates and rebuilds from it.
+        self._posbatch: Optional[tuple] = None
+        self._tokbatch: Optional[tuple] = None
+        self._chunk_cache: Dict[tuple, list] = {}
         self.n_slots = n_slots
-        self._free_slots: List[int] = list(range(n_slots))
+        self._free_slots: deque = deque(range(n_slots))
         self._slot: Dict[int, int] = {}          # rid -> slot
-        if cache_mode == "arena":
-            self.arena: List[object] = [
-                self.model._init_layer_cache(kind, n_slots, max_len,
-                                             window=None)
-                for kind in self.kinds
-            ]
+        # maximal same-(kind, window) layer spans; arenas + param stacks
+        # are stored per span so a span is one lax.scan
+        spans: List[tuple] = []
+        for i in range(len(self.kinds)):
+            kind, window = self._kind_window(i)
+            if spans and spans[-1][0] == kind and spans[-1][1] == window:
+                spans[-1] = (kind, window, spans[-1][2], i)
+            else:
+                spans.append((kind, window, i, i))
+        self._spans = spans
+        self._layer_loc = {}
+        for si, (_, _, lo, hi) in enumerate(spans):
+            for i in range(lo, hi + 1):
+                self._layer_loc[i] = (si, i - lo)
+        if cfg.hybrid is None:
+            # homogeneous stack: params are already stacked (L, ...)
+            self._span_params = [self.params["blocks"]]
         else:
-            self.arena = []
+            self._span_params = [
+                _stack([self._layer_params(i) for i in range(lo, hi + 1)])
+                for (_, _, lo, hi) in spans
+            ]
+        # span arenas in FLAT layout: the layer axis is folded into the slot
+        # axis — leaves are (span_len * n_slots, ...) and layer k of a span
+        # owns rows [k * n_slots, (k+1) * n_slots). Fused span scans thread
+        # the arena through the scan carry (aliased in place) and address
+        # layer k's batch rows as ``slots + k * n_slots`` — only the B live
+        # rows are ever gathered/scattered, never a full layer slice.
+        self._offs_cache: tuple = (None, None)    # n_slots -> per-span offs
+        if cache_mode == "arena":
+            self.arenas: List[object] = []
+            for (kind, window, lo, hi) in spans:
+                one = self.model._init_layer_cache(self.kinds[lo], n_slots,
+                                                   max_len, window=None)
+                span_len = hi - lo + 1
+                self.arenas.append(jax.tree.map(
+                    lambda l: jnp.zeros((span_len * l.shape[0],)
+                                        + l.shape[1:], l.dtype), one))
+        else:
+            self.arenas = []
 
     # ------------------------------------------------------------------
     # Request registration / slot lifecycle
@@ -196,24 +256,39 @@ class JaxEngine(Executor):
                         f"JaxEngine(n_slots=...) above the policy's max "
                         f"concurrent batch size")
                 self._grow_arena()
-            slot = self._free_slots.pop(0)
+            slot = self._free_slots.popleft()
             self._slot[req.rid] = slot
         return slot
 
     def _grow_arena(self):
         """Double the arena's slot capacity (rare; amortized O(1) per
-        request — existing rows keep their slot ids, new rows are zero)."""
+        request — existing rows keep their slot ids, new rows are zero).
+        Flat layout: unfold the layer axis, widen the slot axis, refold."""
         old = self.n_slots
-        self.arena = [
-            jax.tree.map(lambda l: jnp.concatenate(
-                [l, jnp.zeros_like(l)], axis=0), layer)
-            for layer in self.arena
-        ]
+
+        def grow(l):
+            span_len = l.shape[0] // old
+            r = l.reshape(span_len, old, *l.shape[1:])
+            r = jnp.concatenate([r, jnp.zeros_like(r)], axis=1)
+            return r.reshape(span_len * 2 * old, *l.shape[1:])
+
+        self.arenas = [jax.tree.map(grow, span) for span in self.arenas]
         self.n_slots = 2 * old
         self._free_slots.extend(range(old, self.n_slots))
 
+    def _offs(self):
+        """Per-span device vectors of layer row offsets (k * n_slots) in
+        the flat arena layout; rebuilt only when the arena grows."""
+        if self._offs_cache[0] != self.n_slots:
+            self._offs_cache = (self.n_slots, [
+                jnp.asarray(np.arange(hi - lo + 1, dtype=np.int32)
+                            * self.n_slots)
+                for (_, _, lo, hi) in self._spans
+            ])
+        return self._offs_cache[1]
+
     def release_slot(self, req: Request):
-        """Return ``req``'s slot to the free list (idempotent)."""
+        """Return ``req``'s slot to the free pool (idempotent)."""
         slot = self._slot.pop(req.rid, None)
         if slot is not None:
             self._free_slots.append(slot)
@@ -252,11 +327,16 @@ class JaxEngine(Executor):
             x = jnp.stack([st.x for st in sts])
         return rids, x
 
-    def _batched_slots(self, reqs, rids):
-        if self._slotbatch is None or self._slotbatch[0] != rids:
-            self._slotbatch = (rids, jnp.asarray(
-                [self.slot_of(r) for r in reqs], jnp.int32))
-        return self._slotbatch[1]
+    def _batched_slots(self, reqs, rids, padded_to: Optional[int] = None):
+        """(B,)-or-(Bp,) slot vector for the membership; padding rows get
+        the out-of-bounds sentinel (scatters dropped, gathers clamped)."""
+        Bp = padded_to or len(reqs)
+        if self._slotbatch is None or self._slotbatch[0] != rids \
+                or self._slotbatch[1] != Bp:
+            slots = [self.slot_of(r) for r in reqs]
+            slots += [_PAD_SLOT] * (Bp - len(slots))
+            self._slotbatch = (rids, Bp, jnp.asarray(slots, jnp.int32))
+        return self._slotbatch[2]
 
     # ------------------------------------------------------------------
     def _layer_params(self, i: int):
@@ -294,7 +374,7 @@ class JaxEngine(Executor):
         raise KeyError(f"unknown node {node_id!r}")
 
     # ------------------------------------------------------------------
-    # Jitted node functions
+    # Jitted node functions (single-node dispatch)
     # ------------------------------------------------------------------
     def _fn_prefill(self, i: int):
         key = ("prefill", i)
@@ -313,23 +393,35 @@ class JaxEngine(Executor):
             self._jit_cache[key] = jax.jit(fn)
         return self._jit_cache[key]
 
-    def _fn_prefill_arena(self, i: int):
-        key = ("prefill_arena", i)
+    def _fn_prefill_arena(self, si: int):
+        """Per-node prefill into arena span ``si``; the flat row index
+        ``slot + k * n_slots`` is a traced scalar so all span layers share
+        one compiled fn."""
+        key = ("prefill_arena", si)
         if key not in self._jit_cache:
-            kind, window = self._kind_window(i)
+            kind, window, _, _ = self._spans[si]
 
-            def fn(bp, arena, x, slot):
+            def fn(bp, arena, x, row):
                 positions = jnp.arange(x.shape[1])[None, :]
                 x, cache = self.model.apply_block_dense(
                     bp, x, kind, return_cache=True, window=window,
                     positions=positions)
                 if isinstance(cache, tuple):      # moe: (kv_cache, aux)
                     cache = cache[0]
-                return x, _write_slot(arena, cache, slot)
+
+                def write(path, a, c):
+                    if c.ndim >= 1 and c.shape[0] == 1:
+                        c = c[0]                  # drop the batch=1 dim
+                    if _is_time_leaf(path):
+                        pad_n = a.shape[1] - c.shape[0]
+                        c = jnp.pad(c, [(0, pad_n)] + [(0, 0)] * (c.ndim - 1))
+                    return a.at[row].set(c.astype(a.dtype))
+
+                return x, jax.tree_util.tree_map_with_path(write, arena, cache)
 
             # the donated arena is updated in-place instead of copying all
-            # n_slots rows per dispatch (backends without donation support
-            # fall back to a copy with a warning)
+            # rows per dispatch (backends without donation support fall
+            # back to a copy with a warning)
             self._jit_cache[key] = jax.jit(fn, donate_argnums=(1,))
         return self._jit_cache[key]
 
@@ -345,18 +437,20 @@ class JaxEngine(Executor):
             self._jit_cache[key] = jax.jit(fn)
         return self._jit_cache[key]
 
-    def _fn_decode_arena(self, i: int):
-        key = ("decode_arena", i)
+    def _fn_decode_arena(self, si: int):
+        """Per-node decode against arena span ``si``: the flat layout makes
+        a layer dispatch identical to the PR-1 per-layer arena dispatch —
+        gather/scatter B rows at ``slots + k * n_slots`` on the donated
+        span arena, no layer slice materialized."""
+        key = ("decode_arena", si)
         if key not in self._jit_cache:
-            kind, window = self._kind_window(i)
+            kind, window, _, _ = self._spans[si]
 
-            def fn(bp, arena, x, pos, slots):
+            def fn(bp, arena, x, pos, slots, off):
                 return self.model.apply_block_decode(
-                    bp, x, arena, pos, kind, window=window, slots=slots)
+                    bp, x, arena, pos, kind, window=window,
+                    slots=slots + off)
 
-            # the donated arena is updated in-place instead of copying all
-            # n_slots rows per dispatch (backends without donation support
-            # fall back to a copy with a warning)
             self._jit_cache[key] = jax.jit(fn, donate_argnums=(1,))
         return self._jit_cache[key]
 
@@ -370,6 +464,304 @@ class JaxEngine(Executor):
             self._jit_cache["head"] = jax.jit(fn)
         return self._jit_cache["head"]
 
+    # ------------------------------------------------------------------
+    # Jitted run functions (fused dispatch)
+    # ------------------------------------------------------------------
+    def _sub_span(self, si: int, a: int, b: int, span_params, offs):
+        """Span ``si``'s stacked params + flat-arena row offsets restricted
+        to layers [a, b] (static slices, resolved at trace time)."""
+        _, _, lo, hi = self._spans[si]
+        sp, off = span_params[si], offs[si]
+        if a == lo and b == hi:
+            return sp, off
+        sl = slice(a - lo, b - lo + 1)
+        return jax.tree.map(lambda l: l[sl], sp), off[sl]
+
+    def _fn_mega(self, lo: int, hi: int, with_head: bool,
+                 ctx: Optional[int] = None):
+        """One fused decode dispatch for layers [lo, hi] (+ folded head).
+
+        ``lo == 0``: the input is the (Bp,) token vector — the decode-cycle
+        entry embedding happens inside the dispatch. ``lo == -1``: bare
+        head (input is the (Bp, d) activation). Each overlapped span is one
+        ``lax.scan`` over its stacked params with the flat span arena
+        threaded through the carry; the whole arena list is donated as one
+        pytree and returned updated in place. ``ctx`` (static power-of-two
+        context bucket covering every member's position) bounds attention
+        gathers/scores to actual context instead of arena capacity —
+        bit-identical, and the reason fused decode beats per-node dispatch
+        by more than just Python overhead.
+        """
+        key = ("mega", lo, hi, with_head, ctx)
+        if key not in self._jit_cache:
+
+            def fn(params, span_params, arenas, entry, pos, slots, offs):
+                x = (self.model.embed(params, entry) if lo == 0 else entry)
+                new_arenas = list(arenas)
+                if lo >= 0:
+                    for si, (kind, window, slo, shi) in enumerate(self._spans):
+                        a, b = max(lo, slo), min(hi, shi)
+                        if a > b:
+                            continue
+                        sub_bp, sub_off = self._sub_span(
+                            si, a, b, span_params, offs)
+                        x, new_arenas[si] = self.model.apply_span_decode(
+                            sub_bp, x, new_arenas[si], pos, kind,
+                            offs=sub_off, window=window, slots=slots,
+                            ctx=ctx)
+                if with_head:
+                    h = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+                    out = jnp.argmax(self.model.unembed(params, h),
+                                     axis=-1).astype(jnp.int32)
+                else:
+                    out = x
+                return out, new_arenas
+
+            self._jit_cache[key] = jax.jit(fn, donate_argnums=(2,))
+        return self._jit_cache[key]
+
+    def _fn_prefill_run(self, lo: int, hi: int, embed: bool):
+        """One fused prefill dispatch for layers [lo, hi] over a (B, S)
+        token bucket (``embed=True``) or a (B, S, d) activation batch.
+        Every member's layer-k cache rows are written into its arena rows
+        (``slots + k * n_slots``) inside the scan body (padding rows carry
+        the OOB sentinel slot — their writes drop)."""
+        key = ("prefill_run", lo, hi, embed)
+        if key not in self._jit_cache:
+
+            def fn(params, span_params, arenas, entry, slots, offs):
+                x = self.model.embed(params, entry) if embed else entry
+                positions = jnp.arange(x.shape[1])[None, :]
+
+                def write(arena, cache, off):
+                    row_idx = slots + off
+
+                    def w(path, a, c):
+                        if _is_time_leaf(path):
+                            pad_n = a.shape[1] - c.shape[1]
+                            c = jnp.pad(c, [(0, 0), (0, pad_n)]
+                                        + [(0, 0)] * (c.ndim - 2))
+                        return a.at[row_idx].set(c.astype(a.dtype),
+                                                 mode="drop")
+                    return jax.tree_util.tree_map_with_path(w, arena, cache)
+
+                new_arenas = list(arenas)
+                for si, (kind, window, slo, shi) in enumerate(self._spans):
+                    a, b = max(lo, slo), min(hi, shi)
+                    if a > b:
+                        continue
+                    sub_bp, sub_off = self._sub_span(
+                        si, a, b, span_params, offs)
+                    x, new_arenas[si] = self.model.apply_span_prefill(
+                        sub_bp, new_arenas[si], x, kind, offs=sub_off,
+                        window=window, positions=positions, write=write)
+                return x, new_arenas
+
+            self._jit_cache[key] = jax.jit(fn, donate_argnums=(2,))
+        return self._jit_cache[key]
+
+    # ------------------------------------------------------------------
+    # Fused run execution
+    # ------------------------------------------------------------------
+    def _chunk_run(self, wl, node_ids):
+        """Split a committed run into fusable phase chunks:
+        ("prefill", [(phase, layer), ...]) or ("decode", lo, hi, with_head)
+        — a bare head is ("decode", -1, -1, True). Memoized per node-id
+        tuple (decode cycles repeat the same run every token); the cache
+        value pins the workload object so its id() cannot be recycled by
+        a different workload while the entry lives."""
+        ck = (id(wl), tuple(node_ids))
+        cached = self._chunk_cache.get(ck)
+        if cached is not None:
+            return cached[1]
+        metas = [self._node_meta(wl, nid) for nid in node_ids]
+        chunks = []
+        i = 0
+        while i < len(metas):
+            ph, layer = metas[i]
+            if ph in ("emb", "prefill"):
+                j = i
+                while j < len(metas) and metas[j][0] in ("emb", "prefill"):
+                    j += 1
+                chunks.append(("prefill", metas[i:j]))
+                i = j
+            elif ph == "decode":
+                lo = hi = layer
+                j = i + 1
+                while (j < len(metas) and metas[j][0] == "decode"
+                       and metas[j][1] == hi + 1):
+                    hi += 1
+                    j += 1
+                with_head = j < len(metas) and metas[j][0] == "head"
+                if with_head:
+                    j += 1
+                chunks.append(("decode", lo, hi, with_head))
+                i = j
+            else:                                 # bare head
+                chunks.append(("decode", -1, -1, True))
+                i += 1
+        self._chunk_cache[ck] = (wl, chunks)
+        return chunks
+
+    def _prefill_groups(self, reqs, sts):
+        """Group sub-batch members for batched prefill.
+
+        Attention-family stacks (dense/MLA) bucket by power-of-two padded
+        prompt length (and pad the group's batch to a power of two):
+        bounded recompiles, one dispatch per bucket. Other stacks (MoE
+        routing, SSM/recurrent state scans don't tolerate tail padding)
+        prefill per-request at exact length — still one fused dispatch per
+        request instead of one per layer.
+        """
+        bucketable = set(self.kinds) <= {"dense", "mla"}
+        groups: Dict[tuple, list] = {}
+        for r, st in zip(reqs, sts):
+            if bucketable:
+                key = (min(_pow2(st.prefill_len), self.max_len),)
+            else:
+                key = (st.prefill_len, r.rid)
+            groups.setdefault(key, []).append((r, st))
+        return [(members, key[0]) for key, members in groups.items()]
+
+    def _run_prefill_chunk(self, reqs, sts, metas):
+        has_emb = metas[0][0] == "emb"
+        layers = [l for ph, l in metas if ph == "prefill"]
+        last = bool(layers) and layers[-1] == len(self.kinds) - 1
+        if has_emb and not layers:
+            for st in sts:                        # bare emb node
+                st.x = self.model.embed(self.params,
+                                        st.prompt[None, :st.prefill_len])
+            return
+        if has_emb:
+            fn = self._fn_prefill_run(0, layers[-1], embed=True)
+            for members, Lb in self._prefill_groups(reqs, sts):
+                Bg = len(members)
+                Bp = _pow2(Bg)
+                toks = np.zeros((Bp, Lb), np.int32)
+                slots = np.full((Bp,), _PAD_SLOT, np.int32)
+                for bi, (r, st) in enumerate(members):
+                    toks[bi, :st.prefill_len] = st.prompt_np[:st.prefill_len]
+                    slots[bi] = self.slot_of(r)   # may grow the arena first
+                x, self.arenas = fn(self.params, self._span_params,
+                                    self.arenas, jnp.asarray(toks),
+                                    jnp.asarray(slots), self._offs())
+                for bi, (r, st) in enumerate(members):
+                    st.x = (None if last
+                            else x[bi:bi + 1, :st.prefill_len])
+        else:
+            # resumed mid-prefill (st.x in flight): per-request fused span
+            fn = self._fn_prefill_run(layers[0], layers[-1], embed=False)
+            for r, st in zip(reqs, sts):
+                slots = jnp.asarray([self.slot_of(r)], jnp.int32)
+                st.x, self.arenas = fn(self.params, self._span_params,
+                                       self.arenas, st.x, slots,
+                                       self._offs())
+                if last:
+                    st.x = None
+
+    def execute_run(self, sb: SubBatch, node_ids: Sequence[str]):
+        """Execute a committed run; returns ``(latency, None)`` — per-node
+        latency is unobservable inside fused dispatches, by design."""
+        if self.cache_mode != "arena" or not self.fused or len(node_ids) == 1:
+            return super().execute_run(sb, node_ids)
+        t0 = time.perf_counter()
+        reqs = sb.live_requests
+        wl = reqs[0].workload
+        sts = [self.states[r.rid] for r in reqs]
+        rids = tuple(r.rid for r in reqs)
+        if self._xbatch is not None and self._xbatch[0] != rids:
+            # another sub-batch is parked mid-cycle: its activations live
+            # only in the batched cache — flush rows to per-request state
+            # before this run's epilogue clobbers it
+            self._flush_xbatch()
+        B = len(reqs)
+        Bp = _pow2(B)
+        pos0 = None
+        slots = None
+        toks_dev = None                           # device (Bp,) sampled toks
+        x_dev = None                              # device (Bp, d) mid-cycle x
+        head_toks: List[jax.Array] = []
+        n_heads = 0
+        chunks = self._chunk_run(wl, node_ids)
+        # one static context bucket covers every decode chunk of the run.
+        # A chunk preceded by h heads reads rows <= pos0 + h, so the
+        # deepest read index is pos0 + n_heads - 1 when the run ends on a
+        # head, and pos0 + n_heads when a trailing headless decode chunk
+        # continues past the run's last head — ctx must exceed it
+        n_cycles = sum(1 for ch in chunks if ch[0] == "decode" and ch[3])
+        ctx = None
+        if any(ch[0] == "decode" for ch in chunks):
+            trailing = chunks[-1][0] == "decode" and not chunks[-1][3]
+            deepest = (max(st.pos for st in sts) + n_cycles
+                       + (1 if trailing else 0))
+            ctx = min(_pow2(deepest), self.max_len)
+        bkey = (rids, Bp)
+        for ch in chunks:
+            if ch[0] == "prefill":
+                self._run_prefill_chunk(reqs, sts, ch[1])
+                continue
+            _, lo, hi, with_head = ch
+            if slots is None:
+                slots = self._batched_slots(reqs, rids, padded_to=Bp)
+                if self._posbatch is not None and self._posbatch[0] == bkey:
+                    pos0 = self._posbatch[1]      # device-carried positions
+                else:
+                    pos0 = jnp.asarray([st.pos for st in sts]
+                                       + [0] * (Bp - B), jnp.int32)
+            pos = pos0 if n_heads == 0 else pos0 + n_heads
+            if lo == 0:
+                if toks_dev is None and self._tokbatch is not None \
+                        and self._tokbatch[0] == bkey:
+                    toks_dev = self._tokbatch[1]  # device-carried tokens
+                entry = (toks_dev if toks_dev is not None else
+                         jnp.asarray([st.next_token for st in sts]
+                                     + [0] * (Bp - B), jnp.int32))
+            else:
+                entry = x_dev if x_dev is not None \
+                    else self._entry_x(reqs, sts, B, Bp)
+            fn = self._fn_mega(lo, hi, with_head, ctx)
+            out, self.arenas = fn(self.params, self._span_params,
+                                  self.arenas, entry, pos, slots,
+                                  self._offs())
+            if with_head:
+                head_toks.append(out)
+                toks_dev = out
+                x_dev = None
+                n_heads += 1
+            else:
+                x_dev = out
+        # ---- run boundary: the ONLY sync point -----------------------
+        if head_toks:
+            for arr in [np.asarray(t) for t in head_toks]:
+                for bi, st in enumerate(sts):
+                    st.next_token = int(arr[bi])
+                    st.generated.append(st.next_token)
+                    st.pos += 1
+        if n_heads and pos0 is not None:
+            self._posbatch = (bkey, pos0 + n_heads)
+            self._tokbatch = (bkey, toks_dev)
+        if x_dev is not None:
+            self._xbatch = (rids, x_dev[:B])      # run ended mid-cycle
+        else:
+            self._xbatch = None
+        jax.block_until_ready(self.arenas)
+        self.nodes_executed += len(node_ids)
+        self.runs_executed += 1
+        n = len(node_ids)
+        for r in reqs:
+            if r.idx + n >= len(r.sequence):      # final node at run end
+                self.release_slot(r)
+        return time.perf_counter() - t0, None
+
+    def _entry_x(self, reqs, sts, B, Bp):
+        rids, x = self._batched_x(reqs, sts)
+        self._xbatch = (rids, x)
+        if Bp > B:
+            x = jnp.pad(x, [(0, Bp - B), (0, 0)])
+        return x
+
+    # ------------------------------------------------------------------
+    # Single-node dispatch (degenerate run; bit-exactness reference)
     # ------------------------------------------------------------------
     def execute(self, sb: SubBatch, node_id: str) -> float:
         t0 = time.perf_counter()
@@ -386,11 +778,13 @@ class JaxEngine(Executor):
             bp = self._layer_params(i)
             last = (i == len(self.kinds) - 1)
             if self.cache_mode == "arena":
-                fn = self._fn_prefill_arena(i)
+                si, k = self._layer_loc[i]
+                fn = self._fn_prefill_arena(si)
                 for r in reqs:
                     st = self.state(r)
                     slot = self.slot_of(r)    # may grow the arena: resolve
-                    st.x, self.arena[i] = fn(bp, self.arena[i], st.x, slot)
+                    st.x, self.arenas[si] = fn(bp, self.arenas[si], st.x,
+                                               slot + k * self.n_slots)
                     outs.append(st.x)
                     if last:                      # prefill done
                         st.x = None
@@ -413,9 +807,11 @@ class JaxEngine(Executor):
             pos = jnp.asarray([st.pos for st in sts], jnp.int32)
             if self.cache_mode == "arena":
                 rids, x = self._batched_x(reqs, sts, fresh)
-                fn = self._fn_decode_arena(i)
+                si, k = self._layer_loc[i]
+                fn = self._fn_decode_arena(si)
                 slots = self._batched_slots(reqs, rids)
-                x, self.arena[i] = fn(bp, self.arena[i], x, pos, slots)
+                x, self.arenas[si] = fn(bp, self.arenas[si], x, pos, slots,
+                                        k * self.n_slots)
                 self._xbatch = (rids, x)
             else:
                 if fresh is not None:
@@ -445,6 +841,9 @@ class JaxEngine(Executor):
                 st.next_token = int(toks[bi])
                 st.generated.append(st.next_token)
                 st.pos += 1
+            # single-node head advanced host state: the device-carried
+            # run vectors are stale now
+            self._posbatch = self._tokbatch = None
         else:
             raise KeyError(f"unknown node {node_id!r}")
         self.nodes_executed += 1

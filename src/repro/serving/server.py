@@ -1,26 +1,27 @@
 """Discrete-event inference server (paper Fig. 9 serving architecture).
 
-One backend processor executes one (sub-)batched *node* at a time; the
-scheduler (policy) is consulted at every node boundary and on arrivals when
-idle — exactly the node-level execution model the paper builds on. The
-executor is pluggable:
+One backend processor executes one committed *run* of consecutive nodes at
+a time for one (sub-)batch; the scheduler (policy) is consulted at every
+run boundary and on arrivals when idle. Policies commit exactly the span
+to their next possible merge/preemption point (see ``core.policies``), so
+scheduling stays node-granular where it matters while the executor is free
+to fuse a whole run into one device dispatch. The executor is pluggable:
 
   * ``SimExecutor``  — analytical NPU latency model (paper's methodology),
   * the real-JAX engine in ``repro.serving.engine`` implements the same
-    interface and measures wall-clock node latencies on device.
+    interface; it fuses committed decode runs into single scanned
+    dispatches and measures *run* (not per-node) wall-clock latency.
 """
 from __future__ import annotations
 
-import heapq
-from dataclasses import dataclass
-from typing import List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.policies import Policy
 from ..core.request import Request, SubBatch
 from .metrics import ServeStats
 from .npu_model import NPUPerfModel
 from .traffic import Trace
-from .workload import NodeDesc
 
 
 class Executor:
@@ -28,9 +29,24 @@ class Executor:
         """Execute one node for a sub-batch; returns latency in seconds."""
         raise NotImplementedError
 
+    def execute_run(self, sb: SubBatch,
+                    node_ids: Sequence[str]) -> Tuple[float, Optional[List[float]]]:
+        """Execute a committed run of consecutive nodes for one sub-batch.
+
+        Returns ``(total_latency, per_node_latencies)``. Executors that
+        fuse the run into fewer device dispatches than nodes return
+        ``(total, None)`` — per-node latency is unobservable inside a fused
+        dispatch, and the server clock only needs run latency (sync points
+        live at scheduler-visible run boundaries). The default loops
+        :meth:`execute` per node, the degenerate single-dispatch-per-node
+        behavior.
+        """
+        lats = [self.execute(sb, nid) for nid in node_ids]
+        return sum(lats), lats
+
     def on_finished(self, reqs: Sequence[Request]) -> None:
         """Completion hook: the server calls this with every request that
-        finished at the last node boundary, so stateful executors can
+        finished at the last run boundary, so stateful executors can
         release per-request resources (e.g. KV-cache arena slots). The
         analytic simulator keeps no per-request state — default no-op."""
 
@@ -46,16 +62,58 @@ class SimExecutor(Executor):
         ctxs = [r.next_ctx for r in reqs]
         return self.perf.node_latency(node, ctxs)
 
+    def execute_run(self, sb, node_ids):
+        # per-node ctx is read at the node's own offset into each member's
+        # sequence (requests only advance at run boundaries, but attention
+        # context still grows per node *within* the run)
+        reqs = sb.live_requests
+        wl = reqs[0].workload
+        lats = []
+        for k, nid in enumerate(node_ids):
+            ctxs = [r.sequence[r.idx + k][1] for r in reqs]
+            lats.append(self.perf.node_latency(wl.nodes[nid], ctxs))
+        return sum(lats), lats
+
+
+@dataclass
+class NodeLat:
+    """Per-node-id (or per-fused-run-span) latency accumulator."""
+    count: int = 0
+    total: float = 0.0
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(1, self.count)
+
 
 @dataclass
 class ServerLog:
     nodes_executed: int = 0
+    runs_executed: int = 0
     busy_time: float = 0.0
     batch_size_sum: int = 0
+    # per-node-id latency breakdown; fused runs (no per-node observability)
+    # are keyed by their span, e.g. "D0..head" — making run-fusion wins
+    # visible per phase next to the per-node entries
+    node_lat: Dict[str, NodeLat] = field(default_factory=dict)
+
+    def record(self, key: str, latency: float, n: int = 1):
+        ent = self.node_lat.setdefault(key, NodeLat())
+        ent.count += n
+        ent.total += latency
 
     @property
     def avg_batch_size(self) -> float:
         return self.batch_size_sum / max(1, self.nodes_executed)
+
+    @property
+    def avg_run_length(self) -> float:
+        return self.nodes_executed / max(1, self.runs_executed)
+
+
+def run_label(node_ids: Sequence[str]) -> str:
+    return (node_ids[0] if len(node_ids) == 1
+            else f"{node_ids[0]}..{node_ids[-1]}")
 
 
 class InferenceServer:
@@ -92,13 +150,19 @@ class InferenceServer:
                 now = min(candidates)
                 continue
 
-            sb, node_id = work
-            latency = self.executor.execute(sb, node_id)
-            self.log.nodes_executed += 1
+            sb, run = work
+            latency, per_node = self.executor.execute_run(sb, run)
+            self.log.nodes_executed += len(run)
+            self.log.runs_executed += 1
             self.log.busy_time += latency
-            self.log.batch_size_sum += sb.size
+            self.log.batch_size_sum += sb.size * len(run)
+            if per_node is not None:
+                for nid, lat in zip(run, per_node):
+                    self.log.record(nid, lat)
+            else:
+                self.log.record(run_label(run), latency, n=len(run))
             now += latency
-            done_now = self.policy.work_done(sb, now)
+            done_now = self.policy.work_done(sb, now, len(run))
             if done_now:
                 self.executor.on_finished(done_now)
             finished.extend(done_now)

@@ -151,6 +151,24 @@ class Workload:
                 return seg.ids
         return ()
 
+    def cycle_end_id(self) -> Optional[str]:
+        """Last node id of the decode cycle — the natural run-commit
+        boundary for iteration-level scheduling (None for static graphs,
+        which keep single-node commits)."""
+        cyc = self.cycle_ids()
+        return cyc[-1] if cyc else None
+
+    def commit_boundaries(self) -> frozenset:
+        """Segment-final node ids: the points where preemptive policies end
+        a committed run so admission/preemption/merging are re-evaluated at
+        least once per segment (prefill) and per decode cycle. Memoized —
+        it is consulted on every scheduling decision."""
+        b = getattr(self, "_commit_boundaries", None)
+        if b is None:
+            b = frozenset(seg.ids[-1] for seg in self.segments)
+            self._commit_boundaries = b
+        return b
+
     def predicted_remaining_nodes(self, req: Request, dec_timesteps: int):
         """Conservative remaining node iterator for the slack model
         (Algorithm 1): true remaining prefix + ``dec_timesteps``-capped decode

@@ -6,6 +6,7 @@ to the seed per-request padded-cache (stack/unstack) path, which is kept
 as ``cache_mode="legacy"`` exactly for this comparison.
 """
 import dataclasses
+from collections import deque
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +55,12 @@ def _run_nodes(engine, req, n_nodes=None):
         steps += 1
 
 
-def _serve(arch, mode, n=3, seed=0):
+def _serve(arch, mode, n=3, seed=0, fused=None):
     cfg = _tiny(arch)
     rng = np.random.default_rng(seed)
     wl = _workload(cfg)
-    engine = JaxEngine(cfg, max_len=32, cache_mode=mode, n_slots=8)
+    engine = JaxEngine(cfg, max_len=32, cache_mode=mode, n_slots=8,
+                       fused=fused)
     reqs = []
     t = 0.0
     for _ in range(n):
@@ -134,12 +136,10 @@ def test_arena_auto_grows_when_n_slots_unpinned():
     cfg = _tiny("llama3.2-1b")
     wl = _workload(cfg)
     rng = np.random.default_rng(3)
-    engine = JaxEngine(cfg, max_len=32)          # n_slots=None -> auto-grow
-    # shrink the arena to 2 slots to exercise growth cheaply
-    engine.n_slots = 2
-    engine._free_slots = [0, 1]
-    engine.arena = [jax.tree.map(lambda l: l[:2], layer)
-                    for layer in engine.arena]
+    # pin a tiny 2-slot arena but keep auto-grow on, to exercise growth
+    # cheaply (flat span storage: layer k's rows live at slot + k*n_slots)
+    engine = JaxEngine(cfg, max_len=32, n_slots=2)
+    engine._auto_grow = True
 
     reqs, prompts = [], []
     n_prefill = 1 + len(engine.kinds)
@@ -227,6 +227,194 @@ def test_engine_pallas_arena_decode_matches_plain():
             sb.advance(0.0)
         toks[pallas] = [engine.states[r.rid].generated for r in (r1, r2)]
     assert toks[True] == toks[False]
+
+
+# ---------------------------------------------------------------------------
+# Run-commit contract: fused multi-node dispatch vs single-node dispatch
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "recurrentgemma-9b"])
+def test_fused_runs_match_unfused_and_legacy(arch):
+    """Server-driven serving with fused run dispatch must generate the
+    exact tokens of per-node dispatch (same policy, same trace) — and the
+    fused engine must actually have fused (fewer dispatched runs than
+    nodes)."""
+    eng_f, reqs_f = _serve(arch, "arena")                  # fused (default)
+    eng_u, reqs_u = _serve(arch, "arena", fused=False)     # per-node arena
+    eng_l, reqs_l = _serve(arch, "legacy")                 # seed numerics
+    got = [eng_f.states[r.rid].generated for r in reqs_f]
+    assert got == [eng_u.states[r.rid].generated for r in reqs_u]
+    assert got == [eng_l.states[r.rid].generated for r in reqs_l]
+    assert eng_f.runs_executed < eng_f.nodes_executed, \
+        "no multi-node run was ever fused"
+    assert eng_f.slots_in_use == 0
+
+
+def test_merge_mid_run_takes_effect_at_run_boundary():
+    """A merge candidate arriving while a run is committed must wait for
+    the run boundary — and the resulting (later, ragged) merge must stay
+    bit-exact vs the same schedule dispatched node-at-a-time."""
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(5)
+    engine = JaxEngine(cfg, max_len=32, n_slots=8)
+    r1 = _mk_req(wl, rng, 7, 3)
+    r2 = _mk_req(wl, rng, 5, 2)
+    p1 = rng.integers(2, cfg.vocab_size, size=7)
+    p2 = rng.integers(2, cfg.vocab_size, size=5)
+    engine.register(r1, p1)
+    engine.register(r2, p2)
+
+    # r1 commits prefill + its first decode cycle as one run; r2 "arrives"
+    # mid-run and cannot join until the boundary
+    sb1 = SubBatch([r1])
+    run = sb1.run_nodes(stop_after={"head"})
+    assert run[0] == "emb" and run[-1] == "head" and len(run) > 2
+    engine.execute_run(sb1, run)
+    sb1.advance_n(len(run), 0.0)
+
+    # r2 catches up: its run stops BEFORE D0, where r1 is parked
+    sb2 = SubBatch([r2])
+    run2 = sb2.run_nodes(stop_before={"D0"})
+    assert run2[-1] == f"P{len(engine.kinds) - 1}"
+    engine.execute_run(sb2, run2)
+    sb2.advance_n(len(run2), 0.0)
+
+    # merge at the boundary: both at D0, ragged positions
+    assert r1.next_node_id == r2.next_node_id == "D0"
+    assert engine.states[r1.rid].pos != engine.states[r2.rid].pos
+    sb = SubBatch([r1, r2])
+    while sb.size:
+        run = sb.run_nodes(stop_after={"head"})
+        engine.execute_run(sb, run)
+        sb.advance_n(len(run), 0.0)
+    got = [engine.states[r.rid].generated for r in (r1, r2)]
+
+    eng2 = JaxEngine(cfg, max_len=32, n_slots=8)
+    rng2 = np.random.default_rng(5)
+    q1 = _mk_req(wl, rng2, 7, 3)
+    q2 = _mk_req(wl, rng2, 5, 2)
+    eng2.register(q1, p1)
+    eng2.register(q2, p2)
+    n_prefill = 1 + len(eng2.kinds)
+    _run_nodes(eng2, q1, n_prefill + len(wl.cycle_ids()))
+    _run_nodes(eng2, q2, n_prefill)
+    sb = SubBatch([q1, q2])
+    while sb.size:
+        eng2.execute(sb, sb.node_id)
+        sb.advance(0.0)
+    ref = [eng2.states[r.rid].generated for r in (q1, q2)]
+    assert got == ref
+    assert engine.slots_in_use == 0
+
+
+def test_bucketed_prefill_pads_and_stays_bitexact():
+    """Prompts whose prefill length is NOT a power of two exercise the
+    length-bucket padding; a 3-member merge exercises batch-bucket padding
+    (Bp=4 with one OOB-slot row). Tokens must equal isolated single-node
+    generation."""
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(7)
+    engine = JaxEngine(cfg, max_len=32, n_slots=8)
+    lens = [6, 7, 10]                    # prefill 5, 6, 9 -> buckets 8, 8, 16
+    reqs, prompts = [], []
+    for pl in lens:
+        r = _mk_req(wl, rng, pl, 2)
+        p = rng.integers(2, cfg.vocab_size, size=pl)
+        engine.register(r, p)
+        reqs.append(r)
+        prompts.append(p)
+    sb = SubBatch(list(reqs))            # prefill all three together
+    while sb.size:
+        run = sb.run_nodes(stop_after={"head"})
+        engine.execute_run(sb, run)
+        sb.advance_n(len(run), 0.0)
+    for r, p in zip(reqs, prompts):
+        ref_engine = JaxEngine(cfg, max_len=32, n_slots=8)
+        ref = _mk_req(wl, np.random.default_rng(9), len(p), 2)
+        ref_engine.register(ref, p)
+        _run_nodes(ref_engine, ref)
+        assert (engine.states[r.rid].generated
+                == ref_engine.states[ref.rid].generated)
+
+
+def test_run_continuing_past_head_stays_bitexact():
+    """A committed run shaped [..., head, D0..] (a stop_before node parks
+    the batch mid-NEXT-cycle) decodes past its own head: the context
+    bucket must cover the post-head position's freshly written K/V row."""
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(13)
+    engine = JaxEngine(cfg, max_len=32, n_slots=4)
+    r = _mk_req(wl, rng, 7, 3)
+    p = rng.integers(2, cfg.vocab_size, size=7)
+    engine.register(r, p)
+    sb = SubBatch([r])
+    run = sb.run_nodes(stop_before={"D0"})       # prefill
+    engine.execute_run(sb, run)
+    sb.advance_n(len(run), 0.0)
+    run = sb.run_nodes(stop_before={"D1"})       # just D0
+    assert run == ("D0",)
+    engine.execute_run(sb, run)
+    sb.advance_n(len(run), 0.0)
+    while sb.size:                               # D1, head, D0 | D1, head...
+        run = sb.run_nodes(stop_before={"D1"})
+        assert run[0] == "D1"
+        engine.execute_run(sb, run)
+        sb.advance_n(len(run), 0.0)
+
+    ref_engine = JaxEngine(cfg, max_len=32, n_slots=4)
+    ref = _mk_req(wl, np.random.default_rng(9), 7, 3)
+    ref_engine.register(ref, p)
+    _run_nodes(ref_engine, ref)
+    assert (engine.states[r.rid].generated
+            == ref_engine.states[ref.rid].generated)
+
+
+def test_parked_midcycle_batch_survives_other_batch_runs():
+    """A sub-batch parked MID-cycle keeps its in-flight activations only in
+    the engine's batched-x cache; another batch's fused cycle-start run
+    must flush (not clobber) them, and the parked batch must resume
+    bit-exact."""
+    cfg = _tiny("llama3.2-1b")
+    wl = _workload(cfg)
+    rng = np.random.default_rng(11)
+    engine = JaxEngine(cfg, max_len=32, n_slots=8)
+    ra = _mk_req(wl, rng, 5, 2)
+    rb = _mk_req(wl, rng, 7, 2)
+    pa = rng.integers(2, cfg.vocab_size, size=5)
+    pb = rng.integers(2, cfg.vocab_size, size=7)
+    engine.register(ra, pa)
+    engine.register(rb, pb)
+
+    sba = SubBatch([ra])
+    run = sba.run_nodes(stop_before={"D0"})      # A: prefill
+    engine.execute_run(sba, run)
+    sba.advance_n(len(run), 0.0)
+    run = sba.run_nodes(stop_before={"head"})    # A: parked mid-cycle
+    assert run[0] == "D0" and "head" not in run and len(run) > 1
+    engine.execute_run(sba, run)
+    sba.advance_n(len(run), 0.0)
+
+    sbb = SubBatch([rb])                         # B: full runs meanwhile
+    while sbb.size:
+        run = sbb.run_nodes(stop_after={"head"})
+        engine.execute_run(sbb, run)
+        sbb.advance_n(len(run), 0.0)
+
+    while sba.size:                              # A resumes mid-cycle
+        run = sba.run_nodes(stop_after={"head"})
+        engine.execute_run(sba, run)
+        sba.advance_n(len(run), 0.0)
+
+    for r, p in ((ra, pa), (rb, pb)):
+        ref_engine = JaxEngine(cfg, max_len=32, n_slots=8)
+        ref = _mk_req(wl, np.random.default_rng(9), len(p), 2)
+        ref_engine.register(ref, p)
+        _run_nodes(ref_engine, ref)
+        assert (engine.states[r.rid].generated
+                == ref_engine.states[ref.rid].generated)
 
 
 # ---------------------------------------------------------------------------

@@ -27,20 +27,31 @@ WORKLOADS = {name: get_workload(name) for name in ["resnet", "transformer"]}
 
 
 class CheckingExecutor(SimExecutor):
-    """Executor that verifies per-request node order and batch bounds."""
+    """Executor that verifies per-request node order and batch bounds.
+
+    Under the run-commit contract the policy hands over a run of
+    consecutive node ids: it must be a prefix of EVERY live member's
+    remaining sequence (no member may finish mid-run — completions are
+    run-boundary events).
+    """
 
     def __init__(self, perf, max_batch):
         super().__init__(perf)
         self.max_batch = max_batch
         self.executed = {}          # rid -> list of node ids
+        self.run_lengths = []
 
-    def execute(self, sb, node_id):
+    def execute_run(self, sb, node_ids):
         reqs = sb.live_requests
         assert 1 <= len(reqs) <= self.max_batch, "batch size bound violated"
+        self.run_lengths.append(len(node_ids))
         for r in reqs:
-            assert r.next_node_id == node_id, "request executed wrong node"
-            self.executed.setdefault(r.rid, []).append(node_id)
-        return super().execute(sb, node_id)
+            assert r.idx + len(node_ids) <= len(r.sequence), \
+                "run overruns a member's sequence"
+            rem = [nid for nid, _ in r.sequence[r.idx:r.idx + len(node_ids)]]
+            assert rem == list(node_ids), "run diverges from request sequence"
+            self.executed.setdefault(r.rid, []).extend(node_ids)
+        return super().execute_run(sb, node_ids)
 
 
 def make_policy(kind, sla, max_batch):
