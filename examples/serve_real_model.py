@@ -1,14 +1,16 @@
 """End-to-end driver: LazyBatching serving a REAL model with batched requests.
 
 Builds a reduced llama-family model, generates a Poisson request trace, and
-serves it with the real-JAX node-level engine: the LazyBatching scheduler
-preempts/merges sub-batches at layer boundaries and every node dispatch
-executes actual jitted layer functions (ragged-position batched decode,
-per-request KV caches).
+serves it ONLINE through the ``ServingSession`` front-end: requests are
+submitted with streaming callbacks, the LazyBatching scheduler
+preempts/merges sub-batches at layer boundaries, and every committed node
+run executes actual jitted layer functions on the JAX engine.
 
-Correctness is verified, not assumed: every request's generated tokens are
-compared against an isolated (no batching, no preemption) reference
-generation of the same prompt — lazy batching must not change results.
+Correctness is verified, not assumed:
+  * every request's *streamed* tokens (fired from run boundaries) must be
+    bit-identical to the engine's batch ``execute_run`` results, and
+  * both must match an isolated (no batching, no preemption) reference
+    generation of the same prompt — lazy batching must not change results.
 
   PYTHONPATH=src python examples/serve_real_model.py \
       [--arch llama3.2-1b] [--n 12] [--rate 20]
@@ -22,8 +24,7 @@ from repro.core.policies import LazyBatching
 from repro.core.slack import SlackPredictor
 from repro.serving.engine import JaxEngine
 from repro.serving.npu_model import NPUPerfModel, TPU_V5E
-from repro.serving.server import InferenceServer
-from repro.serving.traffic import Trace
+from repro.serving.session import HandleState, ServingSession
 from repro.serving.workload import fixed_length, from_model_config, LengthDist
 
 
@@ -48,24 +49,30 @@ def main():
                            decode_dist=decode_dist)
 
     engine = JaxEngine(cfg, max_len=64)
-    reqs, prompts = [], {}
+    predictor = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), args.sla)
+    policy = LazyBatching(predictor, max_batch=args.max_batch)
+    session = ServingSession(policy, engine, seed=args.seed)
+
+    streamed = {}                       # rid -> tokens seen via on_token
+
+    def on_token(handle, token):
+        streamed.setdefault(handle.request.rid, []).append(token)
+
+    handles, prompts = [], {}
     t = 0.0
     for _ in range(args.n):
         t += rng.exponential(1.0 / args.rate)
         r = wl.sample_request(rng, t)
         prompt = rng.integers(2, cfg.vocab_size, size=r.prompt_len)
         prompts[r.rid] = prompt
-        engine.register(r, prompt)
-        reqs.append(r)
-    trace = Trace(reqs, duration=t)
+        handles.append(session.submit(r, prompt_tokens=prompt,
+                                      on_token=on_token))
+    session.duration = t
 
-    predictor = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), args.sla)
-    policy = LazyBatching(predictor, max_batch=args.max_batch)
-    server = InferenceServer(policy, engine)
     print(f"serving {args.n} requests on reduced {args.arch} "
           f"({cfg.param_count() / 1e6:.1f}M params), "
           f"max_batch={args.max_batch} ...")
-    stats = server.run(trace)
+    stats = session.drain()
 
     s = stats.summary()
     print(f"completed {s['completed']}/{args.n}  "
@@ -73,13 +80,18 @@ def main():
           f"nodes executed {engine.nodes_executed}  "
           f"preemptions {policy.n_preemptions}")
     assert s["completed"] == args.n
+    assert all(h.state is HandleState.DONE for h in handles)
 
-    # ---- verify generations against isolated reference ----------------
-    print("verifying generations against isolated (unbatched) reference ...")
+    # ---- verify: streamed == batch-executed == isolated reference ------
+    print("verifying streamed tokens against batch results and an "
+          "isolated (unbatched) reference ...")
     ref_engine = JaxEngine(cfg, max_len=64)     # same seed -> same params
     mismatches = 0
-    for r in reqs:
+    for h in handles:
+        r = h.request
         got = engine.states[r.rid].generated[:r.decode_len]
+        assert streamed[r.rid][:r.decode_len] == got == h.tokens[:r.decode_len], \
+            f"rid={r.rid}: streamed tokens diverge from batch execute_run"
         ref = _reference_generate(ref_engine, wl, prompts[r.rid],
                                   r.decode_len)
         if got != ref:

@@ -1,12 +1,12 @@
 """The paper's contribution: SLA-aware node-level batching (LazyBatching)."""
-from .request import Request, SubBatch
+from .request import Request, SLAClass, SubBatch
 from .batch_table import BatchTable
 from .slack import SlackPredictor, OracleSlackPredictor
 from .policies import (Policy, Serial, GraphBatching, CellularBatching,
                        LazyBatching, Oracle)
 
 __all__ = [
-    "Request", "SubBatch", "BatchTable", "SlackPredictor",
+    "Request", "SLAClass", "SubBatch", "BatchTable", "SlackPredictor",
     "OracleSlackPredictor", "Policy", "Serial", "GraphBatching",
     "CellularBatching", "LazyBatching", "Oracle",
 ]

@@ -39,6 +39,7 @@ A single-node run is always a valid degenerate commit.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from typing import List, Optional, Tuple
 
@@ -79,6 +80,12 @@ class Policy:
     def work_done(self, sb: SubBatch, now: float,
                   n_nodes: int = 1) -> List[Request]:
         raise NotImplementedError
+
+    def request_finished(self, reqs: List[Request]) -> None:
+        """Completion hook: the serving session reports every request that
+        finished at the last run boundary, so policies can release
+        per-request scheduling state (e.g. slack-predictor memo entries).
+        Default no-op."""
 
     def next_timer(self, now: float) -> Optional[float]:
         return None
@@ -284,6 +291,14 @@ class LazyBatching(_TableBased):
         self.n_preemptions = 0
         self.n_rejections = 0
 
+    def request_finished(self, reqs):
+        # evict the predictor's per-request memo entries (unbounded growth
+        # otherwise: every (rid, idx) ever evaluated stayed cached)
+        forget = getattr(self.predictor, "forget", None)
+        if forget is not None:
+            for r in reqs:
+                forget(r.rid)
+
     def _select_active(self, now):
         """Paper LIFO preserved: the newest entry must run so it can catch
         up and merge (urgency-first dispatch was tried and REFUTED — it
@@ -308,30 +323,47 @@ class LazyBatching(_TableBased):
                 self.n_preemptions += 1
                 return
 
+    def _edf_take(self, candidates: List[Request], k: int) -> List[Request]:
+        """The ``k`` earliest-absolute-deadline candidates (arrival + the
+        request's own SLA-class deadline). ``nsmallest`` is stable, so with
+        a single class (constant deadline) this is exactly the FIFO prefix;
+        O(n log k) instead of a full sort."""
+        return heapq.nsmallest(
+            k, candidates, key=lambda r: r.arrival + self.predictor.deadline(r))
+
+    def _take_from_queue(self, reqs: List[Request], now: float) -> None:
+        """Remove ``reqs`` from the InfQ in one pass and stamp first issue."""
+        taken = {r.rid for r in reqs}
+        self.queue = deque(r for r in self.queue if r.rid not in taken)
+        for r in reqs:
+            r.t_first_issue = now
+
     def _admit(self, now):
         if not self.queue:
             return
         ongoing = self.table.all_requests()
         if not ongoing:
-            # idle processor: schedule immediately (no batching conflict)
-            take = min(self.max_batch, len(self.queue))
-            reqs = [self.queue.popleft() for _ in range(take)]
-            for r in reqs:
-                r.t_first_issue = now
+            # idle processor: schedule immediately (no batching conflict);
+            # earliest-absolute-deadline first when the backlog exceeds
+            # max_batch (== FIFO for a single SLA class)
+            reqs = self._edf_take(self.queue, self.max_batch)
+            self._take_from_queue(reqs, now)
             for group in _group_pushable(reqs):
                 self.table.push(group)
             return
         room = self.max_batch - len(ongoing)
         if room <= 0:
             return
-        # largest authorized FIFO prefix (adding requests only shrinks slack,
-        # so feasibility is monotone in the prefix length). Under co-location
-        # the prefix is drawn from the head request's model only: admitting a
+        # largest authorized deadline-ordered prefix (adding requests only
+        # shrinks slack, so feasibility is monotone in the prefix length):
+        # earliest-deadline-first across mixed tiers, identical to FIFO when
+        # every request shares the global target. Under co-location the
+        # prefix is drawn from the head request's model only: admitting a
         # same-model group preserves merge opportunities, while interleaving
         # models per admission only deepens the stack (§VI-C).
         head_wl = self.queue[0].workload
         candidates = [r for r in self.queue if r.workload is head_wl]
-        pending = candidates[:min(room, len(candidates))]
+        pending = self._edf_take(candidates, min(room, len(candidates)))
         # Cross-model preemption has no merge upside (sub-batches of
         # different models never share a node): only preempt for a foreign
         # model when its head is more urgent than every ongoing request —
@@ -354,9 +386,7 @@ class LazyBatching(_TableBased):
         if not pending:
             self.n_rejections += 1
             return
-        for r in pending:
-            self.queue.remove(r)
-            r.t_first_issue = now
+        self._take_from_queue(pending, now)
         self.n_preemptions += 1
         for group in _group_pushable(pending):
             self.table.push(group)

@@ -18,6 +18,24 @@ from typing import List, Optional, Sequence, Tuple
 _rid_counter = itertools.count()
 
 
+@dataclass(frozen=True)
+class SLAClass:
+    """Per-request service tier: a latency deadline plus a reporting name.
+
+    The deadline is *relative* (seconds from arrival to completion) — the
+    same quantity the paper's single global ``SLA_target`` froze at
+    predictor-build time. Requests without an ``sla`` fall back to that
+    global scalar, so single-tier serving is byte-identical to before;
+    mixed-tier traces attach different classes per request and the slack
+    predictors / LazyBatching admission honor each request's own deadline.
+    """
+    name: str = "default"
+    deadline: float = 0.1
+
+    def __post_init__(self):
+        assert self.deadline > 0.0, "SLA deadline must be positive"
+
+
 @dataclass
 class Request:
     workload: "object"                  # serving.workload.Workload
@@ -25,7 +43,10 @@ class Request:
     sequence: List[Tuple[str, int]]     # [(node_id, ctx), ...]
     rid: int = field(default_factory=lambda: next(_rid_counter))
     idx: int = 0                        # next node to execute
+    sla: Optional[SLAClass] = None      # None = predictor's global target
     t_first_issue: Optional[float] = None
+    # stamped by the session at the run boundary emitting token #1:
+    t_first_token: Optional[float] = None
     t_finish: Optional[float] = None
     # sequence-structure metadata (set by Workload.sample_request)
     prompt_len: int = 0
@@ -58,9 +79,21 @@ class Request:
     def clone(self) -> "Request":
         """Fresh, unexecuted copy (for comparing policies on one trace)."""
         return Request(workload=self.workload, arrival=self.arrival,
-                       sequence=self.sequence, rid=self.rid,
+                       sequence=self.sequence, rid=self.rid, sla=self.sla,
                        prompt_len=self.prompt_len, decode_len=self.decode_len,
                        prefix_len=self.prefix_len, cycle_len=self.cycle_len)
+
+    @property
+    def sla_name(self) -> str:
+        return self.sla.name if self.sla is not None else "default"
+
+    @property
+    def n_tokens(self) -> int:
+        """Response tokens a completed request produced (one per decode
+        cycle; a static graph's single response counts as one)."""
+        if self.cycle_len:
+            return max(0, self.idx - self.prefix_len) // self.cycle_len
+        return 1 if self.done else 0
 
     def __repr__(self):
         return (f"Request(rid={self.rid}, wl={getattr(self.workload, 'name', '?')}, "

@@ -1,10 +1,16 @@
 """SLA-aware slack time prediction (paper §IV-C, Eq. 1-2, Algorithm 1).
 
-    Slack_r = SLA_target - (T_wait_r + Σ_{i in batch} SingleInputExecTime_i)
+    Slack_r = SLA_r - (T_wait_r + Σ_{i in batch} SingleInputExecTime_i)
 
 Deliberately conservative: the latency of a batch is overestimated as the
 *sum* of its members' isolated single-batch latencies, so estimated slack
 shrinks and SLA violations are minimized first, throughput second.
+
+``SLA_r`` is *per request*: a request carrying an :class:`~repro.core.
+request.SLAClass` is judged against its own class deadline; requests
+without one fall back to the predictor's global ``sla_target`` (the
+paper's single frozen scalar), so single-tier behavior is unchanged while
+mixed-tier traces get per-tier admission control.
 
 SingleInputExecTime_i comes from the profiled per-node latency lookup table
 (``NodeLatency(n)``); dynamic graphs are overprovisioned with
@@ -18,15 +24,58 @@ from typing import Dict, Iterable, List, Optional
 
 from .request import Request
 
+# memoized single-exec entries across ALL live requests before a panic
+# clear (a backstop only: entries are evicted per request on completion)
+_MEMO_CAP = 100_000
+
+
+class _PredictorBase:
+    """Shared predictor scaffolding: the per-request deadline rule and the
+    per-rid memo — one dict of entries per live request, evicted wholesale
+    via :meth:`forget` when the request finishes (wired through
+    ``Policy.request_finished``), with a global-size panic clear as a leak
+    backstop."""
+
+    _memo_cap = _MEMO_CAP
+
+    def deadline(self, req: Request) -> float:
+        """The deadline ``req`` is judged against: its own SLA class when
+        it carries one, else the predictor's global target."""
+        return self.sla_target if req.sla is None else req.sla.deadline
+
+    def _memo_get(self, rid: int) -> Dict:
+        per = self._memo.get(rid)
+        if per is None:
+            if self._memo_n > self._memo_cap:     # leak backstop
+                self._memo.clear()
+                self._memo_n = 0
+            per = self._memo[rid] = {}
+        return per
+
+    def forget(self, rid: int) -> None:
+        """Drop all memoized entries of a finished request."""
+        per = self._memo.pop(rid, None)
+        if per is not None:
+            self._memo_n -= len(per)
+
+    @property
+    def memo_size(self) -> int:
+        return sum(len(per) for per in self._memo.values())
+
 
 @dataclass
-class SlackPredictor:
+class SlackPredictor(_PredictorBase):
     sla_target: float
     # per-workload-name profiled node latency tables (single-batch)
     tables: Dict[str, Dict[str, float]]
     # per-workload-name dec_timesteps (quantile of decode-length profile)
     dec_timesteps: Dict[str, int]
     coverage: float = 0.90
+    # per-rid memo of single_remaining values: {rid: {idx: seconds}} —
+    # evicted via forget(rid) when the request finishes
+    _memo: Dict[int, Dict] = field(default_factory=dict, init=False,
+                                   repr=False, compare=False)
+    _memo_n: int = field(default=0, init=False, repr=False, compare=False)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -46,20 +95,16 @@ class SlackPredictor:
 
         Memoized per (request, progress) — the scheduler evaluates the same
         requests at every admission decision."""
-        key = (req.rid, req.idx)
-        cache = getattr(self, "_memo", None)
-        if cache is None:
-            cache = self._memo = {}
-        if key in cache:
-            return cache[key]
+        per = self._memo_get(req.rid)
+        if req.idx in per:
+            return per[req.idx]
         wl = req.workload
         table = self.tables[wl.name]
         dec = self.dec_timesteps.get(wl.name, 0)
         val = sum(table[nid]
                   for nid, _ctx in wl.predicted_remaining_nodes(req, dec))
-        cache[key] = val
-        if len(cache) > 100_000:
-            cache.clear()
+        per[req.idx] = val
+        self._memo_n += 1
         return val
 
     def single_total(self, req: Request) -> float:
@@ -75,27 +120,27 @@ class SlackPredictor:
 
     def slack(self, req: Request, group: Iterable[Request], now: float) -> float:
         """Eq. 2 slack of ``req`` if batched with ``group`` (which includes
-        req itself): SLA - T_wait - Σ_i SingleInputExecTime_i(remaining)."""
+        req itself): SLA_req - T_wait - Σ_i SingleInputExecTime_i(remaining)."""
         t_wait = now - req.arrival
         total = sum(self.single_remaining(r) for r in group)
-        return self.sla_target - t_wait - total
+        return self.deadline(req) - t_wait - total
 
     # ------------------------------------------------------------------
     def authorize(self, ongoing: List[Request], pending: List[Request],
                   now: float) -> bool:
         """Authorize lazily batching ``pending`` with ``ongoing`` iff no
-        request in the merged set is predicted to violate its SLA (§IV-C:
-        minimize violations first, throughput second)."""
+        request in the merged set is predicted to violate *its own* SLA
+        (§IV-C: minimize violations first, throughput second)."""
         merged = list(ongoing) + list(pending)
         total = sum(self.single_remaining(r) for r in merged)
         for r in merged:
-            if self.sla_target - (now - r.arrival) - total < 0.0:
+            if self.deadline(r) - (now - r.arrival) - total < 0.0:
                 return False
         return True
 
 
 @dataclass
-class OracleSlackPredictor:
+class OracleSlackPredictor(_PredictorBase):
     """Oracular slack estimation (paper §VI design point 4).
 
     Uses (a) the *true* unrolled sequence lengths (no dec_timesteps
@@ -105,28 +150,33 @@ class OracleSlackPredictor:
     """
     sla_target: float
     perf_model: "object"        # serving.npu_model.NPUPerfModel
+    # per-rid memo: {rid: {(idx, batch): seconds}} — evicted via forget()
+    _memo: Dict[int, Dict] = field(default_factory=dict, init=False,
+                                   repr=False, compare=False)
+    _memo_n: int = field(default=0, init=False, repr=False, compare=False)
+    _memo_cap = 2 * _MEMO_CAP          # (idx, batch) keys: more per request
 
     def _batched_remaining(self, req: Request, batch: int) -> float:
-        key = (req.rid, req.idx, batch)
-        cache = getattr(self, "_memo", None)
-        if cache is None:
-            cache = self._memo = {}
-        if key in cache:
-            return cache[key]
+        per = self._memo_get(req.rid)
+        key = (req.idx, batch)
+        if key in per:
+            return per[key]
         wl = req.workload
         val = sum(self.perf_model.node_latency(wl.nodes[nid], [ctx] * batch)
                   for nid, ctx in req.sequence[req.idx:])
-        cache[key] = val
-        if len(cache) > 200_000:
-            cache.clear()
+        per[key] = val
+        self._memo_n += 1
         return val
 
     def single_remaining(self, req: Request) -> float:
         return self._batched_remaining(req, 1)
 
+    # an unstarted request's total IS its remaining time (idx == 0)
+    single_total = single_remaining
+
     def slack(self, req: Request, group, now: float) -> float:
         group = list(group)
-        return (self.sla_target - (now - req.arrival)
+        return (self.deadline(req) - (now - req.arrival)
                 - self._batched_remaining(req, len(group)))
 
     def authorize(self, ongoing: List[Request], pending: List[Request],
@@ -147,9 +197,9 @@ class OracleSlackPredictor:
                 for nid, ctx in lead.sequence[lead.idx:stop])
         for r in ongoing:
             finish = catch + self._batched_remaining(r, n)
-            if (now - r.arrival) + finish > self.sla_target:
+            if (now - r.arrival) + finish > self.deadline(r):
                 return False
         for p in pending:
-            if (now - p.arrival) + self._batched_remaining(p, n) > self.sla_target:
+            if (now - p.arrival) + self._batched_remaining(p, n) > self.deadline(p):
                 return False
         return True

@@ -1,13 +1,20 @@
 """Serving launcher.
 
-Two modes:
+Two engines, ONE code path — both build a :class:`ServingSession` over the
+run-commit scheduling core and print the same summary line:
+
   * ``--engine sim``  — discrete-event simulation on the NPU latency model
-    (any architecture/workload at any load, instantly),
+    (any architecture/workload at any load, instantly; virtual time),
   * ``--engine jax``  — the real node-level JAX engine on a reduced model
-    (CPU-runnable end-to-end, generation-verified).
+    (CPU-runnable end-to-end; wall-clock time, so pick an SLA in seconds
+    that matches your hardware — the default is auto-scaled).
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --policy lazyb --rate 200 --engine sim
+
+Mixed-tier serving: ``--sla-tiers "gold:0.05,bulk:0.5"`` assigns each
+request one of the named SLA classes uniformly at random and reports
+per-class violation rates alongside the aggregate.
 """
 from __future__ import annotations
 
@@ -18,11 +25,13 @@ import numpy as np
 from ..configs import ARCHITECTURES, get_config
 from ..core.policies import (CellularBatching, GraphBatching, LazyBatching,
                              Oracle, Serial)
+from ..core.request import SLAClass
 from ..core.slack import OracleSlackPredictor, SlackPredictor
 from ..serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
-from ..serving.server import InferenceServer, SimExecutor
-from ..serving.traffic import Trace, bursty_trace, poisson_trace
-from ..serving.workload import PAPER_WORKLOADS, get_workload
+from ..serving.session import ServingSession
+from ..serving.server import SimExecutor
+from ..serving.traffic import bursty_trace, poisson_trace, with_sla_classes
+from ..serving.workload import (LengthDist, from_model_config, get_workload)
 
 
 def build_policy(name: str, wl, perf, sla: float, max_batch: int,
@@ -41,6 +50,32 @@ def build_policy(name: str, wl, perf, sla: float, max_batch: int,
     raise KeyError(name)
 
 
+def parse_tiers(spec: str):
+    """Parse ``name:deadline_s[,name:deadline_s...]`` into SLA classes."""
+    classes = []
+    for part in spec.split(","):
+        name, _, deadline = part.strip().partition(":")
+        classes.append(SLAClass(name=name, deadline=float(deadline)))
+    return classes
+
+
+def print_summary(wl_name: str, args, stats, log):
+    s = stats.summary(sla=args.sla)
+    kind = "bursty" if args.bursty else "poisson"
+    print(f"{wl_name} @ {args.rate:g} r/s ({kind})"
+          f" policy={s['policy']} engine={args.engine}")
+    print(f"  completed {s['completed']}  avg {s['avg_latency_ms']:.2f}ms  "
+          f"p50 {s['p50_ms']:.2f}ms  p99 {s['p99_ms']:.2f}ms  "
+          f"thr {s['throughput_rps']:.0f} r/s  "
+          f"SLA viol {s['sla_violation_rate'] * 100:.1f}%  "
+          f"avg batch {log.avg_batch_size:.1f}")
+    per_class = stats.per_class(args.sla)
+    if set(per_class) != {"default"}:
+        tiers = "  ".join(f"{name} {row['sla_violation_rate'] * 100:.1f}%"
+                          for name, row in per_class.items())
+        print(f"  per-tier SLA viol: {tiers}")
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="transformer",
@@ -51,7 +86,12 @@ def main():
     ap.add_argument("--engine", default="sim", choices=["sim", "jax"])
     ap.add_argument("--rate", type=float, default=200.0)
     ap.add_argument("--duration", type=float, default=1.0)
-    ap.add_argument("--sla", type=float, default=0.1)
+    ap.add_argument("--sla", type=float, default=None,
+                    help="global SLA target in seconds (default: 0.1 for "
+                         "sim, 60 for jax wall-clock)")
+    ap.add_argument("--sla-tiers", default=None,
+                    help='mixed per-request SLA classes, e.g. '
+                         '"gold:0.05,bulk:0.5" (uniform random assignment)')
     ap.add_argument("--max-batch", type=int, default=64)
     ap.add_argument("--window", type=float, default=0.025)
     ap.add_argument("--bursty", action="store_true",
@@ -60,34 +100,44 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    if args.engine == "jax":
-        # delegate to the verified end-to-end driver
-        import runpy
-        import sys
-        sys.argv = ["serve_real_model.py", "--arch",
-                    args.arch if args.arch in ARCHITECTURES else "llama3.2-1b"]
-        runpy.run_path("examples/serve_real_model.py", run_name="__main__")
-        return
-
-    wl = get_workload(args.arch)
+    # ---- workload + backend (the ONLY engine-dependent part) -----------
     perf = NPUPerfModel(PAPER_NPU if args.hw == "paper" else TPU_V5E)
+    if args.engine == "jax":
+        from ..serving.engine import JaxEngine
+        arch = args.arch if args.arch in ARCHITECTURES else "llama3.2-1b"
+        cfg = get_config(arch).reduced()
+        # short prompts / few decode steps: CPU wall-clock budget
+        wl = from_model_config(
+            cfg, prompt_dist=LengthDist((6, 8, 10, 12), (0.25,) * 4),
+            decode_dist=LengthDist((2, 3, 4, 5), (0.25,) * 4))
+        backend = JaxEngine(cfg, max_len=64, seed=args.seed)
+        if args.sla is None:
+            args.sla = 60.0                       # CPU wall-clock is slow
+    else:
+        wl = get_workload(args.arch)
+        if args.sla is None:
+            args.sla = 0.1
+        backend = SimExecutor(perf)
+
+    # ---- trace ---------------------------------------------------------
     if args.bursty:
         trace = bursty_trace(wl, args.rate * 0.3, args.rate * 2.0,
                              switch_period=args.duration / 6,
                              duration=args.duration, seed=args.seed)
     else:
         trace = poisson_trace(wl, args.rate, args.duration, seed=args.seed)
+    if args.sla_tiers:
+        with_sla_classes(trace, parse_tiers(args.sla_tiers), seed=args.seed)
+
+    # ---- one serving loop for both engines -----------------------------
     policy = build_policy(args.policy, wl, perf, args.sla, args.max_batch,
                           args.window)
-    server = InferenceServer(policy, SimExecutor(perf))
-    stats = server.run(trace)
-    s = stats.summary(sla=args.sla)
-    print(f"{wl.name} @ {args.rate:g} r/s ({'bursty' if args.bursty else 'poisson'})"
-          f" policy={s['policy']}")
-    print(f"  completed {s['completed']}  avg {s['avg_latency_ms']:.2f}ms  "
-          f"p99 {s['p99_ms']:.2f}ms  thr {s['throughput_rps']:.0f} r/s  "
-          f"SLA viol {s['sla_violation_rate'] * 100:.1f}%  "
-          f"avg batch {server.log.avg_batch_size:.1f}")
+    session = ServingSession(policy, backend, seed=args.seed)
+    session.duration = trace.duration
+    for req in trace.requests:
+        session.submit(req)
+    stats = session.drain()
+    print_summary(wl.name, args, stats, session.log)
 
 
 if __name__ == "__main__":

@@ -2,7 +2,10 @@ from .workload import (Workload, NodeDesc, Segment, LengthDist,
                        wmt_like_length_dist, fixed_length, get_workload,
                        from_model_config, PAPER_WORKLOADS)
 from .npu_model import NPUPerfModel, HardwareSpec, PAPER_NPU, TPU_V5E
-from .traffic import Trace, poisson_trace, bursty_trace, colocated_trace
+from .traffic import (Trace, poisson_trace, bursty_trace, colocated_trace,
+                      with_sla_classes)
+from .backend import Backend, ServerLog, run_label
+from .session import ServingSession, RequestHandle, HandleState, run_trace
 from .server import InferenceServer, SimExecutor, Executor, run_policy
 from .metrics import ServeStats
 
@@ -11,5 +14,8 @@ __all__ = [
     "fixed_length", "get_workload", "from_model_config", "PAPER_WORKLOADS",
     "NPUPerfModel", "HardwareSpec", "PAPER_NPU", "TPU_V5E",
     "Trace", "poisson_trace", "bursty_trace", "colocated_trace",
+    "with_sla_classes",
+    "Backend", "ServerLog", "run_label",
+    "ServingSession", "RequestHandle", "HandleState", "run_trace",
     "InferenceServer", "SimExecutor", "Executor", "run_policy", "ServeStats",
 ]

@@ -1,0 +1,134 @@
+"""The one Backend contract both execution substrates implement.
+
+A *backend* is what a :class:`~repro.serving.session.ServingSession` (and
+therefore the ``InferenceServer`` wrapper) drives: something that can
+execute committed node runs for a sub-batch and report latency on its own
+clock —
+
+  * ``SimExecutor`` (``server.py``) — the analytical NPU latency model;
+    latency is *virtual* time (the paper's methodology),
+  * ``JaxEngine`` (``engine.py``) — real jitted dispatches on a reduced
+    model; latency is *wall-clock* time measured at run boundaries.
+
+The session never branches on which one it holds: admission, clock
+advancement, handle lifecycle, and metrics are identical — only the
+meaning of a second differs. Beyond execution, the contract covers the
+two things an online front-end needs that the offline trace loop did not:
+
+  * ``prepare(req, rng, prompt_tokens=...)`` — per-request setup at submit
+    time (the JAX engine registers/samples the prompt here; the simulator
+    needs nothing),
+  * ``token_count(req)`` / ``tokens(req)`` — response-progress
+    observability at run boundaries, driving TTFT/TPOT metrics and the
+    ``on_token`` streaming callbacks. The base implementation derives a
+    *virtual* token count from request progress (one token per completed
+    decode cycle; a static graph's single response counts as one token on
+    completion), which is exactly right for the simulator; the JAX engine
+    overrides both with its actually sampled token ids.
+
+``Executor`` in ``server.py`` is an alias of this class (the pre-session
+name, kept for compatibility — ``JaxEngine`` and every test subclass it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.request import Request, SubBatch
+
+
+class Backend:
+    def prepare(self, req: Request, rng, prompt_tokens=None) -> None:
+        """Per-request setup at submission time (before the request can be
+        scheduled). Real engines allocate/register request state here —
+        e.g. the JAX engine stores the prompt (``prompt_tokens``, or a
+        random one sampled from ``rng`` at the request's ``prompt_len``).
+        The analytic simulator keeps no per-request state — default no-op."""
+
+    def execute(self, sb: SubBatch, node_id: str) -> float:
+        """Execute one node for a sub-batch; returns latency in seconds."""
+        raise NotImplementedError
+
+    def execute_run(self, sb: SubBatch,
+                    node_ids: Sequence[str]) -> Tuple[float, Optional[List[float]]]:
+        """Execute a committed run of consecutive nodes for one sub-batch.
+
+        Returns ``(total_latency, per_node_latencies)``. Backends that
+        fuse the run into fewer device dispatches than nodes return
+        ``(total, None)`` — per-node latency is unobservable inside a fused
+        dispatch, and the server clock only needs run latency (sync points
+        live at scheduler-visible run boundaries). The default loops
+        :meth:`execute` per node, the degenerate single-dispatch-per-node
+        behavior.
+        """
+        lats = [self.execute(sb, nid) for nid in node_ids]
+        return sum(lats), lats
+
+    def on_finished(self, reqs: Sequence[Request]) -> None:
+        """Completion hook: the session calls this with every request that
+        finished at the last run boundary, so stateful backends can
+        release per-request *device* resources (e.g. KV-cache arena
+        slots). Host-side results (generated tokens) must survive it —
+        they stay readable until :meth:`release_request`. The analytic
+        simulator keeps no per-request state — default no-op."""
+
+    def release_request(self, req: Request) -> None:
+        """Forget ``req`` entirely (``ServingSession.release``): drop any
+        remaining host-side state, e.g. the JAX engine's per-request
+        prompt/token record. Long-lived online sessions call this per
+        completed request; offline trace replays never do, so results
+        remain inspectable after a drained run. Default no-op."""
+
+    def token_count(self, req: Request) -> int:
+        """Response tokens produced so far for ``req`` (consulted at run
+        boundaries). Default: derived from request progress — one token
+        per completed decode cycle, or one token at completion for static
+        (single-response) graphs."""
+        return req.n_tokens
+
+    def tokens(self, req: Request) -> Optional[Sequence[int]]:
+        """Actual sampled token ids for ``req`` (prefix of length
+        :meth:`token_count`), or ``None`` when the backend has no real
+        tokens (the simulator) — streaming then reports placeholder ids."""
+        return None
+
+
+@dataclass
+class NodeLat:
+    """Per-node-id (or per-fused-run-span) latency accumulator."""
+    count: int = 0
+    total: float = 0.0
+
+    @property
+    def mean(self) -> float:
+        return self.total / max(1, self.count)
+
+
+@dataclass
+class ServerLog:
+    nodes_executed: int = 0
+    runs_executed: int = 0
+    busy_time: float = 0.0
+    batch_size_sum: int = 0
+    # per-node-id latency breakdown; fused runs (no per-node observability)
+    # are keyed by their span, e.g. "D0..head" — making run-fusion wins
+    # visible per phase next to the per-node entries
+    node_lat: Dict[str, NodeLat] = field(default_factory=dict)
+
+    def record(self, key: str, latency: float, n: int = 1):
+        ent = self.node_lat.setdefault(key, NodeLat())
+        ent.count += n
+        ent.total += latency
+
+    @property
+    def avg_batch_size(self) -> float:
+        return self.batch_size_sum / max(1, self.nodes_executed)
+
+    @property
+    def avg_run_length(self) -> float:
+        return self.nodes_executed / max(1, self.runs_executed)
+
+
+def run_label(node_ids: Sequence[str]) -> str:
+    return (node_ids[0] if len(node_ids) == 1
+            else f"{node_ids[0]}..{node_ids[-1]}")

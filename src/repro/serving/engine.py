@@ -241,6 +241,27 @@ class JaxEngine(Executor):
     def register(self, req: Request, prompt_tokens: np.ndarray):
         self.states[req.rid] = EngineState(prompt_tokens)
 
+    def prepare(self, req: Request, rng, prompt_tokens=None):
+        """Backend-contract hook (ServingSession.submit): register the
+        request's prompt — the supplied tokens, or a synthetic prompt of
+        ``req.prompt_len`` sampled from ``rng`` (the session's seeded
+        generator) when none is given. Idempotent for pre-registered
+        requests (explicit ``register`` calls keep working)."""
+        if req.rid in self.states:
+            return
+        if prompt_tokens is None:
+            prompt_tokens = rng.integers(2, self.cfg.vocab_size,
+                                         size=max(2, req.prompt_len))
+        self.register(req, np.asarray(prompt_tokens))
+
+    def token_count(self, req: Request) -> int:
+        st = self.states.get(req.rid)
+        return len(st.generated) if st is not None else super().token_count(req)
+
+    def tokens(self, req: Request):
+        st = self.states.get(req.rid)
+        return st.generated if st is not None else None
+
     def state(self, req: Request) -> EngineState:
         return self.states[req.rid]
 
@@ -300,6 +321,14 @@ class JaxEngine(Executor):
     def on_finished(self, reqs: Sequence[Request]) -> None:
         for r in reqs:
             self.release_slot(r)
+
+    def release_request(self, req: Request) -> None:
+        """Drop the request's host-side EngineState (prompt, generated
+        tokens, activations) once the caller is done with its results —
+        wired through ``ServingSession.release`` so long-lived online
+        sessions don't accumulate per-request state forever."""
+        self.release_slot(req)
+        self.states.pop(req.rid, None)
 
     # ------------------------------------------------------------------
     # Batched-activation cache (arena mode)

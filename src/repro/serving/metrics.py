@@ -1,4 +1,14 @@
-"""Serving metrics: latency distribution, throughput, SLA satisfaction."""
+"""Serving metrics: latency distribution, throughput, SLA satisfaction.
+
+Per-SLA-class reporting: every request carries a class name (``"default"``
+when it has no :class:`~repro.core.request.SLAClass`), and a finished
+session records the classes it saw (name -> deadline, ``None`` for the
+default class, whose deadline is supplied at ``summary(sla=...)`` time).
+All per-class aggregates are NaN-safe when a class has no finishers.
+TTFT/TPOT need ``t_first_token``, which only the session front-end stamps
+(at the run boundary emitting token #1) — trace replays through
+``run_trace``/``InferenceServer.run`` get it for free.
+"""
 from __future__ import annotations
 
 from dataclasses import dataclass, field
@@ -8,12 +18,28 @@ import numpy as np
 
 from ..core.request import Request
 
+_NAN = float("nan")
+
+
+def _mean(xs: List[float]) -> float:
+    return float(np.mean(xs)) if xs else _NAN
+
 
 @dataclass
 class ServeStats:
     policy: str
     duration: float
     finished: List[Request] = field(default_factory=list)
+    rejected: int = 0                       # refused at admission control
+    # SLA classes observed at submission: name -> relative deadline
+    # (None for the default class — its target arrives via summary(sla=...))
+    classes: Dict[str, Optional[float]] = field(default_factory=dict)
+
+    # ------------------------------------------------------------------
+    def of_class(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.finished
+        return [r for r in self.finished if r.sla_name == name]
 
     @property
     def latencies(self) -> np.ndarray:
@@ -22,11 +48,12 @@ class ServeStats:
     @property
     def avg_latency(self) -> float:
         lat = self.latencies
-        return float(lat.mean()) if len(lat) else float("nan")
+        return float(lat.mean()) if len(lat) else _NAN
 
-    def percentile(self, q: float) -> float:
-        lat = self.latencies
-        return float(np.percentile(lat, q)) if len(lat) else float("nan")
+    def percentile(self, q: float, cls: Optional[str] = None) -> float:
+        lat = (self.latencies if cls is None else
+               np.array([r.latency() for r in self.of_class(cls)]))
+        return float(np.percentile(lat, q)) if len(lat) else _NAN
 
     @property
     def makespan(self) -> float:
@@ -40,22 +67,81 @@ class ServeStats:
         + drain) — policies that stall requests pay for the longer drain."""
         return len(self.finished) / max(self.duration, self.makespan)
 
-    def sla_violation_rate(self, sla: float) -> float:
-        lat = self.latencies
-        if not len(lat):
-            return float("nan")
+    # ------------------------------------------------------------------
+    def sla_violation_rate(self, sla: float,
+                           cls: Optional[str] = None) -> float:
+        reqs = self.of_class(cls)
+        if not reqs:
+            return _NAN
+        lat = np.array([r.latency() for r in reqs])
         return float((lat > sla).mean())
 
+    def sla_attainment(self, sla: float, cls: Optional[str] = None) -> float:
+        v = self.sla_violation_rate(sla, cls)
+        return _NAN if np.isnan(v) else 1.0 - v
+
+    def ttft(self, cls: Optional[str] = None) -> float:
+        """Mean time-to-first-token (seconds from arrival; session-stamped)."""
+        return _mean([r.t_first_token - r.arrival for r in self.of_class(cls)
+                      if r.t_first_token is not None])
+
+    def tpot(self, cls: Optional[str] = None) -> float:
+        """Mean time-per-output-token over the decode phase (first token ->
+        finish, across the remaining n_tokens - 1 tokens)."""
+        return _mean([(r.t_finish - r.t_first_token) / (r.n_tokens - 1)
+                      for r in self.of_class(cls)
+                      if r.t_first_token is not None and r.n_tokens >= 2])
+
+    def _class_deadline(self, name: str,
+                        default_sla: Optional[float]) -> Optional[float]:
+        d = self.classes.get(name)
+        return default_sla if d is None else d
+
+    def per_class(self, sla: Optional[float] = None
+                  ) -> Dict[str, Dict[str, float]]:
+        """Per-SLA-class breakdown: completion count, attainment/violation
+        against the class's own deadline, p50/p99, TTFT, TPOT. ``sla``
+        supplies the default class's deadline. NaN-safe throughout."""
+        names = set(self.classes) | {r.sla_name for r in self.finished}
+        out: Dict[str, Dict[str, float]] = {}
+        for name in sorted(names):
+            deadline = self._class_deadline(name, sla)
+            viol = (self.sla_violation_rate(deadline, name)
+                    if deadline is not None else _NAN)
+            out[name] = {
+                "completed": len(self.of_class(name)),
+                "deadline_ms": (deadline * 1e3 if deadline is not None
+                                else _NAN),
+                "sla_violation_rate": viol,
+                "sla_attainment": (_NAN if np.isnan(viol) else 1.0 - viol),
+                "p50_ms": self.percentile(50, name) * 1e3,
+                "p99_ms": self.percentile(99, name) * 1e3,
+                "ttft_ms": self.ttft(name) * 1e3,
+                "tpot_ms": self.tpot(name) * 1e3,
+            }
+        return out
+
+    # ------------------------------------------------------------------
     def summary(self, sla: Optional[float] = None) -> Dict[str, float]:
         out = {
             "policy": self.policy,
             "completed": len(self.finished),
             "avg_latency_ms": self.avg_latency * 1e3,
             "p25_ms": self.percentile(25) * 1e3,
+            "p50_ms": self.percentile(50) * 1e3,
             "p75_ms": self.percentile(75) * 1e3,
             "p99_ms": self.percentile(99) * 1e3,
             "throughput_rps": self.throughput,
         }
+        if self.rejected:
+            out["rejected"] = self.rejected
         if sla is not None:
             out["sla_violation_rate"] = self.sla_violation_rate(sla)
+        # per-class violation rates (only meaningful keys: a class needs a
+        # deadline from its SLAClass or the summary's sla argument)
+        for name, row in self.per_class(sla).items():
+            if name == "default" and len(self.classes) <= 1:
+                continue                         # single-tier: no breakdown
+            if not np.isnan(row["deadline_ms"]):
+                out[f"sla_viol[{name}]"] = row["sla_violation_rate"]
         return out

@@ -1,61 +1,44 @@
-"""Discrete-event inference server (paper Fig. 9 serving architecture).
+"""Discrete-event inference serving (paper Fig. 9 serving architecture).
 
 One backend processor executes one committed *run* of consecutive nodes at
 a time for one (sub-)batch; the scheduler (policy) is consulted at every
 run boundary and on arrivals when idle. Policies commit exactly the span
 to their next possible merge/preemption point (see ``core.policies``), so
 scheduling stays node-granular where it matters while the executor is free
-to fuse a whole run into one device dispatch. The executor is pluggable:
+to fuse a whole run into one device dispatch.
+
+The loop itself lives in :class:`~repro.serving.session.ServingSession`
+(the online submit/stream front-end); this module keeps the offline
+conveniences on top of it:
 
   * ``SimExecutor``  — analytical NPU latency model (paper's methodology),
-  * the real-JAX engine in ``repro.serving.engine`` implements the same
-    interface; it fuses committed decode runs into single scanned
-    dispatches and measures *run* (not per-node) wall-clock latency.
+  * ``InferenceServer`` / ``run_policy`` — trace-in, stats-out wrappers
+    (each run is one drained session; behavior and statistics unchanged).
+
+``Executor`` is the pre-session name of the :class:`~repro.serving.
+backend.Backend` contract — the real-JAX engine and test executors
+subclass it; both names refer to the same class.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional
 
 from ..core.policies import Policy
-from ..core.request import Request, SubBatch
+from .backend import Backend, NodeLat, ServerLog, run_label
 from .metrics import ServeStats
 from .npu_model import NPUPerfModel
+from .session import run_trace
 from .traffic import Trace
 
-
-class Executor:
-    def execute(self, sb: SubBatch, node_id: str) -> float:
-        """Execute one node for a sub-batch; returns latency in seconds."""
-        raise NotImplementedError
-
-    def execute_run(self, sb: SubBatch,
-                    node_ids: Sequence[str]) -> Tuple[float, Optional[List[float]]]:
-        """Execute a committed run of consecutive nodes for one sub-batch.
-
-        Returns ``(total_latency, per_node_latencies)``. Executors that
-        fuse the run into fewer device dispatches than nodes return
-        ``(total, None)`` — per-node latency is unobservable inside a fused
-        dispatch, and the server clock only needs run latency (sync points
-        live at scheduler-visible run boundaries). The default loops
-        :meth:`execute` per node, the degenerate single-dispatch-per-node
-        behavior.
-        """
-        lats = [self.execute(sb, nid) for nid in node_ids]
-        return sum(lats), lats
-
-    def on_finished(self, reqs: Sequence[Request]) -> None:
-        """Completion hook: the server calls this with every request that
-        finished at the last run boundary, so stateful executors can
-        release per-request resources (e.g. KV-cache arena slots). The
-        analytic simulator keeps no per-request state — default no-op."""
+# compatibility alias: the one Backend contract under its historical name
+Executor = Backend
 
 
 class SimExecutor(Executor):
     def __init__(self, perf_model: NPUPerfModel):
         self.perf = perf_model
 
-    def execute(self, sb: SubBatch, node_id: str) -> float:
+    def execute(self, sb, node_id: str) -> float:
         reqs = sb.live_requests
         wl = reqs[0].workload
         node = wl.nodes[node_id]
@@ -75,48 +58,9 @@ class SimExecutor(Executor):
         return sum(lats), lats
 
 
-@dataclass
-class NodeLat:
-    """Per-node-id (or per-fused-run-span) latency accumulator."""
-    count: int = 0
-    total: float = 0.0
-
-    @property
-    def mean(self) -> float:
-        return self.total / max(1, self.count)
-
-
-@dataclass
-class ServerLog:
-    nodes_executed: int = 0
-    runs_executed: int = 0
-    busy_time: float = 0.0
-    batch_size_sum: int = 0
-    # per-node-id latency breakdown; fused runs (no per-node observability)
-    # are keyed by their span, e.g. "D0..head" — making run-fusion wins
-    # visible per phase next to the per-node entries
-    node_lat: Dict[str, NodeLat] = field(default_factory=dict)
-
-    def record(self, key: str, latency: float, n: int = 1):
-        ent = self.node_lat.setdefault(key, NodeLat())
-        ent.count += n
-        ent.total += latency
-
-    @property
-    def avg_batch_size(self) -> float:
-        return self.batch_size_sum / max(1, self.nodes_executed)
-
-    @property
-    def avg_run_length(self) -> float:
-        return self.nodes_executed / max(1, self.runs_executed)
-
-
-def run_label(node_ids: Sequence[str]) -> str:
-    return (node_ids[0] if len(node_ids) == 1
-            else f"{node_ids[0]}..{node_ids[-1]}")
-
-
 class InferenceServer:
+    """Offline wrapper: one drained :class:`ServingSession` per ``run``."""
+
     def __init__(self, policy: Policy, executor: Executor):
         self.policy = policy
         self.executor = executor
@@ -124,53 +68,8 @@ class InferenceServer:
 
     def run(self, trace: Trace, *, drain: bool = True) -> ServeStats:
         """Run the trace to completion; returns serving statistics."""
-        arrivals = sorted(trace.requests, key=lambda r: r.arrival)
-        ai = 0
-        now = 0.0
-        finished: List[Request] = []
-        stats = ServeStats(policy=self.policy.name, duration=trace.duration)
-
-        while True:
-            # admit all arrivals up to `now`
-            while ai < len(arrivals) and arrivals[ai].arrival <= now + 1e-12:
-                self.policy.enqueue(arrivals[ai], now)
-                ai += 1
-
-            work = self.policy.next_work(now)
-            if work is None:
-                # idle: jump to the next arrival or policy timer
-                candidates = []
-                if ai < len(arrivals):
-                    candidates.append(arrivals[ai].arrival)
-                t = self.policy.next_timer(now)
-                if t is not None:
-                    candidates.append(max(t, now))
-                if not candidates:
-                    break                       # fully drained
-                now = min(candidates)
-                continue
-
-            sb, run = work
-            latency, per_node = self.executor.execute_run(sb, run)
-            self.log.nodes_executed += len(run)
-            self.log.runs_executed += 1
-            self.log.busy_time += latency
-            self.log.batch_size_sum += sb.size * len(run)
-            if per_node is not None:
-                for nid, lat in zip(run, per_node):
-                    self.log.record(nid, lat)
-            else:
-                self.log.record(run_label(run), latency, n=len(run))
-            now += latency
-            done_now = self.policy.work_done(sb, now, len(run))
-            if done_now:
-                self.executor.on_finished(done_now)
-            finished.extend(done_now)
-            if not drain and now > trace.duration and ai >= len(arrivals):
-                break
-
-        stats.finished = finished
-        return stats
+        return run_trace(self.policy, self.executor, trace, drain=drain,
+                         log=self.log)
 
 
 def run_policy(policy: Policy, trace: Trace,

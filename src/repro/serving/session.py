@@ -1,0 +1,357 @@
+"""Online serving session: submit/stream front-end over the run-commit core.
+
+The paper's premise is SLA-aware scheduling of a *live* request stream, but
+the original front-end was offline: ``InferenceServer.run(trace)`` ingested
+a pre-sorted arrival list and only returned stats after full drain. A
+:class:`ServingSession` turns that inside out —
+
+    session = ServingSession(policy, backend)
+    h = session.submit(req, on_token=lambda h, t: ...)
+    session.run_until(t)        # incremental clock advancement
+    session.step()              # ... or one scheduling step at a time
+    h.state                     # QUEUED → ADMITTED → RUNNING → DONE
+    session.drain()             # finish everything -> ServeStats
+
+while the scheduling core underneath is exactly the PR-2 run-commit loop:
+the policy is consulted at every run boundary, commits a run of
+consecutive node ids, and the backend executes it as one fused dispatch.
+Requests can be submitted mid-flight, observed, rejected at admission
+control, and given *per-request SLA classes* (``Request.sla``); both
+execution substrates — the analytic ``SimExecutor`` (virtual time) and the
+real ``JaxEngine`` (wall-clock time) — drive through the same
+:class:`~repro.serving.backend.Backend` contract, so every scenario runs
+unchanged on either.
+
+Handle lifecycle
+----------------
+``QUEUED``   — submitted, waiting in the policy's InfQ (or in the
+               session's future-arrivals queue when submitted ahead of its
+               arrival time, e.g. trace replay);
+``ADMITTED`` — the policy pulled it out of the InfQ into its batch state
+               (``t_first_issue`` is set);
+``REJECTED`` — refused at admission control (``reject_infeasible=True``
+               and the request's own deadline is already unmeetable even
+               if it ran alone immediately);
+``RUNNING``  — a committed run containing the request has executed;
+``DONE``     — finished; ``t_finish``/``latency``/``tokens`` are final.
+
+Streaming
+---------
+At every run boundary the session asks the backend how many response
+tokens each just-executed request has produced (decode megasteps already
+hold the sampled tokens — the JAX engine surfaces them; the simulator
+reports virtual tokens, one per completed decode cycle). New tokens fire
+the handle's ``on_token(handle, token)`` callback, stamp
+``t_first_token`` (TTFT), and accumulate in ``handle.tokens`` — for the
+JAX backend these are bit-exact the batch ``execute_run`` results.
+
+Compatibility
+-------------
+``run_trace(policy, backend, trace)`` replays an offline trace through a
+session and returns the familiar :class:`ServeStats`;
+``InferenceServer.run`` and ``run_policy`` are thin wrappers over it, so
+every pre-existing experiment script and test runs unmodified.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from enum import Enum
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from ..core.policies import Policy
+from ..core.request import Request
+from .backend import Backend, ServerLog, run_label
+from .metrics import ServeStats
+from .traffic import Trace
+
+
+class HandleState(Enum):
+    QUEUED = "queued"
+    ADMITTED = "admitted"
+    RUNNING = "running"
+    DONE = "done"
+    REJECTED = "rejected"
+
+
+class RequestHandle:
+    """Caller-facing view of one submitted request's lifecycle."""
+
+    def __init__(self, req: Request, session: "ServingSession",
+                 on_token: Optional[Callable] = None):
+        self.request = req
+        self.t_submit = session.now
+        self.on_token = on_token
+        self.tokens: List[int] = []     # streamed response tokens so far
+        self._n_tokens = 0
+        self._rejected = False
+        self._running = False
+
+    # ------------------------------------------------------------------
+    @property
+    def state(self) -> HandleState:
+        """Derived, monotone lifecycle state (no per-step bookkeeping)."""
+        if self._rejected:
+            return HandleState.REJECTED
+        r = self.request
+        if r.done:
+            return HandleState.DONE
+        if self._running:
+            return HandleState.RUNNING
+        if r.t_first_issue is not None:
+            return HandleState.ADMITTED
+        return HandleState.QUEUED
+
+    @property
+    def done(self) -> bool:
+        return self.state in (HandleState.DONE, HandleState.REJECTED)
+
+    @property
+    def t_first_token(self) -> Optional[float]:
+        return self.request.t_first_token
+
+    @property
+    def t_finish(self) -> Optional[float]:
+        return self.request.t_finish
+
+    @property
+    def latency(self) -> Optional[float]:
+        r = self.request
+        return None if r.t_finish is None else r.t_finish - r.arrival
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token (from arrival)."""
+        r = self.request
+        return (None if r.t_first_token is None
+                else r.t_first_token - r.arrival)
+
+    def __repr__(self):
+        return (f"RequestHandle(rid={self.request.rid}, "
+                f"state={self.state.value}, tokens={len(self.tokens)})")
+
+
+class ServingSession:
+    """Online serving front-end over one (policy, backend) pair.
+
+    ``reject_infeasible``: when the policy carries a slack predictor,
+    refuse at submit time any request whose own deadline is unmeetable
+    even running alone immediately (conservative single-input bound) —
+    the handle goes straight to ``REJECTED`` instead of burning batch
+    slack on a guaranteed violation. Off by default (the paper's system
+    never drops work).
+
+    ``seed`` feeds the RNG handed to ``Backend.prepare`` (the JAX engine
+    samples synthetic prompts from it when none is supplied).
+    """
+
+    def __init__(self, policy: Policy, backend: Backend, *, seed: int = 0,
+                 reject_infeasible: bool = False,
+                 log: Optional[ServerLog] = None):
+        self.policy = policy
+        self.backend = backend
+        self.log = log if log is not None else ServerLog()
+        self.now = 0.0
+        self.duration: Optional[float] = None    # reporting window override
+        self.reject_infeasible = reject_infeasible
+        self.handles: Dict[int, RequestHandle] = {}
+        self._finished: Dict[int, Request] = {}   # rid-keyed: O(1) release
+        self._rejected: Dict[int, Request] = {}
+        self._rng = np.random.default_rng(seed)
+        self._arrivals: list = []                # heap of (t, tiebreak, req)
+        self._seq = itertools.count()
+        self._classes: Dict[str, Optional[float]] = {}
+
+    # ------------------------------------------------------------------
+    # Submission
+    # ------------------------------------------------------------------
+    def submit(self, req: Request, *, prompt_tokens=None,
+               on_token: Optional[Callable] = None) -> RequestHandle:
+        """Register a request with the session and return its handle.
+
+        ``req.arrival`` in the future (relative to the session clock) is
+        honored — the request enters the policy's InfQ when the clock
+        reaches it (trace replay); an arrival in the past is clamped to
+        *now* (live submission — waiting time, slack, and latency all
+        count from the submission instant, not a stale timestamp).
+        ``on_token(handle, token)`` fires once per response token at the
+        producing run's boundary.
+        """
+        assert req.rid not in self.handles, f"rid {req.rid} already submitted"
+        req.arrival = max(req.arrival, self.now)
+        handle = RequestHandle(req, self, on_token=on_token)
+        self.handles[req.rid] = handle
+        deadline = req.sla.deadline if req.sla else None
+        prev = self._classes.setdefault(req.sla_name, deadline)
+        assert prev == deadline, (
+            f"SLA class {req.sla_name!r} submitted with deadline {deadline} "
+            f"but previously seen with {prev} — per-class reporting needs "
+            f"one deadline per class name")
+        if self.reject_infeasible and self._infeasible(req):
+            handle._rejected = True
+            self._rejected[req.rid] = req
+            # the feasibility probe may have memoized predictor state for a
+            # request the policy will never see finish — release it here
+            self.policy.request_finished([req])
+            return handle
+        self.backend.prepare(req, self._rng, prompt_tokens=prompt_tokens)
+        heapq.heappush(self._arrivals,
+                       (req.arrival, next(self._seq), req))
+        return handle
+
+    def _infeasible(self, req: Request) -> bool:
+        # arrival is already clamped to the session clock, so the deadline
+        # window opens now: unmeetable iff even an isolated immediate run
+        # (the conservative single-input bound) overshoots it
+        pred = getattr(self.policy, "predictor", None)
+        if pred is None or not hasattr(pred, "single_total"):
+            return False
+        return pred.single_total(req) > pred.deadline(req)
+
+    # ------------------------------------------------------------------
+    # Clock advancement
+    # ------------------------------------------------------------------
+    def _enqueue_due(self):
+        while self._arrivals and self._arrivals[0][0] <= self.now + 1e-12:
+            _, _, req = heapq.heappop(self._arrivals)
+            self.policy.enqueue(req, self.now)
+
+    def step(self, limit: Optional[float] = None) -> bool:
+        """One scheduling step: enqueue due arrivals, then either execute
+        the policy's next committed run (clock advances by its latency) or
+        jump the clock to the next event (arrival / policy timer). Returns
+        ``False`` when fully idle — nothing queued, running, or pending —
+        or when the next event lies beyond ``limit``."""
+        self._enqueue_due()
+        work = self.policy.next_work(self.now)
+        if work is None:
+            candidates = []
+            if self._arrivals:
+                candidates.append(self._arrivals[0][0])
+            t = self.policy.next_timer(self.now)
+            if t is not None:
+                candidates.append(max(t, self.now))
+            if not candidates:
+                return False                      # fully drained
+            target = min(candidates)
+            if limit is not None and target > limit:
+                self.now = max(self.now, limit)
+                return False
+            self.now = target
+            return True
+
+        sb, run = work
+        reqs = list(sb.live_requests)
+        latency, per_node = self.backend.execute_run(sb, run)
+        self.log.nodes_executed += len(run)
+        self.log.runs_executed += 1
+        self.log.busy_time += latency
+        self.log.batch_size_sum += sb.size * len(run)
+        if per_node is not None:
+            for nid, lat in zip(run, per_node):
+                self.log.record(nid, lat)
+        else:
+            self.log.record(run_label(run), latency, n=len(run))
+        self.now += latency
+        done_now = self.policy.work_done(sb, self.now, len(run))
+        # observe (stream tokens, stamp TTFT) BEFORE the completion hooks:
+        # backends may release per-request device resources there
+        for r in reqs:
+            self._observe(r)
+        if done_now:
+            self.backend.on_finished(done_now)
+            self.policy.request_finished(done_now)
+        for r in done_now:
+            self._finished[r.rid] = r
+        return True
+
+    def _observe(self, req: Request):
+        """Run-boundary bookkeeping for one just-executed request: state
+        transition to RUNNING, TTFT stamp, token streaming."""
+        handle = self.handles.get(req.rid)
+        if handle is None:
+            return
+        handle._running = True
+        n = self.backend.token_count(req)
+        if n <= handle._n_tokens:
+            return
+        if req.t_first_token is None:
+            req.t_first_token = self.now
+        toks = self.backend.tokens(req)
+        new = (list(toks[handle._n_tokens:n]) if toks is not None
+               else [-1] * (n - handle._n_tokens))   # virtual tokens (sim)
+        handle._n_tokens = n
+        handle.tokens.extend(new)
+        if handle.on_token is not None:
+            for t in new:
+                handle.on_token(handle, t)
+
+    def run_until(self, t: float) -> float:
+        """Advance the session clock to (at least) ``t``, executing every
+        run that *starts* at or before ``t`` — a run in flight at the
+        boundary completes (the clock only advances at run boundaries).
+        Returns the clock."""
+        while self.now <= t:
+            if not self.step(limit=t):
+                break
+        self.now = max(self.now, t)
+        return self.now
+
+    def drain(self) -> ServeStats:
+        """Run everything outstanding to completion and return stats."""
+        while self.step():
+            pass
+        return self.stats()
+
+    def release(self, handle: RequestHandle) -> None:
+        """Drop a finished/rejected handle's per-request state from the
+        session (long-lived online sessions otherwise accumulate every
+        handle, request, and token list ever submitted). The request no
+        longer contributes to :meth:`stats`; releasing a live request is
+        refused."""
+        assert handle.done, "cannot release a live request"
+        req = handle.request
+        self.handles.pop(req.rid, None)
+        self._finished.pop(req.rid, None)
+        self._rejected.pop(req.rid, None)
+        self.backend.release_request(req)
+
+    # ------------------------------------------------------------------
+    @property
+    def outstanding(self) -> int:
+        return len(self._arrivals) + self.policy.outstanding
+
+    @property
+    def finished(self) -> List[Request]:
+        return list(self._finished.values())
+
+    @property
+    def rejected(self) -> List[Request]:
+        return list(self._rejected.values())
+
+    def stats(self) -> ServeStats:
+        duration = self.duration if self.duration is not None else self.now
+        return ServeStats(policy=self.policy.name, duration=duration,
+                          finished=list(self._finished.values()),
+                          rejected=len(self._rejected),
+                          classes=dict(self._classes))
+
+
+def run_trace(policy: Policy, backend: Backend, trace: Trace, *,
+              drain: bool = True, seed: int = 0,
+              log: Optional[ServerLog] = None,
+              reject_infeasible: bool = False) -> ServeStats:
+    """Offline-compatibility wrapper: replay a whole trace through a
+    :class:`ServingSession` and return its :class:`ServeStats` — the
+    ``InferenceServer.run(trace)`` contract, now a thin shim."""
+    session = ServingSession(policy, backend, seed=seed, log=log,
+                             reject_infeasible=reject_infeasible)
+    session.duration = trace.duration
+    for req in sorted(trace.requests, key=lambda r: r.arrival):
+        session.submit(req)
+    if drain:
+        return session.drain()
+    session.run_until(trace.duration)
+    return session.stats()

@@ -12,7 +12,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..core.request import Request
+from ..core.request import Request, SLAClass
 from .workload import Workload
 
 
@@ -68,3 +68,18 @@ def colocated_trace(workloads: Sequence[Workload], rates: Sequence[float],
         reqs.extend(poisson_trace(wl, rate, duration, seed=seed + i).requests)
     reqs.sort(key=lambda r: r.arrival)
     return Trace(reqs, duration)
+
+
+def with_sla_classes(trace: Trace, classes: Sequence[SLAClass],
+                     probs: Optional[Sequence[float]] = None,
+                     seed: int = 0) -> Trace:
+    """Assign per-request SLA classes i.i.d. across a trace (mixed-tier
+    serving): each request draws one of ``classes`` with the given
+    probabilities (uniform when omitted). Mutates and returns ``trace``;
+    ``Trace.fresh()`` clones preserve the assignment."""
+    rng = np.random.default_rng(seed)
+    p = None if probs is None else list(probs)
+    idx = rng.choice(len(classes), size=len(trace.requests), p=p)
+    for r, i in zip(trace.requests, idx):
+        r.sla = classes[int(i)]
+    return trace

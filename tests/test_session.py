@@ -1,0 +1,425 @@
+"""Online serving API tests: session/handle lifecycle, per-request SLA
+classes, streaming, memo eviction, and the offline-compat wrapper.
+
+JAX-engine cases run on a tiny reduced config (CPU-runnable); everything
+else drives the analytic simulator through the same Backend contract.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (LazyBatching, Oracle, OracleSlackPredictor, Serial,
+                        SLAClass, SlackPredictor)
+from repro.core.request import Request
+from repro.serving import (HandleState, NPUPerfModel, PAPER_NPU, ServeStats,
+                           ServingSession, SimExecutor, TPU_V5E, Trace,
+                           get_workload, poisson_trace, run_trace,
+                           with_sla_classes)
+from repro.serving.server import InferenceServer
+
+PERF = NPUPerfModel(PAPER_NPU)
+MS = 1e-3
+
+
+def lazyb(wl, sla=0.1, max_batch=16, **kw):
+    return LazyBatching(SlackPredictor.build([wl], PERF, sla, **kw),
+                        max_batch=max_batch)
+
+
+# ---------------------------------------------------------------------------
+# Handle lifecycle
+# ---------------------------------------------------------------------------
+
+LIFECYCLE = [HandleState.QUEUED, HandleState.ADMITTED, HandleState.RUNNING,
+             HandleState.DONE]
+
+
+def test_handle_lifecycle_to_done():
+    wl = get_workload("transformer")
+    session = ServingSession(lazyb(wl), SimExecutor(PERF))
+    rng = np.random.default_rng(0)
+    h = session.submit(wl.sample_request(rng, arrival=5 * MS))
+    # submitted ahead of its arrival: still queued, not yet in the policy
+    assert h.state is HandleState.QUEUED
+    session.run_until(4 * MS)
+    assert h.state is HandleState.QUEUED
+    seen = [h.state]
+    while not h.done:
+        assert session.step()
+        if h.state is not seen[-1]:
+            seen.append(h.state)
+    # monotone walk down the lifecycle (ADMITTED->RUNNING may collapse into
+    # one step when admission and the first run share a scheduling step)
+    assert [s for s in LIFECYCLE if s in seen] == seen
+    assert seen[0] is HandleState.QUEUED and seen[-1] is HandleState.DONE
+    assert HandleState.RUNNING in seen
+    assert h.t_finish is not None and h.latency > 0
+    assert h.ttft is not None and h.ttft <= h.latency
+    # an idle-and-empty session reports no work left
+    assert not session.step()
+
+
+def test_admitted_state_observable_between_steps():
+    """A request admitted into the batch table whose sub-batch is NOT the
+    active (executing) entry reports ADMITTED: co-located workloads are
+    admitted as separate stack entries in one step, only the top runs."""
+    wl_a, wl_b = get_workload("transformer"), get_workload("resnet")
+    pred = SlackPredictor.build([wl_a, wl_b], PERF, 0.5)
+    session = ServingSession(LazyBatching(pred, max_batch=8),
+                             SimExecutor(PERF))
+    rng = np.random.default_rng(20)
+    ha = session.submit(wl_a.sample_request(rng, 0.0))
+    hb = session.submit(wl_b.sample_request(rng, 0.0))
+    assert session.step()               # admits both, runs the top entry
+    states = {ha.state, hb.state}
+    assert HandleState.ADMITTED in states
+    assert HandleState.RUNNING in states
+    session.drain()
+    assert ha.state is hb.state is HandleState.DONE
+
+
+def test_handle_rejected_on_admission_refusal():
+    """A request whose own deadline is unmeetable even running alone is
+    REJECTED at submit when admission control is on."""
+    wl = get_workload("transformer")
+    session = ServingSession(lazyb(wl), SimExecutor(PERF),
+                             reject_infeasible=True)
+    rng = np.random.default_rng(1)
+    doomed = wl.sample_request(rng, 0.0)
+    doomed.sla = SLAClass("impossible", 1e-9)
+    ok = wl.sample_request(rng, 0.0)
+    h_bad = session.submit(doomed)
+    h_ok = session.submit(ok)
+    assert h_bad.state is HandleState.REJECTED
+    assert h_bad.done
+    assert h_ok.state is HandleState.QUEUED
+    stats = session.drain()
+    assert h_ok.state is HandleState.DONE
+    assert stats.rejected == 1
+    assert len(stats.finished) == 1
+    # rejected requests never touch the policy queue or the batch table
+    assert session.policy.outstanding == 0
+
+
+def test_rejection_releases_predictor_memo():
+    """The feasibility probe memoizes predictor state for requests the
+    policy never sees finish — rejection must release it (regression)."""
+    wl = get_workload("transformer")
+    pol = Oracle(OracleSlackPredictor(0.1, PERF), max_batch=8)
+    session = ServingSession(pol, SimExecutor(PERF), reject_infeasible=True)
+    rng = np.random.default_rng(13)
+    for _ in range(5):
+        r = wl.sample_request(rng, 0.0)
+        r.sla = SLAClass("impossible", 1e-9)
+        assert session.submit(r).state is HandleState.REJECTED
+    assert pol.predictor.memo_size == 0
+
+
+def test_release_drops_finished_handle_state():
+    wl = get_workload("transformer")
+    session = ServingSession(lazyb(wl), SimExecutor(PERF))
+    rng = np.random.default_rng(14)
+    h1 = session.submit(wl.sample_request(rng, 0.0))
+    h2 = session.submit(wl.sample_request(rng, 1 * MS))
+    with pytest.raises(AssertionError):
+        session.release(h1)                 # still live: refused
+    session.drain()
+    session.release(h1)
+    assert h1.request.rid not in session.handles
+    assert len(session.stats().finished) == 1
+    assert session.stats().finished[0].rid == h2.request.rid
+
+
+def test_submit_mid_flight_and_run_until():
+    """Online use: submissions interleave with clock advancement."""
+    wl = get_workload("transformer")
+    session = ServingSession(lazyb(wl), SimExecutor(PERF))
+    rng = np.random.default_rng(2)
+    h1 = session.submit(wl.sample_request(rng, 0.0))
+    session.run_until(2 * MS)
+    assert session.now >= 2 * MS
+    # a stale arrival submitted mid-flight is clamped to the session clock:
+    # waiting time / latency count from the submission instant
+    late = wl.sample_request(rng, 0.0)
+    t_submit = session.now
+    h2 = session.submit(late)
+    assert late.arrival == t_submit
+    session.drain()
+    assert h1.state is h2.state is HandleState.DONE
+    assert h2.t_finish >= 2 * MS
+    assert h2.latency <= h2.t_finish - t_submit + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Per-request SLA classes
+# ---------------------------------------------------------------------------
+
+def test_slack_uses_per_request_deadline():
+    wl = get_workload("transformer")
+    pred = SlackPredictor.build([wl], PERF, sla_target=100 * MS)
+    rng = np.random.default_rng(3)
+    req = wl.sample_request(rng, 0.0)
+    base = pred.slack(req, [req], now=0.0)
+    req.sla = SLAClass("gold", 40 * MS)
+    tight = pred.slack(req, [req], now=0.0)
+    assert tight == pytest.approx(base - 60 * MS)
+    # oracle predictor honors it too
+    orc = OracleSlackPredictor(100 * MS, PERF)
+    assert (orc.slack(req, [req], 0.0)
+            < orc.slack(dataclasses_replace_sla(req, None), [req], 0.0))
+
+
+def dataclasses_replace_sla(req, sla):
+    clone = req.clone()
+    clone.sla = sla
+    return clone
+
+
+def test_authorize_honors_tightest_member():
+    """A merge fine for the global target must be refused when one member
+    carries a tighter class deadline."""
+    wl = get_workload("transformer")
+    pred = SlackPredictor.build([wl], PERF, sla_target=1.0)
+    rng = np.random.default_rng(4)
+    ongoing = [wl.sample_request(rng, 0.0) for _ in range(2)]
+    pending = [wl.sample_request(rng, 0.0) for _ in range(6)]
+    assert pred.authorize(ongoing, pending, now=0.0)
+    single = pred.single_remaining(ongoing[0])
+    # deadline below the merged-batch conservative bound -> refuse
+    ongoing[0].sla = SLAClass("gold", deadline=4 * single)
+    assert not pred.authorize(ongoing, pending, now=0.0)
+    # ... and fine again once the pending prefix shrinks enough
+    assert pred.authorize(ongoing, [], now=0.0)
+
+
+def test_mixed_tiers_tight_class_gets_better_p99():
+    """Under lazyb at overload, the tight-deadline tier must get strictly
+    better p99 than the loose tier (EDF admission + per-deadline
+    authorization), with per-class attainment reported."""
+    wl = get_workload("transformer")
+    gold, bulk = SLAClass("gold", 30 * MS), SLAClass("bulk", 500 * MS)
+    trace = poisson_trace(wl, rate=1200, duration=0.25, seed=0)
+    with_sla_classes(trace, [gold, bulk], seed=0)
+    stats = run_trace(lazyb(wl), SimExecutor(PERF), trace.fresh())
+    assert len(stats.finished) == len(trace.requests)
+    pc = stats.per_class()
+    assert set(pc) == {"gold", "bulk"}
+    assert pc["gold"]["completed"] + pc["bulk"]["completed"] == len(trace.requests)
+    # strictly better tail latency for the tight tier — by a wide margin
+    assert pc["gold"]["p99_ms"] < 0.7 * pc["bulk"]["p99_ms"]
+    # per-class attainment is judged against each class's own deadline
+    assert pc["gold"]["sla_attainment"] >= 0.95
+    assert pc["bulk"]["sla_attainment"] >= 0.95
+    s = stats.summary(sla=0.1)
+    assert "sla_viol[gold]" in s and "sla_viol[bulk]" in s
+
+
+def test_single_class_trace_identical_to_untiered():
+    """Attaching ONE class whose deadline equals the global target must not
+    change scheduling at all (EDF == FIFO, authorize unchanged)."""
+    wl = get_workload("transformer")
+    trace = poisson_trace(wl, rate=900, duration=0.1, seed=5)
+    base = run_trace(lazyb(wl, sla=0.1), SimExecutor(PERF), trace.fresh())
+    tiered = trace.fresh()
+    for r in tiered.requests:
+        r.sla = SLAClass("only", 0.1)
+    tst = run_trace(lazyb(wl, sla=0.1), SimExecutor(PERF), tiered)
+    lat_a = sorted((r.rid, r.latency()) for r in base.finished)
+    lat_b = sorted((r.rid, r.latency()) for r in tst.finished)
+    assert lat_a == lat_b
+
+
+# ---------------------------------------------------------------------------
+# Predictor memo eviction (regression: unbounded (rid, idx) growth)
+# ---------------------------------------------------------------------------
+
+def test_slack_memo_evicted_on_completion():
+    wl = get_workload("transformer")
+    pol = lazyb(wl, sla=0.1, max_batch=16)
+    trace = poisson_trace(wl, rate=800, duration=0.5, seed=6)
+    stats = run_trace(pol, SimExecutor(PERF), trace.fresh())
+    assert len(stats.finished) == len(trace.requests) > 300
+    # every finished request's entries were dropped: nothing left
+    assert pol.predictor.memo_size == 0
+    assert pol.predictor._memo == {}
+
+
+def test_oracle_memo_evicted_on_completion():
+    wl = get_workload("transformer")
+    pol = Oracle(OracleSlackPredictor(0.1, PERF), max_batch=16)
+    trace = poisson_trace(wl, rate=300, duration=0.2, seed=7)
+    stats = run_trace(pol, SimExecutor(PERF), trace.fresh())
+    assert len(stats.finished) == len(trace.requests)
+    assert pol.predictor.memo_size == 0
+
+
+def test_slack_memo_bounded_during_serving():
+    """Mid-flight, the memo only holds entries for live requests."""
+    wl = get_workload("transformer")
+    pol = lazyb(wl, sla=0.1, max_batch=16)
+    session = ServingSession(pol, SimExecutor(PERF))
+    rng = np.random.default_rng(8)
+    t = 0.0
+    for _ in range(200):
+        t += rng.exponential(1 / 600)
+        session.submit(wl.sample_request(rng, t))
+    session.run_until(t / 2)
+    live = {h.request.rid for h in session.handles.values() if not h.done}
+    assert set(pol.predictor._memo) <= live
+    session.drain()
+    assert pol.predictor.memo_size == 0
+
+
+# ---------------------------------------------------------------------------
+# Streaming on the real JAX engine: bit-exact vs batch execution
+# ---------------------------------------------------------------------------
+
+def _tiny(arch):
+    cfg = get_config(arch).reduced()
+    return dataclasses.replace(cfg, d_model=64, d_ff=128, vocab_size=128,
+                               num_prefix_embeddings=0)
+
+
+def test_jax_streamed_tokens_bit_exact():
+    from repro.serving.engine import JaxEngine
+    from repro.serving.workload import LengthDist, from_model_config
+
+    cfg = _tiny("llama3.2-1b")
+    wl = from_model_config(cfg,
+                           prompt_dist=LengthDist((5, 7, 9), (1 / 3,) * 3),
+                           decode_dist=LengthDist((2, 3), (0.5, 0.5)))
+    engine = JaxEngine(cfg, max_len=32)
+    pred = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), 60.0)
+    session = ServingSession(LazyBatching(pred, max_batch=4), engine, seed=0)
+    rng = np.random.default_rng(0)
+    streamed = {}
+
+    def on_token(handle, token):
+        streamed.setdefault(handle.request.rid, []).append(token)
+
+    handles = []
+    t = 0.0
+    for _ in range(5):
+        t += rng.exponential(0.05)
+        r = wl.sample_request(rng, t)
+        prompt = rng.integers(2, cfg.vocab_size, size=r.prompt_len)
+        handles.append(session.submit(r, prompt_tokens=prompt,
+                                      on_token=on_token))
+    stats = session.drain()
+    assert len(stats.finished) == 5
+    for h in handles:
+        r = h.request
+        assert h.state is HandleState.DONE
+        batch = engine.states[r.rid].generated[:r.decode_len]
+        assert len(batch) == r.decode_len > 0
+        # streamed callbacks and handle.tokens both equal the batch result
+        assert streamed[r.rid][:r.decode_len] == batch
+        assert h.tokens[:r.decode_len] == batch
+        # TTFT stamped at the run boundary that emitted token #1
+        assert r.t_first_token is not None
+        assert r.arrival <= r.t_first_token <= r.t_finish
+    # releasing handles drops the engine's per-request state too (the
+    # long-lived-session leak path); results were captured above
+    assert engine.slots_in_use == 0
+    for h in handles:
+        session.release(h)
+    assert engine.states == {}
+    assert session.stats().finished == []
+
+
+def test_jax_mixed_tier_trace_reports_per_class():
+    """Acceptance: a mixed two-tier trace through ServingSession on the
+    REAL engine completes with per-class SLA attainment reported."""
+    from repro.serving.engine import JaxEngine
+    from repro.serving.workload import LengthDist, from_model_config
+
+    cfg = _tiny("llama3.2-1b")
+    wl = from_model_config(cfg,
+                           prompt_dist=LengthDist((5, 7), (0.5, 0.5)),
+                           decode_dist=LengthDist((2, 3), (0.5, 0.5)))
+    engine = JaxEngine(cfg, max_len=32)
+    pred = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), 60.0)
+    session = ServingSession(LazyBatching(pred, max_batch=4), engine, seed=0)
+    rng = np.random.default_rng(1)
+    tiers = [SLAClass("gold", 30.0), SLAClass("bulk", 600.0)]
+    t = 0.0
+    for i in range(4):
+        t += rng.exponential(0.05)
+        r = wl.sample_request(rng, t)
+        r.sla = tiers[i % 2]
+        session.submit(r)                # engine samples the prompt itself
+    stats = session.drain()
+    assert len(stats.finished) == 4
+    pc = stats.per_class()
+    assert set(pc) == {"gold", "bulk"}
+    for name in ("gold", "bulk"):
+        assert pc[name]["completed"] == 2
+        assert not math.isnan(pc[name]["sla_attainment"])
+        assert not math.isnan(pc[name]["ttft_ms"])
+
+
+# ---------------------------------------------------------------------------
+# Metrics: p50 + per-class NaN safety
+# ---------------------------------------------------------------------------
+
+def test_summary_p50_and_nan_safe_empty_class():
+    wl = get_workload("transformer")
+    trace = poisson_trace(wl, rate=300, duration=0.1, seed=9)
+    stats = run_trace(lazyb(wl), SimExecutor(PERF), trace.fresh())
+    s = stats.summary(sla=0.1)
+    assert s["p25_ms"] <= s["p50_ms"] <= s["p75_ms"] <= s["p99_ms"]
+    # a declared class with no finishers reports NaN, not a crash
+    stats.classes["ghost"] = 0.05
+    s2 = stats.summary(sla=0.1)
+    assert math.isnan(s2["sla_viol[ghost]"])
+    pc = stats.per_class(sla=0.1)
+    assert math.isnan(pc["ghost"]["p99_ms"])
+    assert math.isnan(pc["ghost"]["sla_attainment"])
+    assert pc["ghost"]["completed"] == 0
+    # empty stats entirely NaN-safe
+    empty = ServeStats(policy="x", duration=1.0)
+    assert math.isnan(empty.summary(sla=0.1)["p50_ms"])
+    assert math.isnan(empty.ttft())
+    assert math.isnan(empty.tpot())
+
+
+def test_ttft_tpot_reported_for_cyclic_workloads():
+    wl = get_workload("transformer")
+    trace = poisson_trace(wl, rate=200, duration=0.1, seed=10)
+    stats = run_trace(lazyb(wl), SimExecutor(PERF), trace.fresh())
+    assert stats.ttft() > 0
+    assert stats.tpot() > 0
+    # TTFT <= full latency for every request
+    for r in stats.finished:
+        assert r.t_first_token is not None
+        assert r.arrival < r.t_first_token <= r.t_finish
+
+
+# ---------------------------------------------------------------------------
+# Offline-compat wrapper
+# ---------------------------------------------------------------------------
+
+def test_run_trace_matches_inference_server():
+    wl = get_workload("transformer")
+    trace = poisson_trace(wl, rate=600, duration=0.1, seed=11)
+    a = run_trace(lazyb(wl), SimExecutor(PERF), trace.fresh())
+    srv = InferenceServer(lazyb(wl), SimExecutor(PERF))
+    b = srv.run(trace.fresh())
+    assert sorted((r.rid, r.latency()) for r in a.finished) == \
+        sorted((r.rid, r.latency()) for r in b.finished)
+    assert srv.log.nodes_executed > 0       # wrapper still fills the log
+
+
+def test_serial_policy_through_session():
+    """Policies without a predictor run through the session unchanged."""
+    wl = get_workload("resnet")
+    trace = poisson_trace(wl, rate=100, duration=0.05, seed=12)
+    stats = run_trace(Serial(), SimExecutor(PERF), trace.fresh())
+    assert len(stats.finished) == len(trace.requests)
+    # static graph: exactly one (virtual) token, TTFT == finish time
+    for r in stats.finished:
+        assert r.n_tokens == 1
+        assert r.t_first_token == r.t_finish
