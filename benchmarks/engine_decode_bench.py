@@ -60,14 +60,14 @@ def _drive(engine, wl, reqs, mode, tokens):
         for r in reqs:
             sb = SubBatch([r])
             run = sb.run_nodes(stop_before={"D0"})
-            engine.execute_run(sb, run)
+            engine.execute_run("m", sb, run)
             sb.advance_n(len(run), 0.0)
     else:
         n_prefill = 1 + len(engine.kinds)
         for r in reqs:
             sb = SubBatch([r])
             for _ in range(n_prefill):
-                engine.execute(sb, r.next_node_id)
+                engine.execute("m", sb, r.next_node_id)
                 sb.advance(0.0)
     # merged decode: one sub-batch, lockstep cycles of D-nodes + head
     sb = SubBatch(list(reqs))
@@ -77,11 +77,11 @@ def _drive(engine, wl, reqs, mode, tokens):
         if mode == "fused":
             # one committed run per decode cycle (iteration-level boundary)
             run = sb.run_nodes(stop_after={"head"})
-            engine.execute_run(sb, run)
+            engine.execute_run("m", sb, run)
             sb.advance_n(len(run), 0.0)
         else:
             for _ in range(len(wl.cycle_ids())):
-                engine.execute(sb, sb.node_id)
+                engine.execute("m", sb, sb.node_id)
                 sb.advance(0.0)
         per_token.append(time.perf_counter() - t0)
     return per_token

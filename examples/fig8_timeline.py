@@ -34,8 +34,8 @@ class TimelineExecutor(SimExecutor):
         self.policy = policy
         self.events = []
 
-    def execute_run(self, sb, node_ids):
-        total, lats = super().execute_run(sb, node_ids)
+    def execute_run(self, model, sb, node_ids):
+        total, lats = super().execute_run(model, sb, node_ids)
         rids = sorted(r.rid for r in sb.live_requests)
         for node_id in node_ids:
             self.events.append((node_id, rids))

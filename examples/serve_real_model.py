@@ -116,7 +116,7 @@ def _reference_generate(engine: JaxEngine, wl, prompt, n_tokens: int):
     from repro.core.request import SubBatch
     sb = SubBatch([req])
     while not req.done:
-        engine.execute(sb, req.next_node_id)
+        engine.execute("m", sb, req.next_node_id)
         sb.advance(0.0)
     return engine.states[req.rid].generated[:n_tokens]
 

@@ -4,9 +4,12 @@ from .batch_table import BatchTable
 from .slack import SlackPredictor, OracleSlackPredictor
 from .policies import (Policy, Serial, GraphBatching, CellularBatching,
                        LazyBatching, Oracle)
+from .arbiter import (Arbiter, RoundRobinArbiter, LeastSlackArbiter,
+                      ARBITERS)
 
 __all__ = [
     "Request", "SLAClass", "SubBatch", "BatchTable", "SlackPredictor",
     "OracleSlackPredictor", "Policy", "Serial", "GraphBatching",
     "CellularBatching", "LazyBatching", "Oracle",
+    "Arbiter", "RoundRobinArbiter", "LeastSlackArbiter", "ARBITERS",
 ]

@@ -44,6 +44,11 @@ class Request:
     rid: int = field(default_factory=lambda: next(_rid_counter))
     idx: int = 0                        # next node to execute
     sla: Optional[SLAClass] = None      # None = predictor's global target
+    # registry model tag: which registered model serves this request
+    # (stamped by traffic.poisson_mixture and by multi-model
+    # ServingSession.submit; None falls back to the workload's own name
+    # for per-model reporting)
+    model: Optional[str] = None
     t_first_issue: Optional[float] = None
     # stamped by the session at the run boundary emitting token #1:
     t_first_token: Optional[float] = None
@@ -80,12 +85,21 @@ class Request:
         """Fresh, unexecuted copy (for comparing policies on one trace)."""
         return Request(workload=self.workload, arrival=self.arrival,
                        sequence=self.sequence, rid=self.rid, sla=self.sla,
+                       model=self.model,
                        prompt_len=self.prompt_len, decode_len=self.decode_len,
                        prefix_len=self.prefix_len, cycle_len=self.cycle_len)
 
     @property
     def sla_name(self) -> str:
         return self.sla.name if self.sla is not None else "default"
+
+    @property
+    def model_name(self) -> str:
+        """Reporting key for per-model breakdowns: the registry tag when
+        the request was routed through one, else its workload's name."""
+        if self.model is not None:
+            return self.model
+        return getattr(self.workload, "name", "default")
 
     @property
     def n_tokens(self) -> int:

@@ -12,25 +12,42 @@ run-commit scheduling core and print the same summary line:
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b \
       --policy lazyb --rate 200 --engine sim
 
+Multi-tenant serving: ``--models "llama3.2-1b:0.6,mamba2-2.7b:0.4"``
+registers one model per ``name:share`` pair (shares split ``--rate``),
+generates a Poisson mixture with independent per-model RNG streams, and
+arbitrates committed runs across models with ``--arbiter`` (``rr``
+round-robin baseline or the SLA-aware ``least-slack``). Per-model
+breakdowns print alongside the aggregate; the sim engine serves every
+model through one SimExecutor, the JAX engine builds one reduced-model
+engine per name behind a MultiBackend.
+
 Mixed-tier serving: ``--sla-tiers "gold:0.05,bulk:0.5"`` assigns each
 request one of the named SLA classes uniformly at random and reports
 per-class violation rates alongside the aggregate.
+
+``--json-out stats.json`` dumps the full ServeStats — summary, per-class
+AND per-model breakdowns, device-time shares — for CI artifacts and
+offline analysis.
 """
 from __future__ import annotations
 
 import argparse
+import json
 
 import numpy as np
 
 from ..configs import ARCHITECTURES, get_config
+from ..core.arbiter import LeastSlackArbiter, RoundRobinArbiter
 from ..core.policies import (CellularBatching, GraphBatching, LazyBatching,
                              Oracle, Serial)
 from ..core.request import SLAClass
 from ..core.slack import OracleSlackPredictor, SlackPredictor
+from ..serving.backend import MultiBackend
 from ..serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
 from ..serving.session import ServingSession
 from ..serving.server import SimExecutor
-from ..serving.traffic import bursty_trace, poisson_trace, with_sla_classes
+from ..serving.traffic import (bursty_trace, poisson_mixture, poisson_trace,
+                               with_sla_classes)
 from ..serving.workload import (LengthDist, from_model_config, get_workload)
 
 
@@ -59,6 +76,51 @@ def parse_tiers(spec: str):
     return classes
 
 
+def parse_models(spec: str):
+    """Parse ``name:share[,name:share...]`` into normalized (name, share)
+    pairs (the share splits the aggregate ``--rate``; model names may
+    contain dots/dashes, so the LAST colon separates the share)."""
+    pairs = []
+    for part in spec.split(","):
+        name, _, share = part.strip().rpartition(":")
+        try:
+            value = float(share)
+        except ValueError:
+            value = float("nan")
+        if not name or not value > 0:       # catches NaN, 0, negatives
+            raise SystemExit(
+                f"--models entry {part!r} must be name:positive_share")
+        pairs.append((name, value))
+    total = sum(s for _, s in pairs)
+    return [(n, s / total) for n, s in pairs]
+
+
+def _jax_workload(cfg):
+    # short prompts / few decode steps: CPU wall-clock budget
+    return from_model_config(
+        cfg, prompt_dist=LengthDist((6, 8, 10, 12), (0.25,) * 4),
+        decode_dist=LengthDist((2, 3, 4, 5), (0.25,) * 4))
+
+
+def _jax_engine(name, args):
+    """One reduced-model engine + its served workload for ``name``."""
+    from ..serving.engine import JaxEngine
+    arch = name if name in ARCHITECTURES else "llama3.2-1b"
+    cfg = get_config(arch).reduced()
+    return JaxEngine(cfg, max_len=64, seed=args.seed), _jax_workload(cfg)
+
+
+def _run_session(session, trace, label, args):
+    """The shared tail of every launcher path: replay, drain, report."""
+    session.duration = trace.duration
+    for req in trace.requests:
+        session.submit(req)
+    stats = session.drain()
+    print_summary(label, args, stats, session.log)
+    if args.json_out:
+        dump_json(args.json_out, stats, session.log, args)
+
+
 def print_summary(wl_name: str, args, stats, log):
     s = stats.summary(sla=args.sla)
     kind = "bursty" if args.bursty else "poisson"
@@ -74,12 +136,61 @@ def print_summary(wl_name: str, args, stats, log):
         tiers = "  ".join(f"{name} {row['sla_violation_rate'] * 100:.1f}%"
                           for name, row in per_class.items())
         print(f"  per-tier SLA viol: {tiers}")
+    if len(stats.models) > 1:
+        print(f"  aggregate SLA attainment "
+              f"{stats.attainment(args.sla) * 100:.1f}%")
+        for name, row in stats.per_model(args.sla).items():
+            busy = log.busy_by_model.get(name, 0.0)
+            print(f"  [{name}] completed {row['completed']}  "
+                  f"p50 {row['p50_ms']:.2f}ms  p99 {row['p99_ms']:.2f}ms  "
+                  f"attain {row['sla_attainment'] * 100:.1f}%  "
+                  f"busy {busy * 1e3:.1f}ms")
+
+
+def dump_json(path: str, stats, log, args):
+    """Full ServeStats snapshot: aggregate summary + per-class + per-model
+    breakdowns + device-time shares (NaN-safe: NaN serializes as null)."""
+
+    def clean(obj):
+        if isinstance(obj, dict):
+            return {k: clean(v) for k, v in obj.items()}
+        if isinstance(obj, float) and np.isnan(obj):
+            return None
+        return obj
+
+    doc = {
+        "args": {"engine": args.engine, "policy": args.policy,
+                 "rate": args.rate, "duration": args.duration,
+                 "sla": args.sla, "models": args.models,
+                 "arbiter": args.arbiter, "seed": args.seed},
+        "summary": clean(stats.summary(sla=args.sla)),
+        "per_class": clean(stats.per_class(args.sla)),
+        "per_model": clean(stats.per_model(args.sla)),
+        "registered_models": stats.models,
+        "rejected": stats.rejected,
+        "log": {"nodes_executed": log.nodes_executed,
+                "runs_executed": log.runs_executed,
+                "busy_time": log.busy_time,
+                "avg_batch_size": log.avg_batch_size,
+                "avg_run_length": log.avg_run_length,
+                "busy_by_model": dict(log.busy_by_model)},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {path}")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="transformer",
                     help="paper workload or assigned architecture id")
+    ap.add_argument("--models", default=None,
+                    help='multi-tenant mixture "name:share[,name:share...]"'
+                         ' — registers one model per entry; shares split '
+                         '--rate (overrides --arch)')
+    ap.add_argument("--arbiter", default="least-slack",
+                    choices=["rr", "least-slack"],
+                    help="cross-model dispatch arbiter (multi-model only)")
     ap.add_argument("--policy", default="lazyb",
                     choices=["serial", "graphb", "cellular", "lazyb",
                              "oracle"])
@@ -98,28 +209,57 @@ def main():
                     help="MMPP bursty arrivals instead of Poisson")
     ap.add_argument("--hw", default="paper", choices=["paper", "v5e"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json-out", default=None,
+                    help="write the full ServeStats (summary + per-class + "
+                         "per-model) to this JSON file")
     args = ap.parse_args()
 
-    # ---- workload + backend (the ONLY engine-dependent part) -----------
     perf = NPUPerfModel(PAPER_NPU if args.hw == "paper" else TPU_V5E)
+    if args.sla is None:
+        # jax serves reduced models on CPU wall-clock: seconds, not ms
+        args.sla = 60.0 if args.engine == "jax" else 0.1
+
+    # ---- multi-tenant mixture path -------------------------------------
+    if args.models:
+        assert not args.bursty, "--models implies Poisson mixture arrivals"
+        shares = parse_models(args.models)
+        if args.engine == "jax":
+            pairs = {name: _jax_engine(name, args) for name, _ in shares}
+            workloads = {name: wl for name, (_, wl) in pairs.items()}
+            backend = MultiBackend({name: eng
+                                    for name, (eng, _) in pairs.items()})
+        else:
+            workloads = {name: get_workload(name) for name, _ in shares}
+            backend = SimExecutor(perf)           # model-agnostic: one for all
+        arbiter = (RoundRobinArbiter() if args.arbiter == "rr"
+                   else LeastSlackArbiter(sla_default=args.sla))
+        session = ServingSession(backend=backend, arbiter=arbiter,
+                                 seed=args.seed)
+        for name, _ in shares:
+            wl = workloads[name]
+            session.register(name, wl,
+                             policy=build_policy(args.policy, wl, perf,
+                                                 args.sla, args.max_batch,
+                                                 args.window))
+        trace = poisson_mixture(
+            [(name, workloads[name], args.rate * share)
+             for name, share in shares],
+            args.duration, seed=args.seed)
+        if args.sla_tiers:
+            with_sla_classes(trace, parse_tiers(args.sla_tiers),
+                             seed=args.seed)
+        # submissions route on each request's mixture model tag
+        _run_session(session, trace,
+                     "+".join(name for name, _ in shares), args)
+        return
+
+    # ---- single-model path ---------------------------------------------
     if args.engine == "jax":
-        from ..serving.engine import JaxEngine
-        arch = args.arch if args.arch in ARCHITECTURES else "llama3.2-1b"
-        cfg = get_config(arch).reduced()
-        # short prompts / few decode steps: CPU wall-clock budget
-        wl = from_model_config(
-            cfg, prompt_dist=LengthDist((6, 8, 10, 12), (0.25,) * 4),
-            decode_dist=LengthDist((2, 3, 4, 5), (0.25,) * 4))
-        backend = JaxEngine(cfg, max_len=64, seed=args.seed)
-        if args.sla is None:
-            args.sla = 60.0                       # CPU wall-clock is slow
+        backend, wl = _jax_engine(args.arch, args)
     else:
         wl = get_workload(args.arch)
-        if args.sla is None:
-            args.sla = 0.1
         backend = SimExecutor(perf)
 
-    # ---- trace ---------------------------------------------------------
     if args.bursty:
         trace = bursty_trace(wl, args.rate * 0.3, args.rate * 2.0,
                              switch_period=args.duration / 6,
@@ -129,15 +269,10 @@ def main():
     if args.sla_tiers:
         with_sla_classes(trace, parse_tiers(args.sla_tiers), seed=args.seed)
 
-    # ---- one serving loop for both engines -----------------------------
     policy = build_policy(args.policy, wl, perf, args.sla, args.max_batch,
                           args.window)
-    session = ServingSession(policy, backend, seed=args.seed)
-    session.duration = trace.duration
-    for req in trace.requests:
-        session.submit(req)
-    stats = session.drain()
-    print_summary(wl.name, args, stats, session.log)
+    _run_session(session=ServingSession(policy, backend, seed=args.seed),
+                 trace=trace, label=wl.name, args=args)
 
 
 if __name__ == "__main__":

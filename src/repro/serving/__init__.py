@@ -2,20 +2,33 @@ from .workload import (Workload, NodeDesc, Segment, LengthDist,
                        wmt_like_length_dist, fixed_length, get_workload,
                        from_model_config, PAPER_WORKLOADS)
 from .npu_model import NPUPerfModel, HardwareSpec, PAPER_NPU, TPU_V5E
-from .traffic import (Trace, poisson_trace, bursty_trace, colocated_trace,
-                      with_sla_classes)
-from .backend import Backend, ServerLog, run_label
-from .session import ServingSession, RequestHandle, HandleState, run_trace
-from .server import InferenceServer, SimExecutor, Executor, run_policy
+from .traffic import (Trace, poisson_trace, poisson_mixture, bursty_trace,
+                      colocated_trace, with_sla_classes)
+from .backend import Backend, MultiBackend, ServerLog, run_label
+from .registry import ModelEntry, ModelRegistry
+from .session import (ServingSession, RequestHandle, HandleState, run_trace,
+                      run_mixture, DEFAULT_MODEL)
+from .server import InferenceServer, SimExecutor, run_policy
 from .metrics import ServeStats
 
 __all__ = [
     "Workload", "NodeDesc", "Segment", "LengthDist", "wmt_like_length_dist",
     "fixed_length", "get_workload", "from_model_config", "PAPER_WORKLOADS",
     "NPUPerfModel", "HardwareSpec", "PAPER_NPU", "TPU_V5E",
-    "Trace", "poisson_trace", "bursty_trace", "colocated_trace",
-    "with_sla_classes",
-    "Backend", "ServerLog", "run_label",
+    "Trace", "poisson_trace", "poisson_mixture", "bursty_trace",
+    "colocated_trace", "with_sla_classes",
+    "Backend", "MultiBackend", "ServerLog", "run_label",
+    "ModelEntry", "ModelRegistry",
     "ServingSession", "RequestHandle", "HandleState", "run_trace",
-    "InferenceServer", "SimExecutor", "Executor", "run_policy", "ServeStats",
+    "run_mixture", "DEFAULT_MODEL",
+    "InferenceServer", "SimExecutor", "run_policy", "ServeStats",
 ]
+
+
+def __getattr__(name):
+    if name == "Executor":                  # retired alias of Backend
+        import warnings
+        warnings.warn("Executor is deprecated; use repro.serving.Backend",
+                      DeprecationWarning, stacklevel=2)
+        return Backend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

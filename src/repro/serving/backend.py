@@ -1,33 +1,45 @@
-"""The one Backend contract both execution substrates implement.
+"""The one model-keyed Backend contract every execution substrate implements.
 
 A *backend* is what a :class:`~repro.serving.session.ServingSession` (and
 therefore the ``InferenceServer`` wrapper) drives: something that can
-execute committed node runs for a sub-batch and report latency on its own
-clock —
+execute committed node runs for a sub-batch of a named **model** and
+report latency on its own clock —
 
   * ``SimExecutor`` (``server.py``) — the analytical NPU latency model;
-    latency is *virtual* time (the paper's methodology),
+    latency is *virtual* time (the paper's methodology). It reads each
+    request's own workload, so ONE instance serves every registered model,
   * ``JaxEngine`` (``engine.py``) — real jitted dispatches on a reduced
-    model; latency is *wall-clock* time measured at run boundaries.
+    model; latency is *wall-clock* time measured at run boundaries. One
+    engine holds one model's parameters and KV arena, so multi-tenant
+    sessions put one engine per model behind a :class:`MultiBackend`.
 
-The session never branches on which one it holds: admission, clock
-advancement, handle lifecycle, and metrics are identical — only the
-meaning of a second differs. Beyond execution, the contract covers the
-two things an online front-end needs that the offline trace loop did not:
+Every method takes the registry model name first (``prepare(model, req,
+...)``, ``execute_run(model, sb, run)``): the session always says *which*
+model's work this is, single-model backends are free to ignore the key,
+and :class:`MultiBackend` routes on it. The session never branches on
+which backend it holds: admission, clock advancement, handle lifecycle,
+and metrics are identical — only the meaning of a second differs. All
+backends behind one session share one **device-time clock**: whichever
+backend executes a run, its latency advances the same ``session.now``, so
+co-located models contend for device time exactly as on one accelerator.
 
-  * ``prepare(req, rng, prompt_tokens=...)`` — per-request setup at submit
-    time (the JAX engine registers/samples the prompt here; the simulator
-    needs nothing),
-  * ``token_count(req)`` / ``tokens(req)`` — response-progress
-    observability at run boundaries, driving TTFT/TPOT metrics and the
-    ``on_token`` streaming callbacks. The base implementation derives a
-    *virtual* token count from request progress (one token per completed
-    decode cycle; a static graph's single response counts as one token on
-    completion), which is exactly right for the simulator; the JAX engine
-    overrides both with its actually sampled token ids.
+Beyond execution, the contract covers the two things an online front-end
+needs that the offline trace loop did not:
 
-``Executor`` in ``server.py`` is an alias of this class (the pre-session
-name, kept for compatibility — ``JaxEngine`` and every test subclass it).
+  * ``prepare(model, req, rng, prompt_tokens=...)`` — per-request setup at
+    submit time (the JAX engine registers/samples the prompt here; the
+    simulator needs nothing),
+  * ``token_count(model, req)`` / ``tokens(model, req)`` — response-
+    progress observability at run boundaries, driving TTFT/TPOT metrics
+    and the ``on_token`` streaming callbacks. The base implementation
+    derives a *virtual* token count from request progress (one token per
+    completed decode cycle; a static graph's single response counts as one
+    token on completion), which is exactly right for the simulator; the
+    JAX engine overrides both with its actually sampled token ids.
+
+``Executor`` — the pre-session name of this contract — is retired;
+accessing ``repro.serving.server.Executor`` still resolves to ``Backend``
+behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
@@ -38,18 +50,19 @@ from ..core.request import Request, SubBatch
 
 
 class Backend:
-    def prepare(self, req: Request, rng, prompt_tokens=None) -> None:
+    def prepare(self, model: str, req: Request, rng,
+                prompt_tokens=None) -> None:
         """Per-request setup at submission time (before the request can be
         scheduled). Real engines allocate/register request state here —
         e.g. the JAX engine stores the prompt (``prompt_tokens``, or a
         random one sampled from ``rng`` at the request's ``prompt_len``).
         The analytic simulator keeps no per-request state — default no-op."""
 
-    def execute(self, sb: SubBatch, node_id: str) -> float:
+    def execute(self, model: str, sb: SubBatch, node_id: str) -> float:
         """Execute one node for a sub-batch; returns latency in seconds."""
         raise NotImplementedError
 
-    def execute_run(self, sb: SubBatch,
+    def execute_run(self, model: str, sb: SubBatch,
                     node_ids: Sequence[str]) -> Tuple[float, Optional[List[float]]]:
         """Execute a committed run of consecutive nodes for one sub-batch.
 
@@ -61,10 +74,10 @@ class Backend:
         :meth:`execute` per node, the degenerate single-dispatch-per-node
         behavior.
         """
-        lats = [self.execute(sb, nid) for nid in node_ids]
+        lats = [self.execute(model, sb, nid) for nid in node_ids]
         return sum(lats), lats
 
-    def on_finished(self, reqs: Sequence[Request]) -> None:
+    def on_finished(self, model: str, reqs: Sequence[Request]) -> None:
         """Completion hook: the session calls this with every request that
         finished at the last run boundary, so stateful backends can
         release per-request *device* resources (e.g. KV-cache arena
@@ -72,25 +85,75 @@ class Backend:
         they stay readable until :meth:`release_request`. The analytic
         simulator keeps no per-request state — default no-op."""
 
-    def release_request(self, req: Request) -> None:
+    def release_request(self, model: str, req: Request) -> None:
         """Forget ``req`` entirely (``ServingSession.release``): drop any
         remaining host-side state, e.g. the JAX engine's per-request
         prompt/token record. Long-lived online sessions call this per
         completed request; offline trace replays never do, so results
         remain inspectable after a drained run. Default no-op."""
 
-    def token_count(self, req: Request) -> int:
+    def token_count(self, model: str, req: Request) -> int:
         """Response tokens produced so far for ``req`` (consulted at run
         boundaries). Default: derived from request progress — one token
         per completed decode cycle, or one token at completion for static
         (single-response) graphs."""
         return req.n_tokens
 
-    def tokens(self, req: Request) -> Optional[Sequence[int]]:
+    def tokens(self, model: str, req: Request) -> Optional[Sequence[int]]:
         """Actual sampled token ids for ``req`` (prefix of length
         :meth:`token_count`), or ``None`` when the backend has no real
         tokens (the simulator) — streaming then reports placeholder ids."""
         return None
+
+
+class MultiBackend(Backend):
+    """Model-keyed mux over per-model backends.
+
+    ``MultiBackend({"llama": JaxEngine(cfg_a), "mamba": JaxEngine(cfg_b)})``
+    routes every contract call to the named model's backend, passing the
+    model key through (inner backends may themselves be shared across
+    keys — e.g. one stateless ``SimExecutor`` registered under several
+    names). The mux is what makes per-model engines look like ONE device
+    to the session: all inner latencies accumulate on the session's single
+    device-time clock (each model's share of it is tracked by the session
+    in ``ServerLog.busy_by_model``).
+    """
+
+    def __init__(self, backends: Dict[str, Backend]):
+        if not backends:
+            raise ValueError("MultiBackend needs at least one backend")
+        self.backends = dict(backends)
+
+    def backend_for(self, model: str) -> Backend:
+        try:
+            return self.backends[model]
+        except KeyError:
+            raise KeyError(
+                f"no backend for model {model!r} "
+                f"(have: {sorted(self.backends)})") from None
+
+    # ------------------------------------------------------------------
+    def prepare(self, model, req, rng, prompt_tokens=None):
+        self.backend_for(model).prepare(model, req, rng,
+                                        prompt_tokens=prompt_tokens)
+
+    def execute(self, model, sb, node_id):
+        return self.backend_for(model).execute(model, sb, node_id)
+
+    def execute_run(self, model, sb, node_ids):
+        return self.backend_for(model).execute_run(model, sb, node_ids)
+
+    def on_finished(self, model, reqs):
+        self.backend_for(model).on_finished(model, reqs)
+
+    def release_request(self, model, req):
+        self.backend_for(model).release_request(model, req)
+
+    def token_count(self, model, req):
+        return self.backend_for(model).token_count(model, req)
+
+    def tokens(self, model, req):
+        return self.backend_for(model).tokens(model, req)
 
 
 @dataclass
@@ -112,8 +175,11 @@ class ServerLog:
     batch_size_sum: int = 0
     # per-node-id latency breakdown; fused runs (no per-node observability)
     # are keyed by their span, e.g. "D0..head" — making run-fusion wins
-    # visible per phase next to the per-node entries
+    # visible per phase next to the per-node entries. Multi-model sessions
+    # prefix keys with the model name ("llama:D0..head").
     node_lat: Dict[str, NodeLat] = field(default_factory=dict)
+    # per-model share of the (single) device-time clock
+    busy_by_model: Dict[str, float] = field(default_factory=dict)
 
     def record(self, key: str, latency: float, n: int = 1):
         ent = self.node_lat.setdefault(key, NodeLat())

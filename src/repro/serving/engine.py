@@ -24,7 +24,7 @@ Per-request caches live in a preallocated, device-resident slot arena;
 requests own a lazily-assigned slot for their lifetime, prefill writes
 into the slot in-jit, decode gathers/scatters rows by a ``(B,)`` slot
 vector, and slots are released on completion (idempotently again via
-``Executor.on_finished``). Storage is now **per-span, flat-indexed**:
+``Backend.on_finished``). Storage is now **per-span, flat-indexed**:
 consecutive same-(kind, window) layers form a span whose arena pytree
 folds the layer axis into the slot axis — leaves are
 ``(span_len * n_slots, max_len, ...)`` for time-axis keys (k/v/ckv/krope)
@@ -95,7 +95,7 @@ from ..core.request import Request, SubBatch
 from ..models import layers as L
 from ..models.cost import _layer_kinds
 from ..models.model import Model, RuntimeFlags, _index, _stack
-from .server import Executor
+from .backend import Backend
 
 # cache leaves whose leading (post-batch) axis is the KV time axis
 _TIME_AXIS_KEYS = ("k", "v", "ckv", "krope")
@@ -129,8 +129,14 @@ class EngineState:
         self.pos: int = self.prefill_len         # next KV slot to write
 
 
-class JaxEngine(Executor):
+class JaxEngine(Backend):
     """Executes workload nodes on a real (reduced) model.
+
+    One engine holds ONE model's parameters and KV arena, so the
+    ``model`` key threaded through the Backend contract is accepted and
+    ignored — multi-tenant sessions put one engine per registered model
+    behind a :class:`~repro.serving.backend.MultiBackend`, which routes
+    on the key before it gets here.
 
     ``cache_mode``: "arena" (default) uses the persistent slot arena;
     "legacy" keeps per-request caches and restacks them per dispatch (the
@@ -241,7 +247,7 @@ class JaxEngine(Executor):
     def register(self, req: Request, prompt_tokens: np.ndarray):
         self.states[req.rid] = EngineState(prompt_tokens)
 
-    def prepare(self, req: Request, rng, prompt_tokens=None):
+    def prepare(self, model, req: Request, rng, prompt_tokens=None):
         """Backend-contract hook (ServingSession.submit): register the
         request's prompt — the supplied tokens, or a synthetic prompt of
         ``req.prompt_len`` sampled from ``rng`` (the session's seeded
@@ -254,11 +260,12 @@ class JaxEngine(Executor):
                                          size=max(2, req.prompt_len))
         self.register(req, np.asarray(prompt_tokens))
 
-    def token_count(self, req: Request) -> int:
+    def token_count(self, model, req: Request) -> int:
         st = self.states.get(req.rid)
-        return len(st.generated) if st is not None else super().token_count(req)
+        return (len(st.generated) if st is not None
+                else super().token_count(model, req))
 
-    def tokens(self, req: Request):
+    def tokens(self, model, req: Request):
         st = self.states.get(req.rid)
         return st.generated if st is not None else None
 
@@ -318,11 +325,11 @@ class JaxEngine(Executor):
     def slots_in_use(self) -> int:
         return len(self._slot)
 
-    def on_finished(self, reqs: Sequence[Request]) -> None:
+    def on_finished(self, model, reqs: Sequence[Request]) -> None:
         for r in reqs:
             self.release_slot(r)
 
-    def release_request(self, req: Request) -> None:
+    def release_request(self, model, req: Request) -> None:
         """Drop the request's host-side EngineState (prompt, generated
         tokens, activations) once the caller is done with its results —
         wired through ``ServingSession.release`` so long-lived online
@@ -688,11 +695,11 @@ class JaxEngine(Executor):
                 if last:
                     st.x = None
 
-    def execute_run(self, sb: SubBatch, node_ids: Sequence[str]):
+    def execute_run(self, model, sb: SubBatch, node_ids: Sequence[str]):
         """Execute a committed run; returns ``(latency, None)`` — per-node
         latency is unobservable inside fused dispatches, by design."""
         if self.cache_mode != "arena" or not self.fused or len(node_ids) == 1:
-            return super().execute_run(sb, node_ids)
+            return super().execute_run(model, sb, node_ids)
         t0 = time.perf_counter()
         reqs = sb.live_requests
         wl = reqs[0].workload
@@ -792,7 +799,7 @@ class JaxEngine(Executor):
     # ------------------------------------------------------------------
     # Single-node dispatch (degenerate run; bit-exactness reference)
     # ------------------------------------------------------------------
-    def execute(self, sb: SubBatch, node_id: str) -> float:
+    def execute(self, model, sb: SubBatch, node_id: str) -> float:
         t0 = time.perf_counter()
         reqs = sb.live_requests
         outs = []

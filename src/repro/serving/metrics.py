@@ -4,9 +4,18 @@ Per-SLA-class reporting: every request carries a class name (``"default"``
 when it has no :class:`~repro.core.request.SLAClass`), and a finished
 session records the classes it saw (name -> deadline, ``None`` for the
 default class, whose deadline is supplied at ``summary(sla=...)`` time).
-All per-class aggregates are NaN-safe when a class has no finishers.
-TTFT/TPOT need ``t_first_token``, which only the session front-end stamps
-(at the run boundary emitting token #1) — trace replays through
+
+Per-model reporting: requests routed through a
+:class:`~repro.serving.registry.ModelRegistry` carry a model tag
+(untagged requests fall back to their workload's name), and the session
+records the registered models (name -> policy name) so a model with zero
+finishers still appears, NaN-safe, in :meth:`ServeStats.per_model`.
+Aggregate *attainment* across mixed SLA classes judges every request
+against its **own** deadline (class deadline, else the supplied default).
+
+All aggregates are NaN-safe when a slice has no finishers. TTFT/TPOT need
+``t_first_token``, which only the session front-end stamps (at the run
+boundary emitting token #1) — trace replays through
 ``run_trace``/``InferenceServer.run`` get it for free.
 """
 from __future__ import annotations
@@ -25,6 +34,12 @@ def _mean(xs: List[float]) -> float:
     return float(np.mean(xs)) if xs else _NAN
 
 
+def _percentile(reqs: List[Request], q: float) -> float:
+    if not reqs:
+        return _NAN
+    return float(np.percentile([r.latency() for r in reqs], q))
+
+
 @dataclass
 class ServeStats:
     policy: str
@@ -34,12 +49,19 @@ class ServeStats:
     # SLA classes observed at submission: name -> relative deadline
     # (None for the default class — its target arrives via summary(sla=...))
     classes: Dict[str, Optional[float]] = field(default_factory=dict)
+    # registered models: name -> policy name (empty for pre-registry stats)
+    models: Dict[str, str] = field(default_factory=dict)
 
     # ------------------------------------------------------------------
     def of_class(self, name: Optional[str] = None) -> List[Request]:
         if name is None:
             return self.finished
         return [r for r in self.finished if r.sla_name == name]
+
+    def of_model(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.finished
+        return [r for r in self.finished if r.model_name == name]
 
     @property
     def latencies(self) -> np.ndarray:
@@ -51,9 +73,7 @@ class ServeStats:
         return float(lat.mean()) if len(lat) else _NAN
 
     def percentile(self, q: float, cls: Optional[str] = None) -> float:
-        lat = (self.latencies if cls is None else
-               np.array([r.latency() for r in self.of_class(cls)]))
-        return float(np.percentile(lat, q)) if len(lat) else _NAN
+        return _percentile(self.of_class(cls), q)
 
     @property
     def makespan(self) -> float:
@@ -79,6 +99,26 @@ class ServeStats:
     def sla_attainment(self, sla: float, cls: Optional[str] = None) -> float:
         v = self.sla_violation_rate(sla, cls)
         return _NAN if np.isnan(v) else 1.0 - v
+
+    def _deadline_of(self, req: Request,
+                     default_sla: Optional[float]) -> Optional[float]:
+        """The deadline ``req`` is judged against: its own SLA class, else
+        its class's recorded deadline, else the supplied default."""
+        if req.sla is not None:
+            return req.sla.deadline
+        return self._class_deadline(req.sla_name, default_sla)
+
+    def attainment(self, sla: Optional[float] = None,
+                   model: Optional[str] = None) -> float:
+        """Aggregate SLA attainment with per-request deadlines: the
+        fraction of finished requests meeting their *own* class deadline
+        (``sla`` supplies the default class's). Mixed-tier and
+        multi-model runs are judged fairly — a request is never held to
+        another tier's target. NaN when no finisher has a deadline."""
+        judged = [(r.latency() <= d)
+                  for r in self.of_model(model)
+                  for d in [self._deadline_of(r, sla)] if d is not None]
+        return _mean([float(ok) for ok in judged])
 
     def ttft(self, cls: Optional[str] = None) -> float:
         """Mean time-to-first-token (seconds from arrival; session-stamped)."""
@@ -121,6 +161,33 @@ class ServeStats:
             }
         return out
 
+    def per_model(self, sla: Optional[float] = None
+                  ) -> Dict[str, Dict[str, float]]:
+        """Per-model breakdown across the registry: completion count,
+        attainment against each request's *own* SLA-class deadline
+        (``sla`` = default class target), p50/p99 latency, TTFT, TPOT.
+        Registered models with no finishers appear with NaN rows."""
+        names = set(self.models) | {r.model_name for r in self.finished}
+        out: Dict[str, Dict[str, float]] = {}
+        for name in sorted(names):
+            reqs = self.of_model(name)
+            att = self.attainment(sla, model=name)
+            out[name] = {
+                "completed": len(reqs),
+                "sla_attainment": att,
+                "sla_violation_rate": (_NAN if np.isnan(att) else 1.0 - att),
+                "p50_ms": _percentile(reqs, 50) * 1e3,
+                "p99_ms": _percentile(reqs, 99) * 1e3,
+                "ttft_ms": _mean([r.t_first_token - r.arrival for r in reqs
+                                  if r.t_first_token is not None]) * 1e3,
+                "tpot_ms": _mean(
+                    [(r.t_finish - r.t_first_token) / (r.n_tokens - 1)
+                     for r in reqs
+                     if r.t_first_token is not None and r.n_tokens >= 2])
+                    * 1e3,
+            }
+        return out
+
     # ------------------------------------------------------------------
     def summary(self, sla: Optional[float] = None) -> Dict[str, float]:
         out = {
@@ -144,4 +211,10 @@ class ServeStats:
                 continue                         # single-tier: no breakdown
             if not np.isnan(row["deadline_ms"]):
                 out[f"sla_viol[{name}]"] = row["sla_violation_rate"]
+        # per-model breakdown only for genuinely multi-tenant runs
+        if len(self.models) > 1 or len({r.model_name
+                                        for r in self.finished}) > 1:
+            for name, row in self.per_model(sla).items():
+                out[f"sla_viol[model:{name}]"] = row["sla_violation_rate"]
+                out[f"p99_ms[model:{name}]"] = row["p99_ms"]
         return out

@@ -1,0 +1,80 @@
+"""The model registry: the front door for multi-tenant serving.
+
+The paper evaluates LazyBatching on co-located DNNs sharing one NPU:
+batching is per-model (batch tables are per-graph), while scheduling
+arbitrates node-level work *across* the concurrently served graphs. The
+:class:`ModelRegistry` is that co-location made explicit — each registered
+model owns
+
+  * a **name** (the routing key: ``submit(req, model=...)``, traffic
+    tags, backend muxing, per-model stats),
+  * a **workload** (its node graph / request template; optional for the
+    legacy single-model sessions that infer it from submitted requests),
+  * a **policy** — its own batching policy and therefore its own
+    BatchTable and slack predictor; admission and merging never cross
+    models.
+
+What *is* shared is the device: one :class:`~repro.serving.backend.
+Backend` (possibly a :class:`~repro.serving.backend.MultiBackend` mux)
+executes every model's committed runs on one session clock, and one
+cross-model :class:`~repro.core.arbiter.Arbiter` decides whose run
+dispatches next.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from ..core.policies import Policy
+
+
+@dataclass
+class ModelEntry:
+    """One registered model: name + workload + its private policy."""
+    name: str
+    workload: Optional[object]          # serving.workload.Workload
+    policy: Policy
+    index: int                          # registration order (arbiter RR)
+
+    def __repr__(self):
+        wl = getattr(self.workload, "name", None)
+        return (f"ModelEntry({self.name!r}, workload={wl!r}, "
+                f"policy={self.policy.name})")
+
+
+class ModelRegistry:
+    """Name-keyed registry of served models, in registration order."""
+
+    def __init__(self):
+        self._entries: Dict[str, ModelEntry] = {}
+
+    def register(self, name: str, workload=None, *,
+                 policy: Policy) -> ModelEntry:
+        if name in self._entries:
+            raise ValueError(f"model {name!r} already registered")
+        entry = ModelEntry(name=name, workload=workload, policy=policy,
+                           index=len(self._entries))
+        self._entries[name] = entry
+        return entry
+
+    # ------------------------------------------------------------------
+    def __getitem__(self, name: str) -> ModelEntry:
+        try:
+            return self._entries[name]
+        except KeyError:
+            raise KeyError(
+                f"model {name!r} is not registered "
+                f"(registered: {sorted(self._entries) or 'none'})") from None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def entries(self) -> List[ModelEntry]:
+        """All entries in registration order (dicts preserve insertion)."""
+        return list(self._entries.values())
+
+    def names(self) -> List[str]:
+        return list(self._entries)

@@ -11,16 +11,19 @@ The loop itself lives in :class:`~repro.serving.session.ServingSession`
 (the online submit/stream front-end); this module keeps the offline
 conveniences on top of it:
 
-  * ``SimExecutor``  — analytical NPU latency model (paper's methodology),
+  * ``SimExecutor``  — analytical NPU latency model (paper's methodology);
+    model-agnostic — it reads each request's own workload, so one
+    instance serves every registered model of a multi-tenant session,
   * ``InferenceServer`` / ``run_policy`` — trace-in, stats-out wrappers
     (each run is one drained session; behavior and statistics unchanged).
 
-``Executor`` is the pre-session name of the :class:`~repro.serving.
-backend.Backend` contract — the real-JAX engine and test executors
-subclass it; both names refer to the same class.
+``Executor`` — the pre-session alias of the :class:`~repro.serving.
+backend.Backend` contract — is retired; accessing it here still resolves
+to ``Backend`` behind a ``DeprecationWarning``.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from ..core.policies import Policy
@@ -30,22 +33,28 @@ from .npu_model import NPUPerfModel
 from .session import run_trace
 from .traffic import Trace
 
-# compatibility alias: the one Backend contract under its historical name
-Executor = Backend
+
+def __getattr__(name):
+    if name == "Executor":          # retired alias: warn once per call site
+        warnings.warn("Executor is deprecated; use "
+                      "repro.serving.backend.Backend",
+                      DeprecationWarning, stacklevel=2)
+        return Backend
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-class SimExecutor(Executor):
+class SimExecutor(Backend):
     def __init__(self, perf_model: NPUPerfModel):
         self.perf = perf_model
 
-    def execute(self, sb, node_id: str) -> float:
+    def execute(self, model, sb, node_id: str) -> float:
         reqs = sb.live_requests
         wl = reqs[0].workload
         node = wl.nodes[node_id]
         ctxs = [r.next_ctx for r in reqs]
         return self.perf.node_latency(node, ctxs)
 
-    def execute_run(self, sb, node_ids):
+    def execute_run(self, model, sb, node_ids):
         # per-node ctx is read at the node's own offset into each member's
         # sequence (requests only advance at run boundaries, but attention
         # context still grows per node *within* the run)
@@ -61,7 +70,7 @@ class SimExecutor(Executor):
 class InferenceServer:
     """Offline wrapper: one drained :class:`ServingSession` per ``run``."""
 
-    def __init__(self, policy: Policy, executor: Executor):
+    def __init__(self, policy: Policy, executor: Backend):
         self.policy = policy
         self.executor = executor
         self.log = ServerLog()

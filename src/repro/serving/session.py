@@ -1,30 +1,36 @@
 """Online serving session: submit/stream front-end over the run-commit core.
 
-The paper's premise is SLA-aware scheduling of a *live* request stream, but
-the original front-end was offline: ``InferenceServer.run(trace)`` ingested
-a pre-sorted arrival list and only returned stats after full drain. A
-:class:`ServingSession` turns that inside out —
+The paper's premise is SLA-aware scheduling of a *live* request stream
+across **co-located models sharing one NPU** (§VI-C). A
+:class:`ServingSession` is that front-end: requests are submitted against
+a :class:`~repro.serving.registry.ModelRegistry` of named models, each
+with its *own* batching policy (and therefore its own per-graph
+BatchTable and slack predictor — batching never crosses models), while a
+cross-model :class:`~repro.core.arbiter.Arbiter` decides whose committed
+run dispatches next on the one shared device clock:
 
-    session = ServingSession(policy, backend)
-    h = session.submit(req, on_token=lambda h, t: ...)
+    session = ServingSession(backend=SimExecutor(perf),
+                             arbiter=LeastSlackArbiter())
+    session.register("llama", wl_a, policy=LazyBatching(pred_a))
+    session.register("mamba", wl_b, policy=LazyBatching(pred_b))
+    h = session.submit(req, model="llama", on_token=lambda h, t: ...)
     session.run_until(t)        # incremental clock advancement
     session.step()              # ... or one scheduling step at a time
     h.state                     # QUEUED → ADMITTED → RUNNING → DONE
     session.drain()             # finish everything -> ServeStats
 
-while the scheduling core underneath is exactly the PR-2 run-commit loop:
-the policy is consulted at every run boundary, commits a run of
-consecutive node ids, and the backend executes it as one fused dispatch.
-Requests can be submitted mid-flight, observed, rejected at admission
-control, and given *per-request SLA classes* (``Request.sla``); both
-execution substrates — the analytic ``SimExecutor`` (virtual time) and the
-real ``JaxEngine`` (wall-clock time) — drive through the same
-:class:`~repro.serving.backend.Backend` contract, so every scenario runs
-unchanged on either.
+The single-model construction ``ServingSession(policy, backend)`` is
+unchanged — it registers the policy under the ``"default"`` name and
+every ``submit`` routes to it; with one registered model the arbiter is
+never consulted, so results are bit-identical to the pre-registry
+sessions. The scheduling core underneath is exactly the PR-2 run-commit
+loop: each model's policy is consulted at every run boundary, commits a
+run of consecutive node ids, the arbiter picks among the ready models,
+and the backend executes the winner as one fused dispatch.
 
 Handle lifecycle
 ----------------
-``QUEUED``   — submitted, waiting in the policy's InfQ (or in the
+``QUEUED``   — submitted, waiting in its model policy's InfQ (or in the
                session's future-arrivals queue when submitted ahead of its
                arrival time, e.g. trace replay);
 ``ADMITTED`` — the policy pulled it out of the InfQ into its batch state
@@ -48,24 +54,30 @@ JAX backend these are bit-exact the batch ``execute_run`` results.
 Compatibility
 -------------
 ``run_trace(policy, backend, trace)`` replays an offline trace through a
-session and returns the familiar :class:`ServeStats`;
-``InferenceServer.run`` and ``run_policy`` are thin wrappers over it, so
-every pre-existing experiment script and test runs unmodified.
+single-model session and returns the familiar :class:`ServeStats`;
+``run_mixture(models, backend, trace)`` is its multi-tenant sibling
+(requests route on their ``model`` tag); ``InferenceServer.run`` and
+``run_policy`` are thin wrappers over ``run_trace``, so every
+pre-existing experiment script and test runs unmodified.
 """
 from __future__ import annotations
 
 import heapq
 import itertools
 from enum import Enum
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core.arbiter import Arbiter, LeastSlackArbiter
 from ..core.policies import Policy
 from ..core.request import Request
 from .backend import Backend, ServerLog, run_label
 from .metrics import ServeStats
+from .registry import ModelEntry, ModelRegistry
 from .traffic import Trace
+
+DEFAULT_MODEL = "default"
 
 
 class HandleState(Enum):
@@ -80,16 +92,19 @@ class RequestHandle:
     """Caller-facing view of one submitted request's lifecycle."""
 
     def __init__(self, req: Request, session: "ServingSession",
-                 on_token: Optional[Callable] = None):
+                 on_token: Optional[Callable] = None,
+                 model: Optional[str] = None):
         self.request = req
         self.t_submit = session.now
         self.on_token = on_token
+        # registry name of the entry serving this request (authoritative
+        # routing key — independent of the request's reporting tag)
+        self.model = model
         self.tokens: List[int] = []     # streamed response tokens so far
         self._n_tokens = 0
         self._rejected = False
         self._running = False
 
-    # ------------------------------------------------------------------
     @property
     def state(self) -> HandleState:
         """Derived, monotone lifecycle state (no per-step bookkeeping)."""
@@ -134,24 +149,39 @@ class RequestHandle:
 
 
 class ServingSession:
-    """Online serving front-end over one (policy, backend) pair.
+    """Online serving front-end over a model registry and one backend.
 
-    ``reject_infeasible``: when the policy carries a slack predictor,
-    refuse at submit time any request whose own deadline is unmeetable
-    even running alone immediately (conservative single-input bound) —
-    the handle goes straight to ``REJECTED`` instead of burning batch
-    slack on a guaranteed violation. Off by default (the paper's system
-    never drops work).
+    ``policy`` (positional, optional): single-model convenience — the
+    policy is registered under the ``"default"`` model name, preserving
+    the pre-registry ``ServingSession(policy, backend)`` construction
+    bit-identically. Multi-tenant sessions omit it and call
+    :meth:`register` per model instead.
+
+    ``arbiter``: cross-model dispatch order when several registered
+    models have committed runs ready (default
+    :class:`~repro.core.arbiter.LeastSlackArbiter`, the paper's SLA-aware
+    behavior; never consulted with a single registered model).
+
+    ``reject_infeasible``: when a model's policy carries a slack
+    predictor, refuse at submit time any request whose own deadline is
+    unmeetable even running alone immediately (conservative single-input
+    bound) — the handle goes straight to ``REJECTED`` instead of burning
+    batch slack on a guaranteed violation. Off by default (the paper's
+    system never drops work).
 
     ``seed`` feeds the RNG handed to ``Backend.prepare`` (the JAX engine
     samples synthetic prompts from it when none is supplied).
     """
 
-    def __init__(self, policy: Policy, backend: Backend, *, seed: int = 0,
+    def __init__(self, policy: Optional[Policy] = None,
+                 backend: Optional[Backend] = None, *,
+                 arbiter: Optional[Arbiter] = None, seed: int = 0,
                  reject_infeasible: bool = False,
                  log: Optional[ServerLog] = None):
-        self.policy = policy
+        assert backend is not None, "ServingSession requires a backend"
+        self.registry = ModelRegistry()
         self.backend = backend
+        self.arbiter = arbiter if arbiter is not None else LeastSlackArbiter()
         self.log = log if log is not None else ServerLog()
         self.now = 0.0
         self.duration: Optional[float] = None    # reporting window override
@@ -160,28 +190,95 @@ class ServingSession:
         self._finished: Dict[int, Request] = {}   # rid-keyed: O(1) release
         self._rejected: Dict[int, Request] = {}
         self._rng = np.random.default_rng(seed)
-        self._arrivals: list = []                # heap of (t, tiebreak, req)
+        self._arrivals: list = []        # heap of (t, tiebreak, req, entry)
         self._seq = itertools.count()
         self._classes: Dict[str, Optional[float]] = {}
+        if policy is not None:
+            self.register(DEFAULT_MODEL, policy=policy)
+
+    # ------------------------------------------------------------------
+    # Model registry
+    # ------------------------------------------------------------------
+    def register(self, name: str, workload=None, *,
+                 policy: Policy) -> ModelEntry:
+        """Register a model: ``name`` becomes the routing key for
+        ``submit(model=...)``, trace tags, backend muxing, and per-model
+        stats; ``policy`` is the model's private batching policy (its own
+        BatchTable / slack predictor — batching never crosses models).
+        ``workload`` is advisory: when given, submitted requests are
+        checked against it."""
+        return self.registry.register(name, workload, policy=policy)
+
+    def _resolve_model(self, model: Optional[str],
+                       req: Request) -> ModelEntry:
+        """Routing precedence: explicit ``model`` argument > sole
+        registered model (single-model sessions accept every request —
+        legacy compat; a foreign workload is still rejected by the
+        submit-time workload check) > the request's own ``model`` tag.
+        Ambiguous (multi-model, untagged) submissions raise."""
+        entries = self.registry.entries()
+        assert entries, "no model registered — call session.register() first"
+        if model is not None:
+            return self.registry[model]
+        if len(entries) == 1:
+            return entries[0]
+        if req.model is not None:
+            return self.registry[req.model]
+        raise ValueError(
+            f"request {req.rid} carries no model tag and session serves "
+            f"{self.registry.names()} — pass submit(model=...)")
+
+    @property
+    def policy(self) -> Policy:
+        """The sole registered model's policy (single-model compat)."""
+        entries = self.registry.entries()
+        assert len(entries) == 1, (
+            "session.policy is single-model only — use "
+            "session.registry[name].policy")
+        return entries[0].policy
 
     # ------------------------------------------------------------------
     # Submission
     # ------------------------------------------------------------------
-    def submit(self, req: Request, *, prompt_tokens=None,
+    def submit(self, req: Request, *, model: Optional[str] = None,
+               prompt_tokens=None,
                on_token: Optional[Callable] = None) -> RequestHandle:
         """Register a request with the session and return its handle.
 
-        ``req.arrival`` in the future (relative to the session clock) is
-        honored — the request enters the policy's InfQ when the clock
-        reaches it (trace replay); an arrival in the past is clamped to
-        *now* (live submission — waiting time, slack, and latency all
-        count from the submission instant, not a stale timestamp).
-        ``on_token(handle, token)`` fires once per response token at the
-        producing run's boundary.
+        ``model`` routes the request to a registered model; omitted, a
+        single-model session serves it unconditionally (legacy compat),
+        while a multi-model session falls back to the request's own
+        ``model`` tag (traffic mixtures stamp one) and raises when that
+        is missing too. ``req.arrival`` in the future
+        (relative to the session clock) is honored — the request enters
+        its model policy's InfQ when the clock reaches it (trace replay);
+        an arrival in the past is clamped to *now* (live submission —
+        waiting time, slack, and latency all count from the submission
+        instant, not a stale timestamp). ``on_token(handle, token)`` fires
+        once per response token at the producing run's boundary.
         """
         assert req.rid not in self.handles, f"rid {req.rid} already submitted"
+        entry = self._resolve_model(model, req)
+        # workloads are compared by name, not identity: PAPER_WORKLOADS /
+        # get_workload return a fresh instance per call, and same-name
+        # workloads share profile tables (slack predictors key on name)
+        if (entry.workload is not None
+                and req.workload is not entry.workload
+                and getattr(req.workload, "name", None)
+                != entry.workload.name):
+            raise ValueError(
+                f"request {req.rid} was built for workload "
+                f"{getattr(req.workload, 'name', '?')!r} but model "
+                f"{entry.name!r} serves {entry.workload.name!r}")
+        if len(self.registry) > 1:
+            # normalize the reporting tag to the registry name; sole-model
+            # sessions leave it alone so untagged requests keep the
+            # per-workload ``model_name`` fallback in ServeStats.per_model
+            # (the handle carries the authoritative routing key either way)
+            req.model = entry.name
         req.arrival = max(req.arrival, self.now)
-        handle = RequestHandle(req, self, on_token=on_token)
+        handle = RequestHandle(req, self, on_token=on_token,
+                               model=entry.name)
         self.handles[req.rid] = handle
         deadline = req.sla.deadline if req.sla else None
         prev = self._classes.setdefault(req.sla_name, deadline)
@@ -189,23 +286,24 @@ class ServingSession:
             f"SLA class {req.sla_name!r} submitted with deadline {deadline} "
             f"but previously seen with {prev} — per-class reporting needs "
             f"one deadline per class name")
-        if self.reject_infeasible and self._infeasible(req):
+        if self.reject_infeasible and self._infeasible(entry, req):
             handle._rejected = True
             self._rejected[req.rid] = req
             # the feasibility probe may have memoized predictor state for a
             # request the policy will never see finish — release it here
-            self.policy.request_finished([req])
+            entry.policy.request_finished([req])
             return handle
-        self.backend.prepare(req, self._rng, prompt_tokens=prompt_tokens)
+        self.backend.prepare(entry.name, req, self._rng,
+                             prompt_tokens=prompt_tokens)
         heapq.heappush(self._arrivals,
-                       (req.arrival, next(self._seq), req))
+                       (req.arrival, next(self._seq), req, entry))
         return handle
 
-    def _infeasible(self, req: Request) -> bool:
+    def _infeasible(self, entry: ModelEntry, req: Request) -> bool:
         # arrival is already clamped to the session clock, so the deadline
         # window opens now: unmeetable iff even an isolated immediate run
         # (the conservative single-input bound) overshoots it
-        pred = getattr(self.policy, "predictor", None)
+        pred = getattr(entry.policy, "predictor", None)
         if pred is None or not hasattr(pred, "single_total"):
             return False
         return pred.single_total(req) > pred.deadline(req)
@@ -215,71 +313,98 @@ class ServingSession:
     # ------------------------------------------------------------------
     def _enqueue_due(self):
         while self._arrivals and self._arrivals[0][0] <= self.now + 1e-12:
-            _, _, req = heapq.heappop(self._arrivals)
-            self.policy.enqueue(req, self.now)
+            _, _, req, entry = heapq.heappop(self._arrivals)
+            entry.policy.enqueue(req, self.now)
 
     def step(self, limit: Optional[float] = None) -> bool:
-        """One scheduling step: enqueue due arrivals, then either execute
-        the policy's next committed run (clock advances by its latency) or
-        jump the clock to the next event (arrival / policy timer). Returns
-        ``False`` when fully idle — nothing queued, running, or pending —
-        or when the next event lies beyond ``limit``."""
+        """One scheduling step: enqueue due arrivals, collect each model
+        policy's next committed run, let the arbiter pick one, and execute
+        it (clock advances by its latency) — or, with no run ready, jump
+        the clock to the next event (arrival / earliest policy timer).
+        Returns ``False`` when fully idle — nothing queued, running, or
+        pending — or when the next event lies beyond ``limit``.
+
+        Consulting ``next_work`` commits admission state (batch
+        formation, ``t_first_issue``) for EVERY model with ready work at
+        this run boundary, not just the arbiter's winner — deliberately:
+        host-side admission proceeds while the device is busy with
+        another model's run, exactly as the paper's co-located stacks
+        admit into their BatchTables between dispatches. A non-dispatched
+        model's formed batch simply stays parked (its policy returns the
+        same work next step) and burns waiting time until the arbiter
+        picks it."""
         self._enqueue_due()
-        work = self.policy.next_work(self.now)
-        if work is None:
-            candidates = []
+        entries = self.registry.entries()
+        candidates: List[Tuple[ModelEntry, object, Tuple[str, ...]]] = []
+        for entry in entries:
+            work = entry.policy.next_work(self.now)
+            if work is not None:
+                candidates.append((entry, work[0], work[1]))
+        if not candidates:
+            nxt = []
             if self._arrivals:
-                candidates.append(self._arrivals[0][0])
-            t = self.policy.next_timer(self.now)
-            if t is not None:
-                candidates.append(max(t, self.now))
-            if not candidates:
+                nxt.append(self._arrivals[0][0])
+            for entry in entries:
+                t = entry.policy.next_timer(self.now)
+                if t is not None:
+                    nxt.append(max(t, self.now))
+            if not nxt:
                 return False                      # fully drained
-            target = min(candidates)
+            target = min(nxt)
             if limit is not None and target > limit:
                 self.now = max(self.now, limit)
                 return False
             self.now = target
             return True
 
-        sb, run = work
+        if len(entries) == 1:          # single-model: bit-exact legacy path
+            entry, sb, run = candidates[0]
+        else:
+            # multi-model sessions consult the arbiter even for a single
+            # candidate so stateful arbiters (round-robin's cursor) see
+            # every dispatch, not just the contended ones
+            entry, sb, run = candidates[self.arbiter.pick(candidates,
+                                                          self.now)]
         reqs = list(sb.live_requests)
-        latency, per_node = self.backend.execute_run(sb, run)
+        latency, per_node = self.backend.execute_run(entry.name, sb, run)
         self.log.nodes_executed += len(run)
         self.log.runs_executed += 1
         self.log.busy_time += latency
         self.log.batch_size_sum += sb.size * len(run)
+        self.log.busy_by_model[entry.name] = (
+            self.log.busy_by_model.get(entry.name, 0.0) + latency)
+        prefix = f"{entry.name}:" if len(entries) > 1 else ""
         if per_node is not None:
             for nid, lat in zip(run, per_node):
-                self.log.record(nid, lat)
+                self.log.record(prefix + nid, lat)
         else:
-            self.log.record(run_label(run), latency, n=len(run))
+            self.log.record(prefix + run_label(run), latency, n=len(run))
         self.now += latency
-        done_now = self.policy.work_done(sb, self.now, len(run))
+        done_now = entry.policy.work_done(sb, self.now, len(run))
         # observe (stream tokens, stamp TTFT) BEFORE the completion hooks:
         # backends may release per-request device resources there
         for r in reqs:
-            self._observe(r)
+            self._observe(entry, r)
         if done_now:
-            self.backend.on_finished(done_now)
-            self.policy.request_finished(done_now)
+            self.backend.on_finished(entry.name, done_now)
+            entry.policy.request_finished(done_now)
         for r in done_now:
             self._finished[r.rid] = r
         return True
 
-    def _observe(self, req: Request):
+    def _observe(self, entry: ModelEntry, req: Request):
         """Run-boundary bookkeeping for one just-executed request: state
         transition to RUNNING, TTFT stamp, token streaming."""
         handle = self.handles.get(req.rid)
         if handle is None:
             return
         handle._running = True
-        n = self.backend.token_count(req)
+        n = self.backend.token_count(entry.name, req)
         if n <= handle._n_tokens:
             return
         if req.t_first_token is None:
             req.t_first_token = self.now
-        toks = self.backend.tokens(req)
+        toks = self.backend.tokens(entry.name, req)
         new = (list(toks[handle._n_tokens:n]) if toks is not None
                else [-1] * (n - handle._n_tokens))   # virtual tokens (sim)
         handle._n_tokens = n
@@ -316,12 +441,13 @@ class ServingSession:
         self.handles.pop(req.rid, None)
         self._finished.pop(req.rid, None)
         self._rejected.pop(req.rid, None)
-        self.backend.release_request(req)
+        self.backend.release_request(handle.model, req)
 
     # ------------------------------------------------------------------
     @property
     def outstanding(self) -> int:
-        return len(self._arrivals) + self.policy.outstanding
+        return len(self._arrivals) + sum(e.policy.outstanding
+                                         for e in self.registry.entries())
 
     @property
     def finished(self) -> List[Request]:
@@ -333,10 +459,18 @@ class ServingSession:
 
     def stats(self) -> ServeStats:
         duration = self.duration if self.duration is not None else self.now
-        return ServeStats(policy=self.policy.name, duration=duration,
+        entries = self.registry.entries()
+        if len(entries) == 1:
+            pname = entries[0].policy.name
+        else:
+            pname = (self.arbiter.name + "["
+                     + "+".join(f"{e.name}:{e.policy.name}" for e in entries)
+                     + "]")
+        return ServeStats(policy=pname, duration=duration,
                           finished=list(self._finished.values()),
                           rejected=len(self._rejected),
-                          classes=dict(self._classes))
+                          classes=dict(self._classes),
+                          models={e.name: e.policy.name for e in entries})
 
 
 def run_trace(policy: Policy, backend: Backend, trace: Trace, *,
@@ -344,10 +478,33 @@ def run_trace(policy: Policy, backend: Backend, trace: Trace, *,
               log: Optional[ServerLog] = None,
               reject_infeasible: bool = False) -> ServeStats:
     """Offline-compatibility wrapper: replay a whole trace through a
-    :class:`ServingSession` and return its :class:`ServeStats` — the
-    ``InferenceServer.run(trace)`` contract, now a thin shim."""
+    single-model :class:`ServingSession` and return its
+    :class:`ServeStats` — the ``InferenceServer.run(trace)`` contract,
+    now a thin shim."""
     session = ServingSession(policy, backend, seed=seed, log=log,
                              reject_infeasible=reject_infeasible)
+    session.duration = trace.duration
+    for req in sorted(trace.requests, key=lambda r: r.arrival):
+        session.submit(req)
+    if drain:
+        return session.drain()
+    session.run_until(trace.duration)
+    return session.stats()
+
+
+def run_mixture(models: Sequence[Tuple[str, object, Policy]],
+                backend: Backend, trace: Trace, *,
+                arbiter: Optional[Arbiter] = None, drain: bool = True,
+                seed: int = 0, log: Optional[ServerLog] = None,
+                reject_infeasible: bool = False) -> ServeStats:
+    """Multi-tenant sibling of :func:`run_trace`: register every
+    ``(name, workload, policy)`` triple, replay a (model-tagged) trace —
+    e.g. from :func:`~repro.serving.traffic.poisson_mixture` — and return
+    the drained stats with per-model breakdowns."""
+    session = ServingSession(backend=backend, arbiter=arbiter, seed=seed,
+                             log=log, reject_infeasible=reject_infeasible)
+    for name, workload, policy in models:
+        session.register(name, workload, policy=policy)
     session.duration = trace.duration
     for req in sorted(trace.requests, key=lambda r: r.arrival):
         session.submit(req)

@@ -3,10 +3,16 @@
 Poisson arrivals per the MLPerf cloud-inference methodology; rate buckets
 low/medium/high = 0-256 / 256-500 / 500+ queries/sec. Also supports a
 bursty MMPP-style generator (beyond-paper robustness studies) and
-multi-model traces for the co-location experiment (§VI-C).
+multi-model traces for the co-location experiment (§VI-C):
+:func:`poisson_mixture` superposes per-model Poisson processes with
+**independent, name-keyed RNG streams** — registering an extra model (or
+reordering the mixture) never perturbs another model's sampled arrivals
+or lengths — and tags each request with its registry ``model`` name so
+``ServingSession.submit`` routes it without an explicit argument.
 """
 from __future__ import annotations
 
+import zlib
 from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
@@ -18,12 +24,18 @@ from .workload import Workload
 
 @dataclass
 class Trace:
-    """Arrival-sorted list of requests."""
+    """Arrival-sorted list of requests (each optionally ``model``-tagged)."""
     requests: List[Request]
     duration: float
 
     def __len__(self):
         return len(self.requests)
+
+    @property
+    def models(self) -> Tuple[str, ...]:
+        """Distinct model tags present, sorted (empty for untagged traces)."""
+        return tuple(sorted({r.model for r in self.requests
+                             if r.model is not None}))
 
     def fresh(self) -> "Trace":
         """Unexecuted copy — required when replaying one trace across
@@ -32,14 +44,52 @@ class Trace:
 
 
 def poisson_trace(wl: Workload, rate: float, duration: float,
-                  seed: int = 0) -> Trace:
+                  seed: int = 0, model: Optional[str] = None) -> Trace:
     rng = np.random.default_rng(seed)
     t, reqs = 0.0, []
     while True:
         t += rng.exponential(1.0 / rate)
         if t >= duration:
             break
-        reqs.append(wl.sample_request(rng, t))
+        req = wl.sample_request(rng, t)
+        req.model = model
+        reqs.append(req)
+    return Trace(reqs, duration)
+
+
+def _stream_key(name: str) -> int:
+    """Stable per-model RNG stream key (CRC32 of the model name — NOT
+    ``hash()``, which is salted per process)."""
+    return zlib.crc32(name.encode("utf-8"))
+
+
+def poisson_mixture(models: Sequence[Tuple[str, Workload, float]],
+                    duration: float, seed: int = 0) -> Trace:
+    """Superposition of per-model Poisson processes for multi-tenant
+    serving: ``models`` is a sequence of ``(name, workload, rate)``
+    triples; each request is tagged with its model ``name``.
+
+    Each model draws from its own RNG stream seeded by ``(seed,
+    crc32(name))``, so a model's arrivals and sampled prompt/decode
+    lengths are a pure function of (seed, name, rate, duration) — adding,
+    removing, or reordering other mixture components cannot perturb them
+    (determinism across experiment grids). Ties in arrival time keep the
+    mixture's listing order (stable sort)."""
+    names = [name for name, _, _ in models]
+    assert len(set(names)) == len(names), f"duplicate model names: {names}"
+    reqs: List[Request] = []
+    for name, wl, rate in models:
+        assert rate > 0, f"model {name!r} has non-positive rate {rate}"
+        rng = np.random.default_rng([seed, _stream_key(name)])
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / rate)
+            if t >= duration:
+                break
+            req = wl.sample_request(rng, t)
+            req.model = name
+            reqs.append(req)
+    reqs.sort(key=lambda r: r.arrival)
     return Trace(reqs, duration)
 
 

@@ -63,7 +63,7 @@ def _reference(cfg, wl, prompt, n_tokens):
     engine.register(req, prompt)
     sb = SubBatch([req])
     while not req.done:
-        engine.execute(sb, req.next_node_id)
+        engine.execute("m", sb, req.next_node_id)
         sb.advance(0.0)
     return engine.states[req.rid].generated[:n_tokens]
 

@@ -50,7 +50,7 @@ def _run_nodes(engine, req, n_nodes=None):
     sb = SubBatch([req])
     steps = 0
     while not req.done and (n_nodes is None or steps < n_nodes):
-        engine.execute(sb, req.next_node_id)
+        engine.execute("m", sb, req.next_node_id)
         sb.advance(0.0)
         steps += 1
 
@@ -128,7 +128,7 @@ def test_slot_assignment_release_and_reuse():
     _run_nodes(engine, rc2)
     assert rc2.done and engine.states[rc2.rid].generated
     # on_finished is idempotent with the in-execute release
-    engine.on_finished([ra, rc2])
+    engine.on_finished("m", [ra, rc2])
     assert engine.slots_in_use == 1              # only B still live
 
 
@@ -188,7 +188,7 @@ def test_ragged_merged_decode_matches_isolated():
     # merged ragged decode until drained (finished members leave the batch)
     sb = SubBatch([r1, r2])
     while sb.size:
-        engine.execute(sb, sb.node_id)
+        engine.execute("m", sb, sb.node_id)
         sb.advance(0.0)
     got1 = engine.states[r1.rid].generated
     got2 = engine.states[r2.rid].generated
@@ -223,7 +223,7 @@ def test_engine_pallas_arena_decode_matches_plain():
         _run_nodes(engine, r2, n_prefill)
         sb = SubBatch([r1, r2])             # merged, ragged pos
         while sb.size:
-            engine.execute(sb, sb.node_id)
+            engine.execute("m", sb, sb.node_id)
             sb.advance(0.0)
         toks[pallas] = [engine.states[r.rid].generated for r in (r1, r2)]
     assert toks[True] == toks[False]
@@ -270,14 +270,14 @@ def test_merge_mid_run_takes_effect_at_run_boundary():
     sb1 = SubBatch([r1])
     run = sb1.run_nodes(stop_after={"head"})
     assert run[0] == "emb" and run[-1] == "head" and len(run) > 2
-    engine.execute_run(sb1, run)
+    engine.execute_run("m", sb1, run)
     sb1.advance_n(len(run), 0.0)
 
     # r2 catches up: its run stops BEFORE D0, where r1 is parked
     sb2 = SubBatch([r2])
     run2 = sb2.run_nodes(stop_before={"D0"})
     assert run2[-1] == f"P{len(engine.kinds) - 1}"
-    engine.execute_run(sb2, run2)
+    engine.execute_run("m", sb2, run2)
     sb2.advance_n(len(run2), 0.0)
 
     # merge at the boundary: both at D0, ragged positions
@@ -286,7 +286,7 @@ def test_merge_mid_run_takes_effect_at_run_boundary():
     sb = SubBatch([r1, r2])
     while sb.size:
         run = sb.run_nodes(stop_after={"head"})
-        engine.execute_run(sb, run)
+        engine.execute_run("m", sb, run)
         sb.advance_n(len(run), 0.0)
     got = [engine.states[r.rid].generated for r in (r1, r2)]
 
@@ -301,7 +301,7 @@ def test_merge_mid_run_takes_effect_at_run_boundary():
     _run_nodes(eng2, q2, n_prefill)
     sb = SubBatch([q1, q2])
     while sb.size:
-        eng2.execute(sb, sb.node_id)
+        eng2.execute("m", sb, sb.node_id)
         sb.advance(0.0)
     ref = [eng2.states[r.rid].generated for r in (q1, q2)]
     assert got == ref
@@ -328,7 +328,7 @@ def test_bucketed_prefill_pads_and_stays_bitexact():
     sb = SubBatch(list(reqs))            # prefill all three together
     while sb.size:
         run = sb.run_nodes(stop_after={"head"})
-        engine.execute_run(sb, run)
+        engine.execute_run("m", sb, run)
         sb.advance_n(len(run), 0.0)
     for r, p in zip(reqs, prompts):
         ref_engine = JaxEngine(cfg, max_len=32, n_slots=8)
@@ -352,16 +352,16 @@ def test_run_continuing_past_head_stays_bitexact():
     engine.register(r, p)
     sb = SubBatch([r])
     run = sb.run_nodes(stop_before={"D0"})       # prefill
-    engine.execute_run(sb, run)
+    engine.execute_run("m", sb, run)
     sb.advance_n(len(run), 0.0)
     run = sb.run_nodes(stop_before={"D1"})       # just D0
     assert run == ("D0",)
-    engine.execute_run(sb, run)
+    engine.execute_run("m", sb, run)
     sb.advance_n(len(run), 0.0)
     while sb.size:                               # D1, head, D0 | D1, head...
         run = sb.run_nodes(stop_before={"D1"})
         assert run[0] == "D1"
-        engine.execute_run(sb, run)
+        engine.execute_run("m", sb, run)
         sb.advance_n(len(run), 0.0)
 
     ref_engine = JaxEngine(cfg, max_len=32, n_slots=4)
@@ -390,22 +390,22 @@ def test_parked_midcycle_batch_survives_other_batch_runs():
 
     sba = SubBatch([ra])
     run = sba.run_nodes(stop_before={"D0"})      # A: prefill
-    engine.execute_run(sba, run)
+    engine.execute_run("m", sba, run)
     sba.advance_n(len(run), 0.0)
     run = sba.run_nodes(stop_before={"head"})    # A: parked mid-cycle
     assert run[0] == "D0" and "head" not in run and len(run) > 1
-    engine.execute_run(sba, run)
+    engine.execute_run("m", sba, run)
     sba.advance_n(len(run), 0.0)
 
     sbb = SubBatch([rb])                         # B: full runs meanwhile
     while sbb.size:
         run = sbb.run_nodes(stop_after={"head"})
-        engine.execute_run(sbb, run)
+        engine.execute_run("m", sbb, run)
         sbb.advance_n(len(run), 0.0)
 
     while sba.size:                              # A resumes mid-cycle
         run = sba.run_nodes(stop_after={"head"})
-        engine.execute_run(sba, run)
+        engine.execute_run("m", sba, run)
         sba.advance_n(len(run), 0.0)
 
     for r, p in ((ra, pa), (rb, pb)):

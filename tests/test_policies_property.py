@@ -41,7 +41,7 @@ class CheckingExecutor(SimExecutor):
         self.executed = {}          # rid -> list of node ids
         self.run_lengths = []
 
-    def execute_run(self, sb, node_ids):
+    def execute_run(self, model, sb, node_ids):
         reqs = sb.live_requests
         assert 1 <= len(reqs) <= self.max_batch, "batch size bound violated"
         self.run_lengths.append(len(node_ids))
@@ -51,7 +51,7 @@ class CheckingExecutor(SimExecutor):
             rem = [nid for nid, _ in r.sequence[r.idx:r.idx + len(node_ids)]]
             assert rem == list(node_ids), "run diverges from request sequence"
             self.executed.setdefault(r.rid, []).extend(node_ids)
-        return super().execute_run(sb, node_ids)
+        return super().execute_run(model, sb, node_ids)
 
 
 def make_policy(kind, sla, max_batch):
