@@ -20,9 +20,18 @@ three modes, and emits machine-readable results to
 (``--smoke`` runs skip the artifact). The acceptance bar for this PR is
 fused >= 3x over arena at batch 8.
 
+Also times the paged arena's **shrink/compact** reclamation (burst →
+drain → compact live slots + halve), so the cost of returning device
+memory is tracked next to the decode hot path it must never sit on.
+
+``--baseline PATH`` compares this run's per-mode median ms/token against
+a previously committed artifact and exits non-zero when any mode
+regressed by more than ``--tolerance`` (default 20%) — the CI perf gate.
+
   PYTHONPATH=src python benchmarks/engine_decode_bench.py \
       [--arch llama3.2-1b] [--batch 8] [--max-len 256] [--tokens 24]
       [--smoke]           # tiny config + few tokens (CI rot guard)
+      [--baseline BENCH_engine_decode.json] [--tolerance 0.2]
 """
 import argparse
 import dataclasses
@@ -108,12 +117,84 @@ def bench_mode(mode, cfg, wl, *, batch, max_len, tokens):
             float(np.min(steady)), toks)
 
 
+def bench_shrink(cfg, wl, *, batch, max_len, repeats=3):
+    """Reclamation cost: burst ``4 * batch`` requests into a paged arena
+    (grows 4x), drain all but two (which must RELOCATE during the
+    compaction), and time the shrink itself. Reported per shrink event —
+    reclamation is rare and off the decode path, but its cost must be
+    tracked so it stays that way."""
+    import jax
+
+    times, before_after = [], None
+    for rep in range(repeats):
+        engine = JaxEngine(cfg, max_len=max_len, n_slots=batch,
+                           max_slots=batch * 8, auto_shrink=False)
+        reqs = _build_batch(engine, wl, cfg, 4 * batch, prompt_len=16,
+                            decode_len=2, seed=rep)
+        for r in reqs:                       # prefill: occupy 4*batch slots
+            sb = SubBatch([r])
+            run = sb.run_nodes(stop_before={"D0"})
+            engine.execute_run("m", sb, run)
+            sb.advance_n(len(run), 0.0)
+        jax.block_until_ready(engine.arenas)
+        grown = engine.n_slots
+        b0 = engine.memory_stats().bytes_resident
+        # drain the burst, keeping the LAST two prefilled requests live:
+        # slots are issued in order, so the survivors hold the two highest
+        # slot ids — both sit above the shrink watermark and must relocate
+        # (the timed cost includes the row copies, not just the slice)
+        survivors = reqs[-2:]
+        old_slots = {r.rid: engine._slot[r.rid] for r in survivors}
+        for r in reqs[:-2]:
+            engine.release_slot(r)
+        engine._auto_shrink = True
+        t0 = time.perf_counter()
+        engine._maybe_shrink()
+        jax.block_until_ready(engine.arenas)
+        times.append(time.perf_counter() - t0)
+        assert engine.n_shrinks == 1 and engine.n_slots < grown
+        assert all(engine._slot[r.rid] != old_slots[r.rid]
+                   for r in survivors), "shrink did not relocate any slot"
+        before_after = (grown, engine.n_slots, b0,
+                        engine.memory_stats().bytes_resident)
+    slots_before, slots_after, bytes_before, bytes_after = before_after
+    return {"median_ms_per_shrink": float(np.median(times)) * 1e3,
+            "min_ms_per_shrink": float(np.min(times)) * 1e3,
+            "slots_before": slots_before, "slots_after": slots_after,
+            "bytes_before": bytes_before, "bytes_after": bytes_after}
+
+
+def check_baseline(rec: dict, path: Path, tolerance: float) -> bool:
+    """Perf gate: fail when any mode's median ms/token regressed more than
+    ``tolerance`` vs the committed baseline artifact (configs must match —
+    a smoke run is never judged against a full-run baseline)."""
+    base = json.loads(path.read_text())
+    keys = ("arch", "batch", "max_len", "tokens", "smoke", "backend")
+    mismatched = [k for k in keys if base.get(k) != rec.get(k)]
+    if mismatched:
+        print(f"baseline {path} config mismatch on {mismatched} — "
+              f"skipping regression gate")
+        return True
+    ok = True
+    for mode in MODES:
+        old = base[mode]["median_ms_per_token"]
+        new = rec[mode]["median_ms_per_token"]
+        ratio = new / old
+        verdict = "OK" if ratio <= 1.0 + tolerance else "REGRESSED"
+        if verdict == "REGRESSED":
+            ok = False
+        print(f"  perf gate {mode:>7}: {old:8.2f} -> {new:8.2f} ms/token "
+              f"({ratio:5.2f}x)  {verdict}")
+    return ok
+
+
 def run(quick: bool = True) -> dict:
     # programmatic suite entry: never writes the tracked artifact (quick
     # configs would clobber the committed 24-token numbers)
     args = argparse.Namespace(arch="llama3.2-1b", batch=8, max_len=256,
                               tokens=12 if quick else 24,
-                              smoke=False, out=None, write=False)
+                              smoke=False, out=None, write=False,
+                              baseline=None, tolerance=0.2)
     return _run(args)
 
 
@@ -153,6 +234,14 @@ def _run(args) -> dict:
     print(f"speedup: {rec['speedup_arena_vs_legacy']:.1f}x arena vs legacy, "
           f"{rec['speedup_fused_vs_arena']:.1f}x fused vs arena "
           f"(batch {args.batch}, max_len {args.max_len})")
+    rec["shrink"] = bench_shrink(cfg, wl, batch=args.batch,
+                                 max_len=args.max_len,
+                                 repeats=1 if args.smoke else 3)
+    sh = rec["shrink"]
+    print(f" shrink: {sh['median_ms_per_shrink']:8.2f} ms/reclamation "
+          f"({sh['slots_before']} -> {sh['slots_after']} slots, "
+          f"{sh['bytes_before'] / 2**20:.0f} -> "
+          f"{sh['bytes_after'] / 2**20:.0f} MiB resident)")
     if args.out:
         out = Path(args.out)
     elif getattr(args, "write", True) and not args.smoke:
@@ -161,6 +250,13 @@ def _run(args) -> dict:
         out = Path(__file__).resolve().parent.parent / "BENCH_engine_decode.json"
     else:
         out = None
+    # gate BEFORE writing: the tracked artifact may itself be the baseline,
+    # and a regressed run must not overwrite the numbers it is judged by
+    if getattr(args, "baseline", None):
+        if not check_baseline(rec, Path(args.baseline), args.tolerance):
+            raise SystemExit(
+                f"decode bench regressed >"
+                f"{args.tolerance * 100:.0f}% vs {args.baseline}")
     if out is not None:
         out.write_text(json.dumps(rec, indent=2) + "\n")
         print(f"wrote {out}")
@@ -179,6 +275,13 @@ def main():
                     help="tiny config + short run (CI rot guard)")
     ap.add_argument("--out", default=None,
                     help="JSON output path (default: repo root)")
+    ap.add_argument("--baseline", default=None,
+                    help="committed BENCH json to gate against: exit "
+                         "non-zero when any mode's median ms/token "
+                         "regressed more than --tolerance")
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression vs --baseline "
+                         "(default 0.2 = 20%%)")
     args = ap.parse_args()
     if args.smoke:
         args.batch = min(args.batch, 4)

@@ -29,7 +29,7 @@ bit-identical to the pre-registry sessions regardless of arbiter choice.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 _INF = float("inf")
 
@@ -38,9 +38,38 @@ Candidate = Tuple[object, object, Tuple[str, ...]]
 
 
 class Arbiter:
-    """Picks which model's committed run dispatches next."""
+    """Picks which model's committed run dispatches next.
+
+    ``mem_shares``: optional per-model **device-memory shares** for
+    bounded-memory serving — ``{"gold": 0.5, "bulk": 0.5}`` caps each
+    model's admitted-resident KV slots at its fraction of the pool's
+    ``max_slots``, so one bulk tenant can never starve an interactive
+    tenant of slots. The session's memory-aware admission consults
+    :meth:`mem_share` (an explicit ``register(mem_share=...)`` on the
+    model entry takes precedence); models without a share draw freely
+    from the unreserved pool. Ignored when the backend reports no memory
+    cap.
+    """
 
     name = "abstract"
+
+    def __init__(self, mem_shares: Optional[Dict[str, float]] = None):
+        # real errors, not asserts: a silently-constructed oversubscribed
+        # share map under ``python -O`` would quietly void the
+        # anti-starvation guarantee
+        if mem_shares is not None:
+            if not all(0.0 < s <= 1.0 for s in mem_shares.values()):
+                raise ValueError(
+                    f"memory shares must lie in (0, 1]: {mem_shares}")
+            if sum(mem_shares.values()) > 1.0 + 1e-9:
+                raise ValueError(
+                    f"memory shares oversubscribe the pool: {mem_shares}")
+        self.mem_shares = dict(mem_shares) if mem_shares else None
+
+    def mem_share(self, model: str) -> Optional[float]:
+        """The fraction of the memory pool reserved-as-cap for ``model``
+        (None = uncapped: the model draws from the shared pool)."""
+        return None if self.mem_shares is None else self.mem_shares.get(model)
 
     def pick(self, candidates: List[Candidate], now: float) -> int:
         raise NotImplementedError
@@ -54,7 +83,8 @@ class RoundRobinArbiter(Arbiter):
 
     name = "rr"
 
-    def __init__(self):
+    def __init__(self, mem_shares: Optional[Dict[str, float]] = None):
+        super().__init__(mem_shares=mem_shares)
         self._last = -1          # registration index of the last dispatch
 
     def pick(self, candidates, now):
@@ -82,7 +112,9 @@ class LeastSlackArbiter(Arbiter):
 
     name = "least-slack"
 
-    def __init__(self, sla_default: Optional[float] = None):
+    def __init__(self, sla_default: Optional[float] = None,
+                 mem_shares: Optional[Dict[str, float]] = None):
+        super().__init__(mem_shares=mem_shares)
         self.sla_default = sla_default
 
     def _urgency(self, entry, sb, now: float):

@@ -62,12 +62,39 @@ def _group_pushable(reqs: List[Request]) -> List[List[Request]]:
 class Policy:
     name = "abstract"
 
+    # memory-aware admission hook, wired by the serving session when the
+    # backend reports a bounded KV pool: a callable returning how many NEW
+    # requests this policy may admit right now without oversubscribing
+    # device memory (None = unbounded / memory-blind — the seed behavior).
+    # Policies that honor it defer admission (requests wait in the InfQ,
+    # burning slack like any other wait) instead of overcommitting; the
+    # whole-graph baselines (Serial/GraphBatching) stay memory-blind.
+    mem_gate = None
+
     def __init__(self, max_batch: int = 64):
         self.max_batch = max_batch
         self.queue: deque[Request] = deque()
 
     def enqueue(self, req: Request, now: float):
         self.queue.append(req)
+
+    def _mem_room(self) -> Optional[int]:
+        """New admissions the memory gate allows now (None = unbounded —
+        no gate wired, or the backend reports no memory cap)."""
+        if self.mem_gate is None:
+            return None
+        room = self.mem_gate()
+        return None if room is None else max(0, room)
+
+    @property
+    def admitted_requests(self) -> List[Request]:
+        """Live requests admitted out of the InfQ (each holds — or is
+        about to hold — one KV slot until it finishes)."""
+        return []
+
+    @property
+    def admitted(self) -> int:
+        return len(self.admitted_requests)
 
     def next_work(self, now: float) -> Optional[Work]:
         raise NotImplementedError
@@ -122,6 +149,10 @@ class Serial(Policy):
         return finished
 
     @property
+    def admitted_requests(self):
+        return self.active.live_requests if self.active else []
+
+    @property
     def outstanding(self):
         return len(self.queue) + (self.active.size if self.active else 0)
 
@@ -173,6 +204,10 @@ class GraphBatching(Policy):
         if self.queue and (self.active is None or self.active.size == 0):
             return self.queue[0].arrival + self.window
         return None
+
+    @property
+    def admitted_requests(self):
+        return self.active.live_requests if self.active else []
 
     @property
     def outstanding(self):
@@ -250,6 +285,10 @@ class _TableBased(Policy):
         return finished
 
     @property
+    def admitted_requests(self):
+        return self.table.all_requests()
+
+    @property
     def outstanding(self):
         return len(self.queue) + self.table.total_size
 
@@ -269,8 +308,11 @@ class CellularBatching(_TableBased):
 
     def _admit(self, now):
         # iteration-level scheduling: admit new requests unconditionally at
-        # node boundaries (no SLA model); capacity-bounded
+        # node boundaries (no SLA model); capacity- and memory-bounded
         room = self.max_batch - self.table.total_size
+        mem = self._mem_room()
+        if mem is not None:
+            room = min(room, mem)
         if room <= 0 or not self.queue:
             return
         take = min(room, len(self.queue))
@@ -341,17 +383,28 @@ class LazyBatching(_TableBased):
     def _admit(self, now):
         if not self.queue:
             return
+        # memory-aware mode (session-wired gate): never admit more new
+        # requests than free KV slots — the overflow defers in the InfQ
+        # (burning slack exactly like any other wait, so EDF order still
+        # decides who gets a slot when one frees) instead of overcommitting
+        # device memory. Gate unset = the paper's memory-blind admission.
+        mem = self._mem_room()
         ongoing = self.table.all_requests()
         if not ongoing:
             # idle processor: schedule immediately (no batching conflict);
             # earliest-absolute-deadline first when the backlog exceeds
             # max_batch (== FIFO for a single SLA class)
-            reqs = self._edf_take(self.queue, self.max_batch)
+            cap = self.max_batch if mem is None else min(self.max_batch, mem)
+            if cap <= 0:
+                return
+            reqs = self._edf_take(self.queue, cap)
             self._take_from_queue(reqs, now)
             for group in _group_pushable(reqs):
                 self.table.push(group)
             return
         room = self.max_batch - len(ongoing)
+        if mem is not None:
+            room = min(room, mem)
         if room <= 0:
             return
         # largest authorized deadline-ordered prefix (adding requests only

@@ -58,6 +58,18 @@ class _PredictorBase:
         if per is not None:
             self._memo_n -= len(per)
 
+    def release_bound(self, ongoing: Iterable["Request"]) -> float:
+        """Lower-bound-style estimate of how long until the earliest KV
+        slot frees: the smallest remaining single-input execution time
+        among the resident requests (0 when none are resident). Used by
+        memory-aware admission control to decide whether a request whose
+        model's memory pool is exhausted could still get a slot before
+        its own deadline — the same Eq. 1 per-request quantities the
+        slack bound is built from, so rejection stays exactly as
+        conservative as the paper's admission."""
+        times = [self.single_remaining(r) for r in ongoing]
+        return min(times) if times else 0.0
+
     @property
     def memo_size(self) -> int:
         return sum(len(per) for per in self._memo.values())

@@ -25,6 +25,13 @@ Mixed-tier serving: ``--sla-tiers "gold:0.05,bulk:0.5"`` assigns each
 request one of the named SLA classes uniformly at random and reports
 per-class violation rates alongside the aggregate.
 
+Bounded-memory serving: ``--mem-slots 16`` caps the device KV pool at 16
+resident request slots (the sim pays a thrash penalty past the cap; the
+JAX engine's paged arena hard-caps at it) and enables memory-aware
+admission — overflow defers in the InfQ instead of oversubscribing
+device memory. ``--mem-shares "gold:0.5,bulk:0.5"`` splits the pool
+across tenants so neither can starve the other of slots.
+
 ``--json-out stats.json`` dumps the full ServeStats — summary, per-class
 AND per-model breakdowns, device-time shares — for CI artifacts and
 offline analysis.
@@ -102,12 +109,69 @@ def _jax_workload(cfg):
         decode_dist=LengthDist((2, 3, 4, 5), (0.25,) * 4))
 
 
-def _jax_engine(name, args):
-    """One reduced-model engine + its served workload for ``name``."""
+def _jax_engine(name, args, max_slots=None):
+    """One reduced-model engine + its served workload for ``name``.
+    ``max_slots`` is THIS engine's arena cap (per-model engines own
+    disjoint pools — multi-tenant callers split the device budget)."""
     from ..serving.engine import JaxEngine
     arch = name if name in ARCHITECTURES else "llama3.2-1b"
     cfg = get_config(arch).reduced()
-    return JaxEngine(cfg, max_len=64, seed=args.seed), _jax_workload(cfg)
+    return (JaxEngine(cfg, max_len=64, seed=args.seed, max_slots=max_slots),
+            _jax_workload(cfg))
+
+
+def _split_mem_slots(mem_slots, shares, mem_shares):
+    """Per-model arena caps for the jax engine: per-model engines hold
+    DISJOINT pools, so the one ``--mem-slots`` device budget is split
+    structurally — by ``--mem-shares`` when given (normalized; traffic
+    share fills unspecified models), else by traffic share. The split is
+    budget-exact: caps sum to EXACTLY ``mem_slots`` (largest-remainder
+    apportionment, every model >= 1 slot), never oversubscribing the
+    device the flag claims to bound. (The arbiter's share caps are for
+    SHARED pools like the simulator's and would double-cap disjoint
+    ones.)"""
+    if mem_slots is None:
+        return {}
+    if mem_slots < len(shares):
+        raise SystemExit(
+            f"--mem-slots {mem_slots} < {len(shares)} models: every "
+            f"per-model arena needs at least one slot")
+    weights = {name: (mem_shares or {}).get(name, share)
+               for name, share in shares}
+    total_w = sum(weights.values())
+    quota = {n: mem_slots * w / total_w for n, w in weights.items()}
+    caps = {n: int(q) for n, q in quota.items()}
+    # hand leftover slots to the largest fractional remainders
+    leftovers = sorted(quota, key=lambda n: quota[n] - caps[n], reverse=True)
+    for n in leftovers[:mem_slots - sum(caps.values())]:
+        caps[n] += 1
+    # a zero-slot arena cannot serve: bump from the largest allocation
+    for n in caps:
+        while caps[n] == 0:
+            caps[max(caps, key=caps.get)] -= 1
+            caps[n] += 1
+    return caps
+
+
+def parse_mem_shares(spec):
+    """Parse ``name:fraction[,name:fraction...]`` per-model memory shares
+    (fractions of the ``--mem-slots`` pool; must sum to <= 1)."""
+    if not spec:
+        return None
+    shares = {}
+    for part in spec.split(","):
+        name, _, frac = part.strip().rpartition(":")
+        try:
+            value = float(frac)
+        except ValueError:
+            value = float("nan")
+        if not name or not 0.0 < value <= 1.0:
+            raise SystemExit(
+                f"--mem-shares entry {part!r} must be name:fraction_in_(0,1]")
+        shares[name] = value
+    if sum(shares.values()) > 1.0 + 1e-9:
+        raise SystemExit(f"--mem-shares oversubscribe the pool: {shares}")
+    return shares
 
 
 def _run_session(session, trace, label, args):
@@ -162,7 +226,8 @@ def dump_json(path: str, stats, log, args):
         "args": {"engine": args.engine, "policy": args.policy,
                  "rate": args.rate, "duration": args.duration,
                  "sla": args.sla, "models": args.models,
-                 "arbiter": args.arbiter, "seed": args.seed},
+                 "arbiter": args.arbiter, "seed": args.seed,
+                 "mem_slots": args.mem_slots, "mem_shares": args.mem_shares},
         "summary": clean(stats.summary(sla=args.sla)),
         "per_class": clean(stats.per_class(args.sla)),
         "per_model": clean(stats.per_model(args.sla)),
@@ -204,6 +269,15 @@ def main():
                     help='mixed per-request SLA classes, e.g. '
                          '"gold:0.05,bulk:0.5" (uniform random assignment)')
     ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--mem-slots", type=int, default=None,
+                    help="bound device KV memory to this many resident "
+                         "request slots (sim: thrash penalty past the cap; "
+                         "jax: paged-arena hard cap) and turn on "
+                         "memory-aware admission")
+    ap.add_argument("--mem-shares", default=None,
+                    help='per-model memory shares under --mem-slots, e.g. '
+                         '"gold:0.5,bulk:0.5" (fractions of the slot pool; '
+                         'keeps one tenant from starving another)')
     ap.add_argument("--window", type=float, default=0.025)
     ap.add_argument("--bursty", action="store_true",
                     help="MMPP bursty arrivals instead of Poisson")
@@ -223,16 +297,28 @@ def main():
     if args.models:
         assert not args.bursty, "--models implies Poisson mixture arrivals"
         shares = parse_models(args.models)
+        mem_shares = parse_mem_shares(args.mem_shares)
         if args.engine == "jax":
-            pairs = {name: _jax_engine(name, args) for name, _ in shares}
+            # disjoint per-model arenas: split the device slot budget
+            # structurally (shares enforced by construction, not the gate)
+            caps = _split_mem_slots(args.mem_slots, shares, mem_shares)
+            pairs = {name: _jax_engine(name, args, caps.get(name))
+                     for name, _ in shares}
             workloads = {name: wl for name, (_, wl) in pairs.items()}
             backend = MultiBackend({name: eng
                                     for name, (eng, _) in pairs.items()})
+            arb_shares = None            # already applied per-pool
         else:
             workloads = {name: get_workload(name) for name, _ in shares}
-            backend = SimExecutor(perf)           # model-agnostic: one for all
-        arbiter = (RoundRobinArbiter() if args.arbiter == "rr"
-                   else LeastSlackArbiter(sla_default=args.sla))
+            # model-agnostic: one for all; --mem-slots bounds the one
+            # simulated device's KV pool SHARED across every registered
+            # model — here the arbiter's shares do the tenant capping
+            backend = SimExecutor(perf, max_slots=args.mem_slots)
+            arb_shares = mem_shares
+        arbiter = (RoundRobinArbiter(mem_shares=arb_shares)
+                   if args.arbiter == "rr"
+                   else LeastSlackArbiter(sla_default=args.sla,
+                                          mem_shares=arb_shares))
         session = ServingSession(backend=backend, arbiter=arbiter,
                                  seed=args.seed)
         for name, _ in shares:
@@ -255,10 +341,10 @@ def main():
 
     # ---- single-model path ---------------------------------------------
     if args.engine == "jax":
-        backend, wl = _jax_engine(args.arch, args)
+        backend, wl = _jax_engine(args.arch, args, args.mem_slots)
     else:
         wl = get_workload(args.arch)
-        backend = SimExecutor(perf)
+        backend = SimExecutor(perf, max_slots=args.mem_slots)
 
     if args.bursty:
         trace = bursty_trace(wl, args.rate * 0.3, args.rate * 2.0,

@@ -4,7 +4,8 @@ from .workload import (Workload, NodeDesc, Segment, LengthDist,
 from .npu_model import NPUPerfModel, HardwareSpec, PAPER_NPU, TPU_V5E
 from .traffic import (Trace, poisson_trace, poisson_mixture, bursty_trace,
                       colocated_trace, with_sla_classes)
-from .backend import Backend, MultiBackend, ServerLog, run_label
+from .backend import (Backend, MemoryStats, MultiBackend, ServerLog,
+                      run_label)
 from .registry import ModelEntry, ModelRegistry
 from .session import (ServingSession, RequestHandle, HandleState, run_trace,
                       run_mixture, DEFAULT_MODEL)
@@ -17,7 +18,7 @@ __all__ = [
     "NPUPerfModel", "HardwareSpec", "PAPER_NPU", "TPU_V5E",
     "Trace", "poisson_trace", "poisson_mixture", "bursty_trace",
     "colocated_trace", "with_sla_classes",
-    "Backend", "MultiBackend", "ServerLog", "run_label",
+    "Backend", "MemoryStats", "MultiBackend", "ServerLog", "run_label",
     "ModelEntry", "ModelRegistry",
     "ServingSession", "RequestHandle", "HandleState", "run_trace",
     "run_mixture", "DEFAULT_MODEL",

@@ -49,6 +49,36 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.request import Request, SubBatch
 
 
+@dataclass
+class MemoryStats:
+    """One backend memory pool's accounting snapshot.
+
+    A *slot* is the unit of KV-cache residency (one concurrently served
+    request). ``slots_total`` is the pool's CURRENT capacity (a paged
+    arena grows and shrinks it), ``max_slots`` the configured hard cap
+    (``None`` = unbounded — memory-aware admission disengages). ``pool``
+    identifies the owning device pool (``id()`` of the arena holder):
+    models whose stats report the same pool contend for the same slots,
+    which is how the session tells one shared simulated device apart from
+    per-model engines with disjoint arenas behind a ``MultiBackend``.
+
+    When queried for a specific model (``memory_stats(model=...)``),
+    ``slots_live``/``bytes_resident_model`` are that model's share while
+    the capacity fields stay pool-wide.
+    """
+    slots_total: int = 0
+    slots_live: int = 0
+    slots_free: int = 0
+    bytes_resident: int = 0          # pool-wide resident KV bytes
+    bytes_per_slot: float = 0.0
+    max_slots: Optional[int] = None  # None = unbounded (no admission cap)
+    pool: int = 0                    # identity of the owning device pool
+
+    @property
+    def bounded(self) -> bool:
+        return self.max_slots is not None
+
+
 class Backend:
     def prepare(self, model: str, req: Request, rng,
                 prompt_tokens=None) -> None:
@@ -105,6 +135,13 @@ class Backend:
         tokens (the simulator) — streaming then reports placeholder ids."""
         return None
 
+    def memory_stats(self, model: Optional[str] = None) -> MemoryStats:
+        """Device-memory accounting for this backend's KV pool (pool-wide,
+        or one model's share when ``model`` is given). The default is an
+        empty, unbounded pool — backends with no device state (or no
+        accounting) never constrain memory-aware admission."""
+        return MemoryStats(pool=id(self))
+
 
 class MultiBackend(Backend):
     """Model-keyed mux over per-model backends.
@@ -154,6 +191,31 @@ class MultiBackend(Backend):
 
     def tokens(self, model, req):
         return self.backend_for(model).tokens(model, req)
+
+    def memory_stats(self, model=None):
+        """Route to the named model's backend; with no model, aggregate
+        across the DISTINCT inner backends (shared instances counted
+        once). The aggregate is a reporting view — admission gating
+        always queries per model, where the ``pool`` id is meaningful."""
+        if model is not None:
+            return self.backend_for(model).memory_stats(model)
+        seen: Dict[int, MemoryStats] = {}
+        for name, be in self.backends.items():
+            if id(be) not in seen:
+                seen[id(be)] = be.memory_stats()
+        agg = MemoryStats(pool=id(self))
+        caps: List[Optional[int]] = []
+        for st in seen.values():
+            agg.slots_total += st.slots_total
+            agg.slots_live += st.slots_live
+            agg.slots_free += st.slots_free
+            agg.bytes_resident += st.bytes_resident
+            caps.append(st.max_slots)
+        if caps and all(c is not None for c in caps):
+            agg.max_slots = sum(caps)
+        if agg.slots_total:
+            agg.bytes_per_slot = agg.bytes_resident / agg.slots_total
+        return agg
 
 
 @dataclass

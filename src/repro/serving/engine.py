@@ -18,13 +18,19 @@ carries ``phase``/``layer`` metadata the dispatcher keys on):
                positions* across the merged sub-batch,
   * ``head``  — unembed + greedy-sample the next token.
 
-Cache arena (PR 1, unchanged semantics)
----------------------------------------
+Cache arena (PR 1; now paged + reclaimable)
+-------------------------------------------
 Per-request caches live in a preallocated, device-resident slot arena;
 requests own a lazily-assigned slot for their lifetime, prefill writes
 into the slot in-jit, decode gathers/scatters rows by a ``(B,)`` slot
 vector, and slots are released on completion (idempotently again via
-``Backend.on_finished``). Storage is now **per-span, flat-indexed**:
+``Backend.on_finished``). The arena is *paged*: it doubles on demand up
+to an optional ``max_slots`` memory cap and — unless pinned —
+**shrinks back** when occupancy drops (live slots are compacted below
+the watermark, the slot axis sliced down; bit-exact, see
+``_shrink_arena``), so a burst no longer pins peak device memory
+forever. ``memory_stats()`` reports slots live/free and actual resident
+bytes for SLA-aware, memory-aware admission upstream. Storage is now **per-span, flat-indexed**:
 consecutive same-(kind, window) layers form a span whose arena pytree
 folds the layer axis into the slot axis — leaves are
 ``(span_len * n_slots, max_len, ...)`` for time-axis keys (k/v/ckv/krope)
@@ -153,15 +159,32 @@ class JaxEngine(Backend):
 
     def __init__(self, cfg: ModelConfig, *, max_len: int = 512, seed: int = 0,
                  dtype=jnp.float32, n_slots: Optional[int] = None,
+                 max_slots: Optional[int] = None,
+                 min_slots: Optional[int] = None,
+                 auto_shrink: Optional[bool] = None,
                  cache_mode: str = "arena", pallas: Optional[bool] = None,
                  fused: Optional[bool] = None):
         assert cache_mode in ("arena", "legacy"), cache_mode
-        # explicit n_slots pins the arena (exhaustion raises); the default
-        # starts at 32 slots and doubles on demand, so any admission policy
-        # (max_batch defaults to 64) can't crash the engine mid-run
-        self._auto_grow = n_slots is None
+        # arena sizing: explicit n_slots WITHOUT max_slots pins the arena
+        # (exhaustion raises — the seed behavior); otherwise the arena is
+        # *paged*: it starts at n_slots (or min_slots, default 32), doubles
+        # on demand up to max_slots (None = unbounded), and — when
+        # auto_shrink is on (the paged default) — compacts+halves back
+        # toward min_slots as occupancy drops, so one burst no longer pins
+        # peak device memory forever.
+        pinned = n_slots is not None and max_slots is None
         if n_slots is None:
-            n_slots = 32
+            n_slots = min_slots if min_slots is not None else 32
+            if max_slots is not None:        # default start clamps to the cap
+                n_slots = min(n_slots, max_slots)
+        if max_slots is not None:
+            assert max_slots >= n_slots, (max_slots, n_slots)
+        self.max_slots = max_slots
+        self._min_slots = min_slots if min_slots is not None else n_slots
+        self._auto_grow = not pinned
+        self._auto_shrink = (not pinned) if auto_shrink is None else auto_shrink
+        self.n_grows = 0
+        self.n_shrinks = 0
         if pallas is None:
             # legacy mode is the seed-numerics baseline: never reroute its
             # decode through the Pallas kernel implicitly
@@ -289,20 +312,101 @@ class JaxEngine(Backend):
         return slot
 
     def _grow_arena(self):
-        """Double the arena's slot capacity (rare; amortized O(1) per
+        """Widen the arena's slot capacity (rare; amortized O(1) per
         request — existing rows keep their slot ids, new rows are zero).
-        Flat layout: unfold the layer axis, widen the slot axis, refold."""
+        Flat layout: unfold the layer axis, widen the slot axis, refold.
+        Doubles, capped at ``max_slots``; at the cap, growth raises the
+        same arena-exhausted error a pinned arena does (memory-aware
+        admission is what keeps live requests under the cap)."""
         old = self.n_slots
+        new = 2 * old if self.max_slots is None else min(2 * old,
+                                                         self.max_slots)
+        if new <= old:
+            raise RuntimeError(
+                f"cache arena exhausted at its memory cap: all "
+                f"{self.n_slots} slots (max_slots={self.max_slots}) held "
+                f"by live requests — raise JaxEngine(max_slots=...) or "
+                f"enable memory-aware admission so the scheduler defers "
+                f"work instead of overcommitting device memory")
+        # padded-row scatters use the _PAD_SLOT sentinel: growth must never
+        # bring a real row index into the sentinel's range, or a padding
+        # row's dropped scatter would silently alias a live slot
+        assert new < _PAD_SLOT, (
+            f"arena growth to {new} slots would reach the padded-row "
+            f"sentinel (_PAD_SLOT={int(_PAD_SLOT)})")
 
         def grow(l):
             span_len = l.shape[0] // old
             r = l.reshape(span_len, old, *l.shape[1:])
-            r = jnp.concatenate([r, jnp.zeros_like(r)], axis=1)
-            return r.reshape(span_len * 2 * old, *l.shape[1:])
+            z = jnp.zeros((span_len, new - old) + l.shape[1:], l.dtype)
+            return jnp.concatenate([r, z], axis=1).reshape(
+                span_len * new, *l.shape[1:])
 
         self.arenas = [jax.tree.map(grow, span) for span in self.arenas]
-        self.n_slots = 2 * old
+        self.n_slots = new
+        self.n_grows += 1
         self._free_slots.extend(range(old, self.n_slots))
+
+    def _maybe_shrink(self):
+        """Reclaim arena memory when occupancy has dropped: compact live
+        slots below the target watermark and slice the arena down to it.
+
+        Fires only when capacity exceeds TWICE the target — the target
+        itself keeps a doubling of headroom above the live set
+        (``pow2(2 * live)``, floored at ``min_slots``) — so a stable
+        working set never thrashes grow/shrink, while a drained burst
+        returns capacity (and ``memory_stats().bytes_resident``) to within
+        2x of steady-state occupancy."""
+        if (not self._auto_shrink or self.cache_mode != "arena"
+                or not self.arenas):
+            return
+        live = len(self._slot)
+        target = max(_pow2(2 * live) if live else 1, self._min_slots)
+        if target * 2 <= self.n_slots:
+            self._shrink_arena(target)
+
+    def _shrink_arena(self, target: int):
+        """Compact live slots below ``target`` (relocating their rows in
+        every span arena) and halve+ the arena down to ``target`` slots.
+
+        Bit-exact by construction: relocation copies rows verbatim, the
+        flat layout (layer k at ``slot + k * n_slots``) is re-folded at
+        the new width, and every membership-keyed device cache holding
+        slot ids is invalidated. Eager (unjitted) dispatch — reclamation
+        is rare and off the decode hot path; the next fused dispatch
+        retraces once for the new arena shape, exactly as growth does."""
+        old = self.n_slots
+        assert target < old and len(self._slot) <= target, (target, old)
+        # host-side relocation plan: live slots >= target move into the
+        # lowest free slots < target (enough exist: live <= target)
+        moving = sorted(s for s in self._slot.values() if s >= target)
+        free_low = sorted(s for s in self._free_slots if s < target)
+        dst_of = dict(zip(moving, free_low))
+        for rid, s in self._slot.items():
+            if s in dst_of:
+                self._slot[rid] = dst_of[s]
+        src_np = np.fromiter(dst_of.keys(), np.int32, len(dst_of))
+        dst_np = np.fromiter(dst_of.values(), np.int32, len(dst_of))
+        for si, (_, _, lo, hi) in enumerate(self._spans):
+            span_len = hi - lo + 1
+            offs = np.arange(span_len, dtype=np.int32) * old
+            src = (src_np[None, :] + offs[:, None]).ravel()
+            dst = (dst_np[None, :] + offs[:, None]).ravel()
+
+            def compact(l):
+                if len(src):
+                    l = l.at[dst].set(l[src])
+                r = l.reshape(span_len, old, *l.shape[1:])
+                return r[:, :target].reshape(span_len * target, *l.shape[1:])
+
+            self.arenas[si] = jax.tree.map(compact, self.arenas[si])
+        self.n_slots = target
+        self.n_shrinks += 1
+        used = set(self._slot.values())
+        self._free_slots = deque(s for s in range(target) if s not in used)
+        # slot ids moved: the membership-keyed slot vector is stale (pos /
+        # token vectors carry no slot ids and stay valid)
+        self._slotbatch = None
 
     def _offs(self):
         """Per-span device vectors of layer row offsets (k * n_slots) in
@@ -316,18 +420,46 @@ class JaxEngine(Backend):
         return self._offs_cache[1]
 
     def release_slot(self, req: Request):
-        """Return ``req``'s slot to the free pool (idempotent)."""
-        slot = self._slot.pop(req.rid, None)
-        if slot is not None:
-            self._free_slots.append(slot)
+        """Return ``req``'s slot to the free pool (idempotent); reclaims
+        arena capacity when occupancy has dropped far enough."""
+        self._release_slots([req])
+
+    def _release_slots(self, reqs: Sequence[Request]):
+        """Release a whole batch of slots, then reclaim ONCE — a draining
+        batch must not cascade through intermediate shrink sizes (each a
+        full-arena copy that the next release would discard)."""
+        released = False
+        for r in reqs:
+            slot = self._slot.pop(r.rid, None)
+            if slot is not None:
+                self._free_slots.append(slot)
+                released = True
+        if released:
+            self._maybe_shrink()
 
     @property
     def slots_in_use(self) -> int:
         return len(self._slot)
 
+    def memory_stats(self, model=None):
+        """Arena accounting: slots live/free at current capacity plus the
+        actual device-resident bytes (every span arena leaf). One engine
+        is one pool — multi-tenant sessions see per-model pools through
+        the :class:`~repro.serving.backend.MultiBackend` mux."""
+        from .backend import MemoryStats
+        total_bytes = sum(l.nbytes for span in self.arenas
+                          for l in jax.tree.leaves(span))
+        return MemoryStats(
+            slots_total=self.n_slots,
+            slots_live=len(self._slot),
+            slots_free=len(self._free_slots),
+            bytes_resident=int(total_bytes),
+            bytes_per_slot=total_bytes / max(1, self.n_slots),
+            max_slots=self.max_slots,
+            pool=id(self))
+
     def on_finished(self, model, reqs: Sequence[Request]) -> None:
-        for r in reqs:
-            self.release_slot(r)
+        self._release_slots(reqs)
 
     def release_request(self, model, req: Request) -> None:
         """Drop the request's host-side EngineState (prompt, generated
@@ -784,9 +916,8 @@ class JaxEngine(Backend):
         self.nodes_executed += len(node_ids)
         self.runs_executed += 1
         n = len(node_ids)
-        for r in reqs:
-            if r.idx + n >= len(r.sequence):      # final node at run end
-                self.release_slot(r)
+        self._release_slots([r for r in reqs
+                             if r.idx + n >= len(r.sequence)])  # final node
         return time.perf_counter() - t0, None
 
     def _entry_x(self, reqs, sts, B, Bp):
@@ -888,9 +1019,8 @@ class JaxEngine(Backend):
         # free arena slots of requests that just executed their final node
         # (on_finished() releases them too — both are idempotent — but this
         # covers direct engine driving without the server loop)
-        for r in reqs:
-            if r.idx == len(r.sequence) - 1:
-                self.release_slot(r)
+        self._release_slots([r for r in reqs
+                             if r.idx == len(r.sequence) - 1])
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------------

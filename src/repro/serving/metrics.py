@@ -13,6 +13,12 @@ finishers still appears, NaN-safe, in :meth:`ServeStats.per_model`.
 Aggregate *attainment* across mixed SLA classes judges every request
 against its **own** deadline (class deadline, else the supplied default).
 
+SLA accounting judges every SUBMITTED request: a request rejected at
+admission control counts as a violation of its own class deadline (the
+paper's SLA-satisfaction figures count all submitted requests — without
+this a policy could inflate attainment by rejecting aggressively).
+Latency/TTFT/TPOT/throughput remain finished-only by construction.
+
 All aggregates are NaN-safe when a slice has no finishers. TTFT/TPOT need
 ``t_first_token``, which only the session front-end stamps (at the run
 boundary emitting token #1) — trace replays through
@@ -46,6 +52,11 @@ class ServeStats:
     duration: float
     finished: List[Request] = field(default_factory=list)
     rejected: int = 0                       # refused at admission control
+    # the rejected requests themselves: SLA accounting counts every
+    # SUBMITTED request (paper Fig. SLA-satisfaction), so a rejection is a
+    # violation of its class deadline — a policy cannot inflate attainment
+    # by rejecting aggressively
+    rejected_requests: List[Request] = field(default_factory=list)
     # SLA classes observed at submission: name -> relative deadline
     # (None for the default class — its target arrives via summary(sla=...))
     classes: Dict[str, Optional[float]] = field(default_factory=dict)
@@ -62,6 +73,16 @@ class ServeStats:
         if name is None:
             return self.finished
         return [r for r in self.finished if r.model_name == name]
+
+    def rejected_of_class(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.rejected_requests
+        return [r for r in self.rejected_requests if r.sla_name == name]
+
+    def rejected_of_model(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.rejected_requests
+        return [r for r in self.rejected_requests if r.model_name == name]
 
     @property
     def latencies(self) -> np.ndarray:
@@ -90,11 +111,19 @@ class ServeStats:
     # ------------------------------------------------------------------
     def sla_violation_rate(self, sla: float,
                            cls: Optional[str] = None) -> float:
+        """Fraction of SUBMITTED requests (finished + rejected) of the
+        class missing ``sla``; every rejection is a violation — it never
+        produced a response by any deadline. NaN when the class saw no
+        submissions at all (an all-rejected class reports 1.0)."""
         reqs = self.of_class(cls)
-        if not reqs:
+        n_rej = len(self.rejected_of_class(cls))
+        if not reqs and not n_rej:
             return _NAN
-        lat = np.array([r.latency() for r in reqs])
-        return float((lat > sla).mean())
+        viol = n_rej
+        if reqs:
+            lat = np.array([r.latency() for r in reqs])
+            viol += int((lat > sla).sum())
+        return viol / (len(reqs) + n_rej)
 
     def sla_attainment(self, sla: float, cls: Optional[str] = None) -> float:
         v = self.sla_violation_rate(sla, cls)
@@ -111,13 +140,19 @@ class ServeStats:
     def attainment(self, sla: Optional[float] = None,
                    model: Optional[str] = None) -> float:
         """Aggregate SLA attainment with per-request deadlines: the
-        fraction of finished requests meeting their *own* class deadline
-        (``sla`` supplies the default class's). Mixed-tier and
-        multi-model runs are judged fairly — a request is never held to
-        another tier's target. NaN when no finisher has a deadline."""
+        fraction of SUBMITTED requests (finished **and rejected** — the
+        paper's SLA-satisfaction counts everything submitted) meeting
+        their *own* class deadline (``sla`` supplies the default
+        class's). Mixed-tier and multi-model runs are judged fairly — a
+        request is never held to another tier's target; every rejection
+        with a deadline counts as a miss. NaN when no submission has a
+        deadline."""
         judged = [(r.latency() <= d)
                   for r in self.of_model(model)
                   for d in [self._deadline_of(r, sla)] if d is not None]
+        judged += [False
+                   for r in self.rejected_of_model(model)
+                   if self._deadline_of(r, sla) is not None]
         return _mean([float(ok) for ok in judged])
 
     def ttft(self, cls: Optional[str] = None) -> float:
@@ -142,7 +177,8 @@ class ServeStats:
         """Per-SLA-class breakdown: completion count, attainment/violation
         against the class's own deadline, p50/p99, TTFT, TPOT. ``sla``
         supplies the default class's deadline. NaN-safe throughout."""
-        names = set(self.classes) | {r.sla_name for r in self.finished}
+        names = (set(self.classes) | {r.sla_name for r in self.finished}
+                 | {r.sla_name for r in self.rejected_requests})
         out: Dict[str, Dict[str, float]] = {}
         for name in sorted(names):
             deadline = self._class_deadline(name, sla)
@@ -150,6 +186,7 @@ class ServeStats:
                     if deadline is not None else _NAN)
             out[name] = {
                 "completed": len(self.of_class(name)),
+                "rejected": len(self.rejected_of_class(name)),
                 "deadline_ms": (deadline * 1e3 if deadline is not None
                                 else _NAN),
                 "sla_violation_rate": viol,
@@ -167,13 +204,15 @@ class ServeStats:
         attainment against each request's *own* SLA-class deadline
         (``sla`` = default class target), p50/p99 latency, TTFT, TPOT.
         Registered models with no finishers appear with NaN rows."""
-        names = set(self.models) | {r.model_name for r in self.finished}
+        names = (set(self.models) | {r.model_name for r in self.finished}
+                 | {r.model_name for r in self.rejected_requests})
         out: Dict[str, Dict[str, float]] = {}
         for name in sorted(names):
             reqs = self.of_model(name)
             att = self.attainment(sla, model=name)
             out[name] = {
                 "completed": len(reqs),
+                "rejected": len(self.rejected_of_model(name)),
                 "sla_attainment": att,
                 "sla_violation_rate": (_NAN if np.isnan(att) else 1.0 - att),
                 "p50_ms": _percentile(reqs, 50) * 1e3,

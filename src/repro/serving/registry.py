@@ -30,16 +30,24 @@ from ..core.policies import Policy
 
 @dataclass
 class ModelEntry:
-    """One registered model: name + workload + its private policy."""
+    """One registered model: name + workload + its private policy.
+
+    ``mem_share`` caps this model's admitted-resident KV slots at a
+    fraction of the backend pool's ``max_slots`` under memory-aware
+    admission (``None`` = uncapped; the session falls back to the
+    arbiter's ``mem_shares``). Per-model shares are what keep a bulk
+    tenant from starving an interactive tenant of device memory."""
     name: str
     workload: Optional[object]          # serving.workload.Workload
     policy: Policy
     index: int                          # registration order (arbiter RR)
+    mem_share: Optional[float] = None   # fraction of the pool's max_slots
 
     def __repr__(self):
         wl = getattr(self.workload, "name", None)
+        share = f", mem_share={self.mem_share:g}" if self.mem_share else ""
         return (f"ModelEntry({self.name!r}, workload={wl!r}, "
-                f"policy={self.policy.name})")
+                f"policy={self.policy.name}{share})")
 
 
 class ModelRegistry:
@@ -48,12 +56,15 @@ class ModelRegistry:
     def __init__(self):
         self._entries: Dict[str, ModelEntry] = {}
 
-    def register(self, name: str, workload=None, *,
-                 policy: Policy) -> ModelEntry:
+    def register(self, name: str, workload=None, *, policy: Policy,
+                 mem_share: Optional[float] = None) -> ModelEntry:
         if name in self._entries:
             raise ValueError(f"model {name!r} already registered")
+        if mem_share is not None and not 0.0 < mem_share <= 1.0:
+            raise ValueError(
+                f"mem_share for {name!r} must lie in (0, 1]: {mem_share}")
         entry = ModelEntry(name=name, workload=workload, policy=policy,
-                           index=len(self._entries))
+                           index=len(self._entries), mem_share=mem_share)
         self._entries[name] = entry
         return entry
 

@@ -28,6 +28,13 @@ loop: each model's policy is consulted at every run boundary, commits a
 run of consecutive node ids, the arbiter picks among the ready models,
 and the backend executes the winner as one fused dispatch.
 
+Device memory is part of admission: when the backend reports a bounded
+KV pool (``memory_stats().max_slots``), the session wires each policy's
+admission to the pool's free-slot budget — overflow defers in the InfQ,
+per-model memory shares cap each tenant's residency, and (under
+``reject_infeasible``) a request that cannot get a slot before its own
+deadline is rejected at submit. See :meth:`ServingSession._mem_room`.
+
 Handle lifecycle
 ----------------
 ``QUEUED``   — submitted, waiting in its model policy's InfQ (or in the
@@ -169,6 +176,16 @@ class ServingSession:
     batch slack on a guaranteed violation. Off by default (the paper's
     system never drops work).
 
+    ``memory_aware``: when the backend reports a bounded KV pool
+    (``memory_stats().max_slots`` set — e.g. ``JaxEngine(max_slots=...)``
+    or ``SimExecutor(max_slots=...)``), wire each registered policy's
+    admission to the pool's free-slot budget: admission beyond free
+    memory defers in the InfQ, and per-model memory shares (from
+    ``register(mem_share=...)`` or the arbiter's ``mem_shares``) cap each
+    tenant's resident slots. On by default — a no-op until a backend
+    actually reports a cap; ``False`` restores fully memory-blind
+    scheduling for A/B comparison.
+
     ``seed`` feeds the RNG handed to ``Backend.prepare`` (the JAX engine
     samples synthetic prompts from it when none is supplied).
     """
@@ -177,6 +194,7 @@ class ServingSession:
                  backend: Optional[Backend] = None, *,
                  arbiter: Optional[Arbiter] = None, seed: int = 0,
                  reject_infeasible: bool = False,
+                 memory_aware: bool = True,
                  log: Optional[ServerLog] = None):
         assert backend is not None, "ServingSession requires a backend"
         self.registry = ModelRegistry()
@@ -186,11 +204,12 @@ class ServingSession:
         self.now = 0.0
         self.duration: Optional[float] = None    # reporting window override
         self.reject_infeasible = reject_infeasible
+        self.memory_aware = memory_aware
         self.handles: Dict[int, RequestHandle] = {}
         self._finished: Dict[int, Request] = {}   # rid-keyed: O(1) release
         self._rejected: Dict[int, Request] = {}
         self._rng = np.random.default_rng(seed)
-        self._arrivals: list = []        # heap of (t, tiebreak, req, entry)
+        self._arrivals: list = []        # heap of (t, rid, seq, req, entry)
         self._seq = itertools.count()
         self._classes: Dict[str, Optional[float]] = {}
         if policy is not None:
@@ -199,15 +218,74 @@ class ServingSession:
     # ------------------------------------------------------------------
     # Model registry
     # ------------------------------------------------------------------
-    def register(self, name: str, workload=None, *,
-                 policy: Policy) -> ModelEntry:
+    def register(self, name: str, workload=None, *, policy: Policy,
+                 mem_share: Optional[float] = None) -> ModelEntry:
         """Register a model: ``name`` becomes the routing key for
         ``submit(model=...)``, trace tags, backend muxing, and per-model
         stats; ``policy`` is the model's private batching policy (its own
         BatchTable / slack predictor — batching never crosses models).
         ``workload`` is advisory: when given, submitted requests are
-        checked against it."""
-        return self.registry.register(name, workload, policy=policy)
+        checked against it. ``mem_share`` caps the model's resident KV
+        slots at that fraction of its backend pool's ``max_slots`` under
+        memory-aware admission (falls back to the arbiter's
+        ``mem_shares``)."""
+        entry = self.registry.register(name, workload, policy=policy,
+                                       mem_share=mem_share)
+        if self.memory_aware:
+            # the gate re-reads backend stats on every admission decision,
+            # so it tracks arena growth/shrink and cross-model usage live
+            entry.policy.mem_gate = (lambda e=entry: self._mem_room(e))
+        else:
+            # a policy instance reused from a memory-aware session must not
+            # keep that session's gate
+            entry.policy.mem_gate = None
+        return entry
+
+    def _mem_share(self, entry: ModelEntry) -> Optional[float]:
+        if entry.mem_share is not None:
+            return entry.mem_share
+        return self.arbiter.mem_share(entry.name)
+
+    def _mem_room(self, entry: ModelEntry) -> Optional[int]:
+        """New admissions ``entry`` may make before oversubscribing device
+        memory (None = the backend reports no cap — memory-blind).
+
+        Usage is counted from the policies' *admitted* sets, not the
+        backend's live slots: a request holds its KV slot from admission
+        (its first dispatch is imminent) to completion, and counting at
+        the admission layer closes the window where several models could
+        admit against the same free slot in one scheduling step. Models
+        whose stats report the same ``pool`` contend for the same slots
+        (one shared simulated device); per-model engines behind a
+        MultiBackend each own a disjoint pool.
+
+        A model's share is BOTH a cap on its own residency and a
+        reservation against everyone else: other pool tenants can never
+        admit into the unused remainder of a shared model's reserved
+        slots, so an uncapped bulk tenant cannot starve a shared
+        interactive tenant either."""
+        stats = self.backend.memory_stats(entry.name)
+        if stats is None or stats.max_slots is None:
+            return None
+        used_pool = 0
+        reserved_unused = 0          # other tenants' untouched reservations
+        for e in self.registry.entries():
+            if e is entry:
+                used_pool += e.policy.admitted
+                continue
+            st = self.backend.memory_stats(e.name)
+            if st is not None and st.pool == stats.pool:
+                used_pool += e.policy.admitted
+                other_share = self._mem_share(e)
+                if other_share is not None:
+                    cap_other = max(1, int(other_share * stats.max_slots))
+                    reserved_unused += max(0, cap_other - e.policy.admitted)
+        room = stats.max_slots - used_pool - reserved_unused
+        share = self._mem_share(entry)
+        if share is not None:
+            cap = max(1, int(share * stats.max_slots))
+            room = min(room, cap - entry.policy.admitted)
+        return max(0, room)
 
     def _resolve_model(self, model: Optional[str],
                        req: Request) -> ModelEntry:
@@ -295,8 +373,13 @@ class ServingSession:
             return handle
         self.backend.prepare(entry.name, req, self._rng,
                              prompt_tokens=prompt_tokens)
+        # same-timestamp arrivals (co-located models replaying one trace)
+        # tiebreak on rid — an intrinsic, submission-order-independent key —
+        # so cross-model enqueue order never depends on registration or
+        # trace-assembly dict order (the session seq is a last-resort
+        # tiebreak for exotic cloned-rid submissions only)
         heapq.heappush(self._arrivals,
-                       (req.arrival, next(self._seq), req, entry))
+                       (req.arrival, req.rid, next(self._seq), req, entry))
         return handle
 
     def _infeasible(self, entry: ModelEntry, req: Request) -> bool:
@@ -306,14 +389,31 @@ class ServingSession:
         pred = getattr(entry.policy, "predictor", None)
         if pred is None or not hasattr(pred, "single_total"):
             return False
-        return pred.single_total(req) > pred.deadline(req)
+        if pred.single_total(req) > pred.deadline(req):
+            return True
+        # memory-infeasible: the model's KV pool is exhausted AND — by the
+        # predictor's own per-request bounds — no resident request can
+        # release a slot early enough for this one to still meet its
+        # deadline (projected footprint cannot fit before the deadline).
+        # The slot is only needed at the request's ARRIVAL: a future
+        # arrival absorbs (part of) the release wait, so trace-style
+        # ahead-of-time submissions are never rejected for congestion
+        # that clears before they arrive.
+        if self.memory_aware and hasattr(pred, "release_bound"):
+            room = self._mem_room(entry)
+            if room == 0:
+                wait = max(0.0,
+                           pred.release_bound(entry.policy.admitted_requests)
+                           - (req.arrival - self.now))
+                return wait + pred.single_total(req) > pred.deadline(req)
+        return False
 
     # ------------------------------------------------------------------
     # Clock advancement
     # ------------------------------------------------------------------
     def _enqueue_due(self):
         while self._arrivals and self._arrivals[0][0] <= self.now + 1e-12:
-            _, _, req, entry = heapq.heappop(self._arrivals)
+            _, _, _, req, entry = heapq.heappop(self._arrivals)
             entry.policy.enqueue(req, self.now)
 
     def step(self, limit: Optional[float] = None) -> bool:
@@ -434,9 +534,18 @@ class ServingSession:
         """Drop a finished/rejected handle's per-request state from the
         session (long-lived online sessions otherwise accumulate every
         handle, request, and token list ever submitted). The request no
-        longer contributes to :meth:`stats`; releasing a live request is
-        refused."""
-        assert handle.done, "cannot release a live request"
+        longer contributes to :meth:`stats`.
+
+        Only terminal handles (DONE/REJECTED) may be released: a QUEUED /
+        ADMITTED / RUNNING request's scheduler and backend state is live,
+        and silently dropping the session's view of it mid-flight would
+        orphan tokens, stats, and KV slots — raises ``ValueError`` (a real
+        error, not an ``assert``, so it cannot be optimized away)."""
+        if not handle.done:
+            raise ValueError(
+                f"cannot release live request {handle.request.rid} "
+                f"(state={handle.state.value}): only DONE/REJECTED handles "
+                f"may be released — wait for completion or drain first")
         req = handle.request
         self.handles.pop(req.rid, None)
         self._finished.pop(req.rid, None)
@@ -469,6 +578,7 @@ class ServingSession:
         return ServeStats(policy=pname, duration=duration,
                           finished=list(self._finished.values()),
                           rejected=len(self._rejected),
+                          rejected_requests=list(self._rejected.values()),
                           classes=dict(self._classes),
                           models={e.name: e.policy.name for e in entries})
 
@@ -476,13 +586,15 @@ class ServingSession:
 def run_trace(policy: Policy, backend: Backend, trace: Trace, *,
               drain: bool = True, seed: int = 0,
               log: Optional[ServerLog] = None,
-              reject_infeasible: bool = False) -> ServeStats:
+              reject_infeasible: bool = False,
+              memory_aware: bool = True) -> ServeStats:
     """Offline-compatibility wrapper: replay a whole trace through a
     single-model :class:`ServingSession` and return its
     :class:`ServeStats` — the ``InferenceServer.run(trace)`` contract,
     now a thin shim."""
     session = ServingSession(policy, backend, seed=seed, log=log,
-                             reject_infeasible=reject_infeasible)
+                             reject_infeasible=reject_infeasible,
+                             memory_aware=memory_aware)
     session.duration = trace.duration
     for req in sorted(trace.requests, key=lambda r: r.arrival):
         session.submit(req)
@@ -496,13 +608,15 @@ def run_mixture(models: Sequence[Tuple[str, object, Policy]],
                 backend: Backend, trace: Trace, *,
                 arbiter: Optional[Arbiter] = None, drain: bool = True,
                 seed: int = 0, log: Optional[ServerLog] = None,
-                reject_infeasible: bool = False) -> ServeStats:
+                reject_infeasible: bool = False,
+                memory_aware: bool = True) -> ServeStats:
     """Multi-tenant sibling of :func:`run_trace`: register every
     ``(name, workload, policy)`` triple, replay a (model-tagged) trace —
     e.g. from :func:`~repro.serving.traffic.poisson_mixture` — and return
     the drained stats with per-model breakdowns."""
     session = ServingSession(backend=backend, arbiter=arbiter, seed=seed,
-                             log=log, reject_infeasible=reject_infeasible)
+                             log=log, reject_infeasible=reject_infeasible,
+                             memory_aware=memory_aware)
     for name, workload, policy in models:
         session.register(name, workload, policy=policy)
     session.duration = trace.duration

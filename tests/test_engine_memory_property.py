@@ -1,0 +1,60 @@
+"""Property test (hypothesis): paged-arena slot pool under any interleaving.
+
+Any interleaving of prepare (slot issue, growing the arena on demand),
+release (slot free, possibly shrinking/compacting), and explicit shrink
+probes must keep the free-slot pool consistent — no slot leaked, none
+double-issued, free ∪ used == 0..n_slots-1 exactly — and leave every
+request's decode output bit-exact vs the same prompt on a fresh engine.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.serving.engine import JaxEngine
+from test_engine_memory import (_finish, _mk_req, _pool_consistent,
+                                _prefill, _tiny, _workload)
+
+_CFG = _tiny()
+_WL = _workload(_CFG)
+
+
+@settings(max_examples=8, deadline=None, derandomize=True,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=st.lists(st.integers(0, 3), min_size=1, max_size=10))
+def test_slot_pool_consistent_under_any_interleaving(ops):
+    engine = JaxEngine(_CFG, max_len=32, n_slots=2, max_slots=32,
+                       min_slots=2)
+    rng = np.random.default_rng(1234)
+    live, done, prompts = [], [], {}
+    for op in ops:
+        if op in (0, 1) and len(live) < 8:       # prepare + prefill
+            r = _mk_req(_WL, rng, 5, 2)
+            p = rng.integers(2, _CFG.vocab_size, size=5)
+            engine.register(r, p)
+            _prefill(engine, r)
+            prompts[r.rid] = p
+            live.append(r)
+        elif op == 2 and live:                   # finish oldest (release)
+            r = live.pop(0)
+            _finish(engine, r)
+            done.append(r)
+        elif op == 3:                            # explicit reclamation probe
+            engine._maybe_shrink()
+        _pool_consistent(engine)
+        assert engine.slots_in_use == len(live)
+        assert engine.n_slots <= 32
+    for r in live:                               # drain the rest
+        _finish(engine, r)
+        done.append(r)
+        _pool_consistent(engine)
+
+    # decode bit-exactness vs a fresh engine, request by request
+    ref = JaxEngine(_CFG, max_len=32, n_slots=8)
+    rng2 = np.random.default_rng(5678)
+    for r in done:
+        q = _mk_req(_WL, rng2, 5, 2)
+        ref.register(q, prompts[r.rid])
+        _finish(ref, q)
+        assert engine.states[r.rid].generated == ref.states[q.rid].generated

@@ -1,0 +1,362 @@
+"""Memory-pressure-aware serving: accounting, admission, metrics, ordering.
+
+Covers the bounded-memory serving stack end to end:
+  * SimExecutor slot accounting: live slots tracked per model, analytic
+    KV bytes, and the oversubscription thrash penalty past ``max_slots``,
+  * memory-aware admission (session-wired gate): live residency never
+    exceeds the pool cap, everything still completes (overflow defers in
+    the InfQ instead of oversubscribing),
+  * ACCEPTANCE: two-tenant overload with a slot cap — memory-aware lazyb
+    with per-model memory shares holds the interactive class's attainment
+    strictly above the memory-blind baseline,
+  * rejected requests count as SLA violations (attainment / violation
+    rate / per-class / per-model), NaN-safe when a class is all-rejected,
+  * memory-infeasible rejection: a request that cannot get a KV slot
+    before its deadline is REJECTED at submit when admission control is on,
+  * deterministic cross-model ordering for same-timestamp arrivals
+    (tiebreak on rid, independent of submission/registration order),
+  * the JAX engine's paged arena under a session slot cap: memory-aware
+    admission keeps a burst inside ``max_slots`` (no arena-exhausted
+    crash) where memory-blind scheduling overruns the cap.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (LazyBatching, LeastSlackArbiter, RoundRobinArbiter,
+                        SLAClass, SlackPredictor)
+from repro.serving import (NPUPerfModel, PAPER_NPU, ServingSession,
+                           SimExecutor, get_workload, poisson_mixture,
+                           poisson_trace)
+from repro.serving.metrics import ServeStats
+from repro.serving.session import HandleState, run_mixture, run_trace
+
+PERF = NPUPerfModel(PAPER_NPU)
+WL = {n: get_workload(n) for n in ("transformer", "gnmt")}
+GOLD = SLAClass("gold", 0.04)
+BULK = SLAClass("bulk", 0.4)
+
+
+def lazyb(wl, sla=0.1, max_batch=16):
+    return LazyBatching(SlackPredictor.build([wl], PERF, sla),
+                        max_batch=max_batch)
+
+
+# ---------------------------------------------------------------------------
+# SimExecutor: slot accounting + oversubscription thrash
+# ---------------------------------------------------------------------------
+
+def test_sim_executor_slot_accounting_and_release():
+    wl = WL["transformer"]
+    rng = np.random.default_rng(0)
+    ex = SimExecutor(PERF, max_slots=4)
+    reqs = [wl.sample_request(rng, 0.0) for _ in range(3)]
+    from repro.core.request import SubBatch
+    sb = SubBatch(list(reqs))
+    ex.execute("m", sb, sb.node_id)
+    st = ex.memory_stats("m")
+    assert st.slots_live == 3 and st.slots_free == 1
+    assert st.max_slots == 4 and st.bytes_resident > 0
+    ex.on_finished("m", reqs[:2])
+    st = ex.memory_stats("m")
+    assert st.slots_live == 1 and st.slots_free == 3
+    # pool identity: every model name shares the one simulated device
+    assert ex.memory_stats("other").pool == st.pool == id(ex)
+
+
+def test_sim_executor_thrash_penalty_past_cap():
+    """Past the cap every dispatch pays live/max_slots — the cost a
+    memory-blind policy eats; at/below the cap latency is untouched
+    (and max_slots=None stays bit-identical to the seed)."""
+    wl = WL["transformer"]
+    rng = np.random.default_rng(1)
+    from repro.core.request import SubBatch
+    reqs = [wl.sample_request(rng, 0.0) for _ in range(4)]
+
+    free = SimExecutor(PERF)
+    capped = SimExecutor(PERF, max_slots=4)
+    tight = SimExecutor(PERF, max_slots=2)
+    sb = SubBatch(list(reqs))
+    lat_free = free.execute("m", sb, sb.node_id)
+    lat_capped = capped.execute("m", SubBatch(list(reqs)), sb.node_id)
+    lat_tight = tight.execute("m", SubBatch(list(reqs)), sb.node_id)
+    assert lat_capped == lat_free                 # 4 live <= 4 slots
+    assert lat_tight == pytest.approx(lat_free * 2.0)   # 4 live / 2 slots
+
+
+# ---------------------------------------------------------------------------
+# Memory-aware admission: residency bounded, work defers instead
+# ---------------------------------------------------------------------------
+
+def test_memory_gate_bounds_live_residency():
+    """Single model, pool of 6 slots, heavy burst: the session-wired gate
+    must keep backend residency (and the policy's admitted set) at or
+    under the cap at EVERY scheduling step, while every request still
+    completes (deferred, not dropped)."""
+    wl = WL["transformer"]
+    M = 6
+    backend = SimExecutor(PERF, max_slots=M)
+    session = ServingSession(lazyb(wl, max_batch=16), backend)
+    trace = poisson_trace(wl, 800, 0.05, seed=2)
+    session.duration = trace.duration
+    for r in sorted(trace.requests, key=lambda r: r.arrival):
+        session.submit(r)
+    peak = 0
+    while session.step():
+        peak = max(peak, backend.memory_stats().slots_live,
+                   session.policy.admitted)
+    stats = session.stats()
+    assert peak <= M, f"residency peaked at {peak} > cap {M}"
+    assert len(stats.finished) == len(trace.requests)
+    assert stats.rejected == 0
+
+
+def test_memory_blind_session_overruns_the_cap():
+    """Sanity for the A/B: with memory_aware=False the same overload
+    oversubscribes the pool (that is what the thrash penalty prices)."""
+    wl = WL["transformer"]
+    backend = SimExecutor(PERF, max_slots=6)
+    session = ServingSession(lazyb(wl, max_batch=16), backend,
+                             memory_aware=False)
+    trace = poisson_trace(wl, 800, 0.05, seed=2)
+    for r in sorted(trace.requests, key=lambda r: r.arrival):
+        session.submit(r)
+    peak = 0
+    while session.step():
+        peak = max(peak, backend.memory_stats().slots_live)
+    assert peak > 6
+
+
+# ---------------------------------------------------------------------------
+# ACCEPTANCE: two-tenant overload under a slot cap
+# ---------------------------------------------------------------------------
+
+def _gold_bulk(memory_aware, shares, M=8, seed=0):
+    mix = poisson_mixture([("tf", WL["transformer"], 500),
+                           ("gn", WL["gnmt"], 500)], 0.25, seed=seed)
+    for r in mix.requests:
+        r.sla = GOLD if r.model == "tf" else BULK
+    models = [("tf", WL["transformer"], lazyb(WL["transformer"], 0.04)),
+              ("gn", WL["gnmt"], lazyb(WL["gnmt"], 0.4))]
+    return run_mixture(models, SimExecutor(PERF, max_slots=M), mix.fresh(),
+                       arbiter=LeastSlackArbiter(mem_shares=shares),
+                       memory_aware=memory_aware)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_memory_shares_protect_interactive_tenant(seed):
+    """Two tenants, one bounded KV pool: memory-aware lazyb admission with
+    per-model memory shares holds the interactive (gold) class's
+    attainment STRICTLY above the memory-blind baseline, which lets the
+    bulk tenant flood the pool and thrash every dispatch."""
+    blind = _gold_bulk(False, None, seed=seed)
+    aware = _gold_bulk(True, {"tf": 0.5, "gn": 0.5}, seed=seed)
+    g_blind = blind.per_model()["tf"]["sla_attainment"]
+    g_aware = aware.per_model()["tf"]["sla_attainment"]
+    assert g_aware > g_blind, (g_aware, g_blind)
+    assert g_aware > 0.95
+    # the bulk tenant is capped, not starved (it may trade some of its own
+    # attainment for the interactive guarantee — that is the contract)
+    assert aware.per_model()["gn"]["completed"] > 0
+
+
+def test_share_is_a_reservation_against_uncapped_tenants():
+    """A model's share reserves its slots even against tenants with NO
+    share of their own: an uncapped bulk flood can only draw from the
+    unreserved remainder of the pool, and the shared model's reserve is
+    intact when its traffic shows up."""
+    M = 8
+    backend = SimExecutor(PERF, max_slots=M)
+    session = ServingSession(backend=backend)
+    session.register("tf", WL["transformer"],
+                     policy=lazyb(WL["transformer"], 0.04), mem_share=0.5)
+    session.register("gn", WL["gnmt"], policy=lazyb(WL["gnmt"], 0.4))
+    rng = np.random.default_rng(8)
+    for _ in range(16):                  # bulk-only flood, gold still idle
+        session.submit(WL["gnmt"].sample_request(rng, 0.0), model="gn")
+    for _ in range(6):
+        session.step()
+        assert session.registry["gn"].policy.admitted <= M - 4, \
+            "uncapped tenant dipped into the shared tenant's reservation"
+    # the reserve is available the moment the shared tenant needs it
+    h = session.submit(WL["transformer"].sample_request(rng, session.now),
+                       model="tf")
+    session.step()
+    assert session.registry["tf"].policy.admitted >= 1
+    session.drain()
+    assert h.state is HandleState.DONE
+
+
+def test_unshared_pool_lets_bulk_starve_interactive():
+    """Motivation check for shares: memory-aware admission WITHOUT shares
+    lets the bulk tenant grab the whole pool first — the interactive
+    tenant defers behind it and its attainment collapses below even the
+    blind baseline. Shares are what make the pool starvation-proof."""
+    noshare = _gold_bulk(True, None, seed=0)
+    shared = _gold_bulk(True, {"tf": 0.5, "gn": 0.5}, seed=0)
+    assert (shared.per_model()["tf"]["sla_attainment"]
+            > noshare.per_model()["tf"]["sla_attainment"] + 0.3)
+
+
+# ---------------------------------------------------------------------------
+# Rejections are SLA violations (paper counts all SUBMITTED requests)
+# ---------------------------------------------------------------------------
+
+def _mk_finished(wl, rng, latency, sla=None):
+    r = wl.sample_request(rng, 0.0)
+    r.sla = sla
+    r.t_finish = latency
+    r.idx = len(r.sequence)
+    return r
+
+
+def test_rejections_count_as_sla_violations():
+    wl = WL["transformer"]
+    rng = np.random.default_rng(3)
+    ok = _mk_finished(wl, rng, 0.01, GOLD)
+    late = _mk_finished(wl, rng, 9.0, GOLD)
+    rej = wl.sample_request(rng, 0.0)
+    rej.sla = GOLD
+    stats = ServeStats(policy="p", duration=1.0, finished=[ok, late],
+                       rejected=1, rejected_requests=[rej],
+                       classes={"gold": GOLD.deadline})
+    # 3 submitted, 1 met: attainment 1/3, violation 2/3
+    assert stats.attainment() == pytest.approx(1 / 3)
+    assert stats.sla_violation_rate(GOLD.deadline, "gold") == \
+        pytest.approx(2 / 3)
+    pc = stats.per_class()
+    assert pc["gold"]["completed"] == 2 and pc["gold"]["rejected"] == 1
+    assert pc["gold"]["sla_attainment"] == pytest.approx(1 / 3)
+    pm = stats.per_model()
+    assert pm[wl.name]["rejected"] == 1
+    assert pm[wl.name]["sla_attainment"] == pytest.approx(1 / 3)
+
+
+def test_all_rejected_class_is_nan_safe():
+    """A class with no finishers and only rejections: violation rate is
+    1.0 (not NaN — every submission missed), latency percentiles stay
+    NaN, and nothing raises."""
+    wl = WL["transformer"]
+    rng = np.random.default_rng(4)
+    rej = wl.sample_request(rng, 0.0)
+    rej.sla = GOLD
+    ok = _mk_finished(wl, rng, 0.01, BULK)
+    stats = ServeStats(policy="p", duration=1.0, finished=[ok],
+                       rejected=1, rejected_requests=[rej],
+                       classes={"gold": GOLD.deadline,
+                                "bulk": BULK.deadline})
+    pc = stats.per_class()
+    assert pc["gold"]["completed"] == 0 and pc["gold"]["rejected"] == 1
+    assert pc["gold"]["sla_violation_rate"] == 1.0
+    assert pc["gold"]["sla_attainment"] == 0.0
+    assert np.isnan(pc["gold"]["p50_ms"]) and np.isnan(pc["gold"]["ttft_ms"])
+    assert pc["bulk"]["sla_attainment"] == 1.0
+    # aggregate attainment blends both classes per-request: 1 of 2 met
+    assert stats.attainment() == pytest.approx(0.5)
+    # an empty-but-registered class still reports NaN (no submissions)
+    stats2 = ServeStats(policy="p", duration=1.0, classes={"ghost": 0.1})
+    assert np.isnan(stats2.per_class()["ghost"]["sla_violation_rate"])
+
+
+def test_policy_cannot_inflate_attainment_by_rejecting():
+    """End-to-end: with admission control on, an overloaded tier's
+    rejections drag attainment down exactly like violations would — the
+    'reject everything hard' strategy can no longer report a clean SLA."""
+    wl = WL["transformer"]
+    pol = lazyb(wl, sla=1e-6)       # nothing can meet this target
+    stats = run_trace(pol, SimExecutor(PERF),
+                      poisson_trace(wl, 100, 0.05, seed=5),
+                      reject_infeasible=True)
+    assert stats.rejected == len(stats.rejected_requests) > 0
+    # every submission is judged: rejections are violations
+    assert stats.attainment(1e-6) == 0.0
+    assert stats.sla_violation_rate(1e-6) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# Memory-infeasible rejection
+# ---------------------------------------------------------------------------
+
+def test_pool_exhaustion_past_deadline_rejects_at_submit():
+    """One slot, held by a long request: a submission whose deadline is
+    meetable ALONE (so the plain single-input bound passes) but not after
+    waiting for the slot to free is REJECTED at submit — the
+    memory-infeasible path specifically; a loose-deadline one is accepted
+    and defers."""
+    wl = WL["transformer"]
+    backend = SimExecutor(PERF, max_slots=1)
+    session = ServingSession(lazyb(wl, sla=10.0), backend,
+                             reject_infeasible=True)
+    rng = np.random.default_rng(6)
+    first = session.submit(wl.sample_request(rng, 0.0))
+    session.step()                   # admit + start: slot now held
+    assert session.policy.admitted == 1
+
+    pred = session.policy.predictor
+    doomed = wl.sample_request(rng, 0.0)
+    need = pred.single_total(doomed)
+    wait = pred.release_bound(session.policy.admitted_requests)
+    assert wait > 0
+    # feasible alone (deadline > need) but not behind the held slot
+    # (deadline < wait + need): only the memory path can reject this
+    doomed.sla = SLAClass("tight", need + 0.5 * wait)
+    h_doomed = session.submit(doomed)
+    assert h_doomed.state is HandleState.REJECTED
+
+    patient = wl.sample_request(rng, 0.0)
+    patient.sla = SLAClass("loose", 10.0)
+    h_patient = session.submit(patient)
+    assert h_patient.state is HandleState.QUEUED
+    session.drain()
+    assert h_patient.state is HandleState.DONE
+    assert first.state is HandleState.DONE
+    assert session.stats().rejected == 1
+
+
+# ---------------------------------------------------------------------------
+# Deterministic same-timestamp cross-model arrival order
+# ---------------------------------------------------------------------------
+
+class _RecordingPolicy(LazyBatching):
+    """LazyBatching that records the global enqueue order."""
+
+    def __init__(self, pred, book):
+        super().__init__(pred, max_batch=16)
+        self._book = book
+
+    def enqueue(self, req, now):
+        self._book.append(req.rid)
+        super().enqueue(req, now)
+
+
+def test_same_timestamp_arrivals_order_is_submission_independent():
+    """Two models submit at IDENTICAL timestamps: the arrivals heap must
+    break ties on an intrinsic key (rid), so the enqueue order into the
+    policies is the same no matter which model's requests were submitted
+    (or registered) first — never dict/registration iteration order."""
+    t_same = 0.005
+    rng = np.random.default_rng(7)
+    reqs_a = [WL["transformer"].sample_request(rng, t_same) for _ in range(2)]
+    reqs_b = [WL["gnmt"].sample_request(rng, t_same) for _ in range(2)]
+    for r in reqs_a:
+        r.model = "tf"
+    for r in reqs_b:
+        r.model = "gn"
+
+    def serve(submit_order, register_order):
+        book = []
+        session = ServingSession(backend=SimExecutor(PERF))
+        entries = {"tf": WL["transformer"], "gn": WL["gnmt"]}
+        for name in register_order:
+            wl = entries[name]
+            session.register(name, wl, policy=_RecordingPolicy(
+                SlackPredictor.build([wl], PERF, 0.1), book))
+        for r in submit_order:
+            session.submit(r.clone())
+        session.drain()
+        return book
+
+    b1 = serve(reqs_a + reqs_b, ["tf", "gn"])
+    # resubmit the other way around, with registration order flipped too
+    b2 = serve(reqs_b + reqs_a, ["gn", "tf"])
+    assert b1 == b2, f"enqueue order depends on submission order: {b1} != {b2}"
+    assert b1 == sorted(b1), "same-timestamp ties must break on rid"

@@ -124,8 +124,11 @@ def test_release_drops_finished_handle_state():
     rng = np.random.default_rng(14)
     h1 = session.submit(wl.sample_request(rng, 0.0))
     h2 = session.submit(wl.sample_request(rng, 1 * MS))
-    with pytest.raises(AssertionError):
-        session.release(h1)                 # still live: refused
+    with pytest.raises(ValueError, match="live request"):
+        session.release(h1)                 # still live: refused (a real
+        #                                     error even under -O, so a
+        #                                     mid-flight release can never
+        #                                     silently drop request state)
     session.drain()
     session.release(h1)
     assert h1.request.rid not in session.handles
