@@ -107,14 +107,34 @@ def bench_mode(mode, cfg, wl, *, batch, max_len, tokens):
     warm = _build_batch(engine, wl, cfg, batch, prompt_len=16,
                         decode_len=tokens)
     _drive(engine, wl, warm, mode, tokens)
+    s0 = engine.sanitizer_stats()
     reqs = _build_batch(engine, wl, cfg, batch, prompt_len=16,
                         decode_len=tokens)
     steady = _drive(engine, wl, reqs, mode, tokens)
+    s1 = engine.sanitizer_stats()
     toks = [engine.states[r.rid].generated for r in reqs]
+    # runtime sanitizer gate over the timed window: the steady pass hits
+    # only warmed jit entries (0 retraces, any mode), and fused dispatch
+    # costs at most ONE host sync per committed run — the contract the
+    # speedup rests on, asserted on every bench/CI run
+    sanitizer = {"steady_retraces": s1.retraces - s0.retraces,
+                 "steady_syncs": s1.host_syncs - s0.host_syncs,
+                 "steady_runs": s1.runs - s0.runs,
+                 "max_syncs_per_run": s1.max_syncs_per_run}
+    assert sanitizer["steady_retraces"] == 0, \
+        f"{mode}: steady pass retraced {sanitizer['steady_retraces']}x " \
+        f"after a full warmup — a jit-cache key leaked a dynamic scalar"
+    if mode == "fused":
+        assert sanitizer["steady_runs"] > 0
+        assert sanitizer["steady_syncs"] <= sanitizer["steady_runs"], \
+            f"fused: {sanitizer['steady_syncs']} host syncs over " \
+            f"{sanitizer['steady_runs']} committed runs — a hidden sync " \
+            f"crept into the hot path"
+        assert s1.max_syncs_per_run <= 1, s1
     # median is the headline number: robust to scheduler noise on shared
     # CPU runners (mean/min recorded alongside)
     return (float(np.median(steady)), float(np.mean(steady)),
-            float(np.min(steady)), toks)
+            float(np.min(steady)), toks, sanitizer)
 
 
 def bench_shrink(cfg, wl, *, batch, max_len, repeats=3):
@@ -212,13 +232,14 @@ def _run(args) -> dict:
            "backend": jax.default_backend()}
     all_toks = {}
     for mode in MODES:
-        med_s, mean_s, min_s, toks = bench_mode(
+        med_s, mean_s, min_s, toks, sanitizer = bench_mode(
             mode, cfg, wl, batch=args.batch, max_len=args.max_len,
             tokens=args.tokens)
         all_toks[mode] = toks
         rec[mode] = {"median_ms_per_token": med_s * 1e3,
                      "mean_ms_per_token": mean_s * 1e3,
-                     "min_ms_per_token": min_s * 1e3}
+                     "min_ms_per_token": min_s * 1e3,
+                     "sanitizer": sanitizer}
         print(f"{mode:>7}: {med_s * 1e3:8.2f} ms/token median "
               f"({mean_s * 1e3:.2f} mean, {min_s * 1e3:.2f} min) "
               f"over {args.tokens} steady tokens")

@@ -1,0 +1,37 @@
+"""reprolint: repo-specific static analysis enforcing serving invariants.
+
+Every perf win in this repo rests on invariants that used to exist only
+as convention — one host sync per committed run, no wall-clock or
+unseeded RNG in virtual-time paths, bounded retraces via pow2 bucketing,
+no ``assert``-guarded runtime invariants (they vanish under ``python
+-O``), and the model-keyed Backend contract. This package makes them
+*enforced*: an AST lint pass (``python -m repro.analysis.lint src/``)
+with five repo-specific checkers, reported against a committed baseline
+(new findings fail CI; legacy ones are burned down), plus cheap runtime
+sanitizer counters in the JAX engine (``Backend.sanitizer_stats()``)
+that let a test assert "N decode cycles => <= 1 sync per run and 0
+retraces after warmup".
+
+Checkers (see each module's docstring for the precise rules):
+
+  * ``sync-point``       — host-device sync constructs inside the
+    engine's run-execution hot paths (``sync_points``),
+  * ``retrace-hazard``   — dynamic shape-derived scalars flowing into
+    jit-cache keys outside the pow2 bucketing helpers (``retrace``),
+  * ``bare-assert``      — runtime invariants guarded by ``assert`` in
+    production code (``asserts``),
+  * ``determinism``      — wall-clock / unseeded RNG / set-iteration
+    tiebreaks in virtual-time modules (``determinism``),
+  * ``backend-contract`` — Backend subclasses drifting off the
+    model-keyed signatures, or internal use of the retired ``Executor``
+    alias (``contracts``).
+
+Suppress a legitimate finding with a trailing (or preceding-line)
+comment: ``# reprolint: disable=<checker>[,<checker>]``.
+"""
+# NOTE: .lint is deliberately NOT imported here — ``python -m
+# repro.analysis.lint`` would otherwise import it twice (runpy warning).
+# Import ALL_CHECKERS / run_lint from repro.analysis.lint directly.
+from .base import (Finding, LintResult, load_baseline, write_baseline)
+
+__all__ = ["Finding", "LintResult", "load_baseline", "write_baseline"]

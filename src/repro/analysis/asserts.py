@@ -1,0 +1,50 @@
+"""Checker 3 — ``bare-assert``: runtime invariants that vanish under -O.
+
+``assert`` compiles to nothing under ``python -O``: an invariant guarded
+by one is an invariant that silently stops being checked the moment
+someone runs optimized bytecode. PR 5 shipped exactly this bug in
+``ServingSession.release()`` — a live-handle release guard that
+evaporated under -O and orphaned KV slots. The fix pattern (mirrored by
+this checker's message) is a typed exception with a message::
+
+    if not handle.done:
+        raise ValueError(f"cannot release live request {rid} ...")
+
+Every ``assert`` statement in production code (``src/``) is flagged;
+test files are out of scope by construction (the lint runs on ``src``).
+The committed baseline carries the residual legacy sites — trace-time
+shape preconditions in Pallas kernel wrappers and the training smoke
+gate — as debt, not as precedent.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import Checker, Finding, SourceFile
+
+
+class BareAssertChecker(Checker):
+    name = "bare-assert"
+    description = ("assert-guarded runtime invariants in production "
+                   "code (removed entirely under python -O)")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        # scope = whatever tree the lint was pointed at (src/); test
+        # files use assert idiomatically and are not scanned
+        return True
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Assert):
+                continue
+            cond = ast.unparse(node.test) if hasattr(ast, "unparse") else ""
+            f = sf.finding(
+                self.name, node,
+                f"bare assert guards a runtime invariant "
+                f"({cond[:60]!r}) — raise a typed exception with a "
+                f"message instead (vanishes under python -O)")
+            if f is not None:
+                findings.append(f)
+        return findings

@@ -1,0 +1,100 @@
+"""Checker 5 — ``backend-contract``: model-keyed signatures, no Executor.
+
+PR 4 made the Backend contract model-keyed: every contract method takes
+the registry model name as its first argument after ``self`` (``prepare
+(model, req, ...)``, ``execute_run(model, sb, run)``, ...), so the
+session can say WHOSE work each call is and ``MultiBackend`` can route.
+A subclass that drifts off those signatures (renames/omits the key)
+still "works" single-model and silently misroutes multi-tenant — this
+checker catches the drift statically:
+
+  * every class whose (textual) bases include ``Backend`` or
+    ``MultiBackend`` must give each overridden contract method a first
+    parameter named ``model``,
+  * nothing in production code may import or reference the retired
+    ``Executor`` alias (it resolves to ``Backend`` behind a
+    DeprecationWarning for external callers only).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import Checker, Finding, SourceFile
+
+#: Contract methods whose FIRST parameter after self is the model key.
+MODEL_KEYED = {
+    "prepare", "execute", "execute_run", "on_finished", "release_request",
+    "token_count", "tokens", "memory_stats", "sanitizer_stats",
+}
+_BACKEND_BASES = {"Backend", "MultiBackend"}
+
+
+def _base_names(cls: ast.ClassDef):
+    for b in cls.bases:
+        if isinstance(b, ast.Name):
+            yield b.id
+        elif isinstance(b, ast.Attribute):
+            yield b.attr
+
+
+class BackendContractChecker(Checker):
+    name = "backend-contract"
+    description = ("Backend subclasses drifting off the model-keyed "
+                   "contract signatures; internal use of the retired "
+                   "Executor alias")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return True
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        findings.extend(self._check_signatures(sf))
+        findings.extend(self._check_executor_refs(sf))
+        return findings
+
+    # ------------------------------------------------------------------
+    def _check_signatures(self, sf: SourceFile):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if not (_BACKEND_BASES & set(_base_names(node))):
+                continue
+            for item in node.body:
+                if not isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                if item.name not in MODEL_KEYED:
+                    continue
+                args = item.args.posonlyargs + item.args.args
+                first = args[1].arg if len(args) >= 2 else None
+                if first != "model":
+                    f = sf.finding(
+                        self.name, item,
+                        f"{node.name}.{item.name} first parameter is "
+                        f"{first!r}, not 'model' — the Backend contract "
+                        f"is model-keyed (MultiBackend routes on it)")
+                    if f is not None:
+                        yield f
+
+    def _check_executor_refs(self, sf: SourceFile):
+        for node in ast.walk(sf.tree):
+            bad = None
+            if isinstance(node, ast.ImportFrom):
+                for alias in node.names:
+                    if alias.name == "Executor":
+                        bad = "import of"
+            elif isinstance(node, ast.Attribute) and node.attr == "Executor":
+                bad = "attribute reference to"
+            elif isinstance(node, ast.Name) and node.id == "Executor" \
+                    and isinstance(node.ctx, ast.Load):
+                bad = "reference to"
+            if bad is None:
+                continue
+            f = sf.finding(
+                self.name, node,
+                f"{bad} the retired 'Executor' alias — internal code "
+                f"must use Backend (the alias exists only as a "
+                f"deprecation shim for external callers)")
+            if f is not None:
+                yield f

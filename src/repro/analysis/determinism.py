@@ -1,0 +1,112 @@
+"""Checker 4 — ``determinism``: wall-clock, unseeded RNG, set-order ties.
+
+The simulator's clock is VIRTUAL: every latency, deadline, and slack
+value derives from the discrete-event ``session.now``, which is what
+makes traces replayable bit-identically and sim/JAX parity testable. A
+``time.time()`` read, an unseeded RNG draw, or a scheduling tiebreak
+that iterates a ``set`` in hash order inside those modules injects
+nondeterminism no equivalence grid can catch — the run still "passes",
+just differently every time.
+
+Scope: the virtual-time modules (``core/``, ``serving/server.py``,
+``serving/session.py``, sim-path serving modules) plus the audited
+launch tools (``roofline.py`` / ``dryrun.py``), where wall-clock probe
+timing is legitimate but must carry an explicit suppression so new
+wall-clock reads are a conscious decision.
+
+Rules:
+
+  * wall-clock reads: ``time.time/perf_counter/monotonic/process_time``,
+    ``datetime.now/utcnow/today``,
+  * unseeded / global-state RNG: ``np.random.default_rng()`` with no
+    seed, module-level ``np.random.<draw>()`` (global RNG), stdlib
+    ``random.<draw>()``, ``np.random.seed`` (global-state mutation),
+  * iteration-order-dependent tiebreaks: ``min``/``max``/``sorted`` with
+    a ``key=`` over a ``set`` literal/comprehension/call — elements the
+    key maps equal resolve by set iteration order, which varies across
+    processes (PYTHONHASHSEED) for str elements. (Key-less min/max/
+    sorted over comparable elements is a total order and stays clean.)
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import (Checker, Finding, SourceFile, dotted_name,
+                   is_virtual_time_file)
+
+_WALL_CLOCK = {
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.clock",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+}
+_GLOBAL_RNG_DRAWS = {
+    "random", "rand", "randn", "randint", "integers", "choice", "shuffle",
+    "permutation", "normal", "uniform", "poisson", "exponential", "seed",
+}
+_STDLIB_RANDOM = {
+    "random.random", "random.randint", "random.choice", "random.shuffle",
+    "random.uniform", "random.sample", "random.gauss", "random.seed",
+}
+_ORDER_SENSITIVE = {"min", "max", "sorted"}
+
+
+class DeterminismChecker(Checker):
+    name = "determinism"
+    description = ("wall-clock / unseeded RNG / set-iteration tiebreaks "
+                   "in virtual-time modules")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return is_virtual_time_file(sf.rel)
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            msg = self._classify(call)
+            if msg is None:
+                continue
+            f = sf.finding(self.name, call, msg)
+            if f is not None:
+                findings.append(f)
+        return findings
+
+    # ------------------------------------------------------------------
+    def _classify(self, call: ast.Call):
+        dn = dotted_name(call.func)
+        if dn in _WALL_CLOCK:
+            return (f"wall-clock read {dn}() in a virtual-time module — "
+                    f"sim time must come from the event clock")
+        if dn in _STDLIB_RANDOM:
+            return (f"{dn}() draws from the global stdlib RNG — use a "
+                    f"seeded np.random.default_rng(seed) stream")
+        if dn == "np.random.default_rng" or dn == "numpy.random.default_rng":
+            if not call.args and not call.keywords:
+                return ("np.random.default_rng() without a seed — replay "
+                        "determinism requires an explicit seed")
+            return None
+        if dn.startswith(("np.random.", "numpy.random.")):
+            leaf = dn.rsplit(".", 1)[1]
+            if leaf in _GLOBAL_RNG_DRAWS:
+                return (f"{dn}() uses numpy's GLOBAL RNG state — use a "
+                        f"seeded np.random.default_rng(seed) stream")
+        if isinstance(call.func, ast.Name) \
+                and call.func.id in _ORDER_SENSITIVE and call.args:
+            has_key = any(kw.arg == "key" for kw in call.keywords)
+            if has_key and self._is_set_expr(call.args[0]):
+                return (f"{call.func.id}(..., key=...) over a set — "
+                        f"key-equal elements resolve by set iteration "
+                        f"order, which is process-dependent for str "
+                        f"elements; make the key a total order or sort "
+                        f"a sequence instead")
+        return None
+
+    @staticmethod
+    def _is_set_expr(node: ast.AST) -> bool:
+        if isinstance(node, (ast.Set, ast.SetComp)):
+            return True
+        return (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Name)
+                and node.func.id in ("set", "frozenset"))

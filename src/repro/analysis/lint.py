@@ -1,0 +1,135 @@
+"""reprolint driver: run every checker over a source tree.
+
+Usage (CI runs exactly this)::
+
+    PYTHONPATH=src python -m repro.analysis.lint src \
+        --baseline reprolint.baseline.json
+
+Exit status 0 when every finding is covered by the committed baseline,
+1 when any NEW finding exists (print it, fix it, or — exceptionally —
+suppress it in-line with a reviewed ``# reprolint: disable=<checker>``
+comment). Baseline entries nothing matches anymore are reported as
+*stale*: the debt was paid, remove the entry (``--write-baseline``
+regenerates the file from the current findings).
+
+The programmatic entry is :func:`run_lint`, used by the checker test
+suite to lint fixture snippets and to assert the repo-wide run matches
+the committed baseline exactly.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import Iterable, List, Optional, Sequence
+
+from .asserts import BareAssertChecker
+from .base import (Checker, Finding, LintResult, SourceFile,
+                   assign_occurrences, load_baseline,
+                   split_against_baseline, write_baseline)
+from .contracts import BackendContractChecker
+from .determinism import DeterminismChecker
+from .retrace import RetraceHazardChecker
+from .sync_points import SyncPointChecker
+
+ALL_CHECKERS: List[Checker] = [
+    SyncPointChecker(),
+    RetraceHazardChecker(),
+    BareAssertChecker(),
+    DeterminismChecker(),
+    BackendContractChecker(),
+]
+
+
+def collect_files(paths: Iterable) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if p.is_dir():
+            files.extend(sorted(q for q in p.rglob("*.py")
+                                if "__pycache__" not in q.parts))
+        elif p.suffix == ".py":
+            files.append(p)
+    return files
+
+
+def run_lint(paths: Sequence, *, checkers: Optional[Sequence[Checker]] = None,
+             baseline: Optional[List[dict]] = None) -> LintResult:
+    """Lint ``paths`` (files or directories) and split the findings
+    against ``baseline`` (a list of baseline entries; None = empty, so
+    every finding is new)."""
+    checkers = list(checkers) if checkers is not None else ALL_CHECKERS
+    findings: List[Finding] = []
+    for path in collect_files(paths):
+        try:
+            sf = SourceFile(path)
+        except SyntaxError as e:
+            findings.append(Finding(
+                checker="parse-error", path=str(path),
+                line=e.lineno or 1,
+                message=f"file does not parse: {e.msg}"))
+            continue
+        for checker in checkers:
+            if checker.applies_to(sf):
+                findings.extend(checker.check(sf))
+    findings = assign_occurrences(findings)
+    return split_against_baseline(findings, baseline or [])
+
+
+def _report(res: LintResult, out=sys.stdout) -> None:
+    w = out.write
+    for f in res.new:
+        w(f"NEW      {f}\n")
+    for f in res.baselined:
+        w(f"baseline {f.path}:{f.line}: [{f.checker}] (known debt)\n")
+    for e in res.stale:
+        w(f"STALE    baseline entry {e['fingerprint']} "
+          f"({e['checker']} @ {e['path']}) matches nothing — debt paid, "
+          f"remove it from the baseline\n")
+    w(f"reprolint: {len(res.new)} new, {len(res.baselined)} baselined, "
+      f"{len(res.stale)} stale baseline entr"
+      f"{'y' if len(res.stale) == 1 else 'ies'}\n")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="invariant-enforcing static analysis for the serving "
+                    "hot path (see repro.analysis for the checker list)")
+    ap.add_argument("paths", nargs="+", help="files or directories to lint")
+    ap.add_argument("--baseline", default=None,
+                    help="committed baseline JSON (default: "
+                         "reprolint.baseline.json beside the paths if it "
+                         "exists); findings it pins never fail the run")
+    ap.add_argument("--write-baseline", metavar="PATH", default=None,
+                    help="write ALL current findings to PATH as the new "
+                         "baseline and exit 0 (burn-down bookkeeping — "
+                         "review the diff!)")
+    ap.add_argument("--list-checkers", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.list_checkers:
+        for c in ALL_CHECKERS:
+            print(f"{c.name:18s} {c.description}")
+        return 0
+
+    baseline: List[dict] = []
+    if args.baseline:
+        baseline = load_baseline(args.baseline)
+    else:
+        default = Path("reprolint.baseline.json")
+        if default.exists():
+            baseline = load_baseline(default)
+
+    res = run_lint(args.paths, baseline=baseline)
+    if args.write_baseline:
+        write_baseline(args.write_baseline, res.findings)
+        print(f"wrote {len(res.findings)} finding(s) to "
+              f"{args.write_baseline}")
+        return 0
+    _report(res)
+    return 0 if res.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,102 @@
+"""Checker 2 — ``retrace-hazard``: dynamic scalars leaking into jit keys.
+
+The engine bounds recompiles by power-of-two bucketing: every Python
+scalar that reaches a jit-cache key (the ``_fn_*`` getter arguments —
+layer bounds, context buckets, head flags) must be either structurally
+static or bucketed through ``_pow2``. A raw shape/length-derived scalar
+in a key means one fresh XLA compile per distinct value — the classic
+"bench regressed 20% and nobody knows why" failure.
+
+Rules, scoped to ``serving/engine.py``:
+
+  * an argument to a ``self._fn_*(...)`` getter whose expression contains
+    ``len(...)``, ``.shape``, or a per-request dynamic attribute
+    (``.pos`` / ``.prefill_len`` / ``.decode_len``) is a hazard UNLESS
+    the containing expression routes through the ``_pow2`` bucketing
+    helper (``_pow2(x)``, ``min(_pow2(x), cap)``, ...),
+  * ``jax.jit(...)`` may only be called inside the memoized ``_fn_*``
+    getters — a jit created on the run-execution path builds (and traces)
+    a fresh callable per invocation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import Checker, Finding, SourceFile, dotted_name, is_engine_file
+
+_DYNAMIC_ATTRS = {"pos", "prefill_len", "decode_len"}
+_BUCKET_HELPERS = {"_pow2"}
+
+
+def _contains_bucketing(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            fn = sub.func
+            name = fn.id if isinstance(fn, ast.Name) else \
+                (fn.attr if isinstance(fn, ast.Attribute) else "")
+            if name in _BUCKET_HELPERS:
+                return True
+    return False
+
+
+def _dynamic_source(node: ast.AST):
+    """The first shape/length-derived source inside ``node`` (name of the
+    construct), or None."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name) \
+                and sub.func.id == "len":
+            return "len(...)"
+        if isinstance(sub, ast.Attribute):
+            if sub.attr == "shape":
+                return ".shape"
+            if sub.attr in _DYNAMIC_ATTRS:
+                return f".{sub.attr}"
+    return None
+
+
+class RetraceHazardChecker(Checker):
+    name = "retrace-hazard"
+    description = ("shape/length-derived Python scalars flowing into "
+                   "jit-cache keys outside the pow2 bucketing helpers")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return is_engine_file(sf.rel)
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        # enclosing-function map for the jax.jit placement rule
+        enclosing = {}
+        for node in ast.walk(sf.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for sub in ast.walk(node):
+                    enclosing.setdefault(sub, node.name)
+        for call in ast.walk(sf.tree):
+            if not isinstance(call, ast.Call):
+                continue
+            fn = call.func
+            # rule 1: dynamic scalars in _fn_* getter args
+            if isinstance(fn, ast.Attribute) and fn.attr.startswith("_fn_"):
+                for arg in list(call.args) + [kw.value for kw in
+                                              call.keywords]:
+                    src = _dynamic_source(arg)
+                    if src is not None and not _contains_bucketing(arg):
+                        f = sf.finding(
+                            self.name, call,
+                            f"argument to jit-key getter '{fn.attr}' "
+                            f"derives from {src} without _pow2 bucketing "
+                            f"— every distinct value retraces")
+                        if f is not None:
+                            findings.append(f)
+            # rule 2: jax.jit outside the memoized getters
+            if dotted_name(fn) == "jax.jit":
+                owner = enclosing.get(call, "")
+                if not owner.startswith("_fn_"):
+                    f = sf.finding(
+                        self.name, call,
+                        f"jax.jit called in '{owner or '<module>'}' — "
+                        f"jits must be built once inside memoized _fn_* "
+                        f"getters, or every call re-traces")
+                    if f is not None:
+                        findings.append(f)
+        return findings

@@ -1,0 +1,104 @@
+"""Checker 1 — ``sync-point``: host-device syncs in the engine hot path.
+
+The PR 2 contract: a committed run executes async on device and the
+engine synchronizes exactly ONCE, at the run boundary. Every construct
+below forces a host-device sync (device transfer or blocking wait), so
+inside the run-execution hot paths of ``serving/engine.py`` each one is a
+hidden extra sync that silently serializes the fused pipeline:
+
+  * ``<expr>.item()`` / ``<expr>.tolist()``       — device -> host scalar,
+  * ``jax.block_until_ready(...)`` (any spelling) — blocking wait,
+  * ``jax.device_get(...)``                       — device -> host copy,
+  * ``np.asarray(...)`` / ``np.array(...)`` / ``np.copy(...)`` — numpy
+    coercion of a (potentially device) array is a transfer,
+  * ``bool(...)`` / ``int(...)`` / ``float(...)`` on a non-trivial
+    expression — Python scalar coercion of a traced/device value blocks.
+
+The ONE legitimate run-boundary sync carries a ``# reprolint:
+disable=sync-point`` annotation; anything unannotated is a regression.
+Hot paths are the run-execution call tree, named explicitly below —
+single-node ``execute`` is the degenerate one-sync-per-*node* reference
+path and is exempt by design.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import Checker, Finding, SourceFile, dotted_name, is_engine_file
+
+#: JaxEngine methods on the fused run-execution path (plus the nested
+#: closures they define). ``execute`` (single-node reference) and the
+#: rare-by-design arena reclamation helpers are deliberately absent.
+HOT_FUNCTIONS = {
+    "execute_run",
+    "_run_prefill_chunk",
+    "_prefill_groups",
+    "_entry_x",
+    "_batched_x",
+    "_flush_xbatch",
+    "_batched_slots",
+    "_offs",
+    "_chunk_run",
+}
+
+_SYNC_METHOD_CALLS = {"item", "tolist"}
+_SYNC_DOTTED = {
+    "jax.block_until_ready",
+    "jax.device_get",
+    "np.asarray", "np.array", "np.copy",
+    "numpy.asarray", "numpy.array", "numpy.copy",
+}
+_SCALAR_COERCIONS = {"bool", "int", "float"}
+
+
+class SyncPointChecker(Checker):
+    name = "sync-point"
+    description = ("host-device sync constructs inside the engine's "
+                   "run-execution hot paths (one-sync-per-run contract)")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return is_engine_file(sf.rel)
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for fn in self._hot_functions(sf.tree):
+            for call in ast.walk(fn):
+                if not isinstance(call, ast.Call):
+                    continue
+                msg = self._classify(call)
+                if msg is None:
+                    continue
+                f = sf.finding(self.name, call,
+                               f"{msg} inside hot path "
+                               f"'{fn.name}' — the run boundary is the "
+                               f"only allowed sync point")
+                if f is not None:
+                    findings.append(f)
+        return findings
+
+    # ------------------------------------------------------------------
+    def _hot_functions(self, tree: ast.AST):
+        """Every FunctionDef named in HOT_FUNCTIONS, wherever it nests
+        (class methods and nested closures alike)."""
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and node.name in HOT_FUNCTIONS:
+                yield node
+
+    def _classify(self, call: ast.Call):
+        func = call.func
+        if isinstance(func, ast.Attribute):
+            if func.attr in _SYNC_METHOD_CALLS:
+                return f".{func.attr}() (device->host transfer)"
+            dn = dotted_name(func)
+            if dn in _SYNC_DOTTED:
+                return f"{dn}() (blocking sync / host transfer)"
+            if func.attr in ("block_until_ready", "device_get"):
+                return f".{func.attr}() (blocking sync)"
+        elif isinstance(func, ast.Name) and func.id in _SCALAR_COERCIONS:
+            if call.args and not isinstance(
+                    call.args[0], (ast.Constant, ast.Name)):
+                return (f"{func.id}() scalar coercion of a non-trivial "
+                        f"expression (blocks if the value is on device)")
+        return None

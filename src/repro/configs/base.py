@@ -93,8 +93,9 @@ class ModelConfig:
 
     # ------------------------------------------------------------------
     def __post_init__(self):
-        if self.attention == "none":
-            assert self.ssm is not None, "attention-free arch must be SSM"
+        if self.attention == "none" and self.ssm is None:
+            raise ValueError("attention='none' requires an SSMConfig — "
+                             "an attention-free arch must be SSM")
 
     @property
     def q_dim(self) -> int:

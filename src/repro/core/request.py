@@ -33,7 +33,10 @@ class SLAClass:
     deadline: float = 0.1
 
     def __post_init__(self):
-        assert self.deadline > 0.0, "SLA deadline must be positive"
+        if not self.deadline > 0.0:
+            raise ValueError(
+                f"SLA class {self.name!r} deadline must be positive, "
+                f"got {self.deadline!r}")
 
 
 @dataclass
@@ -74,11 +77,17 @@ class Request:
         return self.sequence[self.idx][1]
 
     def advance(self):
-        assert not self.done
+        if self.done:
+            raise RuntimeError(
+                f"request {self.rid} advanced past its final node "
+                f"(idx={self.idx}, sequence length {len(self.sequence)})")
         self.idx += 1
 
     def latency(self) -> float:
-        assert self.t_finish is not None
+        if self.t_finish is None:
+            raise RuntimeError(
+                f"request {self.rid} has no latency yet — it has not "
+                f"finished (idx={self.idx}/{len(self.sequence)})")
         return self.t_finish - self.arrival
 
     def clone(self) -> "Request":
@@ -130,8 +139,10 @@ class SubBatch:
         if not live:
             return None
         nid = live[0].next_node_id
-        assert all(r.next_node_id == nid for r in live), \
-            "SubBatch invariant violated: members at different nodes"
+        if any(r.next_node_id != nid for r in live):
+            raise RuntimeError(
+                "SubBatch invariant violated: members at different nodes "
+                + str(sorted({str(r.next_node_id) for r in live})))
         return nid
 
     @property
@@ -200,5 +211,9 @@ class SubBatch:
                 is other.live_requests[0].workload)
 
     def merge(self, other: "SubBatch"):
-        assert self.node_id == other.node_id
+        if self.node_id != other.node_id:
+            raise RuntimeError(
+                f"cannot merge sub-batches at different nodes: "
+                f"{self.node_id!r} vs {other.node_id!r} — merge_top must "
+                f"check mergeable_with first")
         self.requests = self.live_requests + other.live_requests

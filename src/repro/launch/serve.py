@@ -29,8 +29,10 @@ Bounded-memory serving: ``--mem-slots 16`` caps the device KV pool at 16
 resident request slots (the sim pays a thrash penalty past the cap; the
 JAX engine's paged arena hard-caps at it) and enables memory-aware
 admission — overflow defers in the InfQ instead of oversubscribing
-device memory. ``--mem-shares "gold:0.5,bulk:0.5"`` splits the pool
-across tenants so neither can starve the other of slots.
+device memory. ``--mem-shares "transformer:0.6,gnmt:0.4"`` splits the
+pool across the ``--models`` tenants (keys are registered MODEL names,
+not SLA tiers) so neither can starve the other of slots; it requires
+both ``--models`` and ``--mem-slots``.
 
 ``--json-out stats.json`` dumps the full ServeStats — summary, per-class
 AND per-model breakdowns, device-time shares — for CI artifacts and
@@ -275,9 +277,11 @@ def main():
                          "jax: paged-arena hard cap) and turn on "
                          "memory-aware admission")
     ap.add_argument("--mem-shares", default=None,
-                    help='per-model memory shares under --mem-slots, e.g. '
-                         '"gold:0.5,bulk:0.5" (fractions of the slot pool; '
-                         'keeps one tenant from starving another)')
+                    help='per-model memory shares under --mem-slots, keyed '
+                         'by registered model name (NOT SLA tier), e.g. '
+                         '"transformer:0.6,gnmt:0.4" (fractions of the slot '
+                         'pool; keeps one tenant from starving another); '
+                         'requires --models and --mem-slots')
     ap.add_argument("--window", type=float, default=0.025)
     ap.add_argument("--bursty", action="store_true",
                     help="MMPP bursty arrivals instead of Poisson")
@@ -293,9 +297,19 @@ def main():
         # jax serves reduced models on CPU wall-clock: seconds, not ms
         args.sla = 60.0 if args.engine == "jax" else 0.1
 
+    if args.mem_shares and not args.models:
+        raise SystemExit("--mem-shares splits the slot pool across the "
+                         "--models mixture; pass --models (it has no "
+                         "effect on a single-model run)")
+    if args.mem_shares and args.mem_slots is None:
+        raise SystemExit("--mem-shares describes fractions of the "
+                         "--mem-slots pool; pass --mem-slots too")
+
     # ---- multi-tenant mixture path -------------------------------------
     if args.models:
-        assert not args.bursty, "--models implies Poisson mixture arrivals"
+        if args.bursty:
+            raise SystemExit("--models implies Poisson mixture arrivals; "
+                             "drop --bursty")
         shares = parse_models(args.models)
         mem_shares = parse_mem_shares(args.mem_shares)
         if args.engine == "jax":

@@ -79,6 +79,33 @@ class MemoryStats:
         return self.max_slots is not None
 
 
+@dataclass
+class SanitizerStats:
+    """Runtime hot-path sanitizer counters (the dynamic half of reprolint).
+
+    The static checkers (``repro.analysis``) prove the *code* contains no
+    stray sync or retrace constructs; these counters prove the *execution*
+    honored the contract: ``host_syncs`` counts run-boundary host
+    synchronization events (one per committed run epilogue — readback of
+    the head tokens plus the arena fence count as ONE logical sync, since
+    they happen at one boundary), ``retraces`` counts actual jit traces
+    (a Python-side effect inside each jitted body runs only while JAX is
+    tracing, so this is exact — warmup compiles show up here, and a
+    steady-state phase must add zero). ``runs`` mirrors the engine's
+    committed-run counter so callers can assert ``syncs_delta <=
+    runs_delta`` over any window. Backends with no device state report
+    all-zero stats (the simulator never syncs or traces anything).
+    """
+    runs: int = 0
+    host_syncs: int = 0          # run-boundary sync events (<= runs)
+    retraces: int = 0            # jit traces = XLA compiles triggered
+    max_syncs_per_run: int = 0   # worst single run (contract: <= 1)
+
+    @property
+    def ok(self) -> bool:
+        return self.max_syncs_per_run <= 1
+
+
 class Backend:
     def prepare(self, model: str, req: Request, rng,
                 prompt_tokens=None) -> None:
@@ -141,6 +168,12 @@ class Backend:
         empty, unbounded pool — backends with no device state (or no
         accounting) never constrain memory-aware admission."""
         return MemoryStats(pool=id(self))
+
+    def sanitizer_stats(self, model: Optional[str] = None) -> SanitizerStats:
+        """Hot-path sanitizer counters (sync/retrace accounting). The
+        default is all-zero: a backend with no device dispatches never
+        syncs or retraces, which trivially satisfies the contract."""
+        return SanitizerStats()
 
 
 class MultiBackend(Backend):
@@ -215,6 +248,26 @@ class MultiBackend(Backend):
             agg.max_slots = sum(caps)
         if agg.slots_total:
             agg.bytes_per_slot = agg.bytes_resident / agg.slots_total
+        return agg
+
+    def sanitizer_stats(self, model=None):
+        """Route to the named model's backend; with no model, sum the
+        counters across DISTINCT inner backends (shared instances counted
+        once) — ``max_syncs_per_run`` takes the worst inner value, so the
+        aggregate ``ok`` property holds iff every engine's does."""
+        if model is not None:
+            return self.backend_for(model).sanitizer_stats(model)
+        seen: Dict[int, SanitizerStats] = {}
+        for be in self.backends.values():
+            if id(be) not in seen:
+                seen[id(be)] = be.sanitizer_stats()
+        agg = SanitizerStats()
+        for st in seen.values():
+            agg.runs += st.runs
+            agg.host_syncs += st.host_syncs
+            agg.retraces += st.retraces
+            agg.max_syncs_per_run = max(agg.max_syncs_per_run,
+                                        st.max_syncs_per_run)
         return agg
 
 

@@ -124,7 +124,11 @@ class EngineState:
     """Mutable per-request execution state."""
 
     def __init__(self, prompt_tokens: np.ndarray):
-        assert len(prompt_tokens) >= 2, "engine needs prompts of >= 2 tokens"
+        if len(prompt_tokens) < 2:
+            raise ValueError(
+                f"engine needs prompts of >= 2 tokens (teacher-forced "
+                f"prefill predicts token i+1 from token i), got "
+                f"{len(prompt_tokens)}")
         self.prompt = jnp.asarray(prompt_tokens, jnp.int32)
         self.prompt_np = np.asarray(prompt_tokens, np.int32)
         self.prefill_len = int(len(prompt_tokens) - 1)
@@ -164,7 +168,9 @@ class JaxEngine(Backend):
                  auto_shrink: Optional[bool] = None,
                  cache_mode: str = "arena", pallas: Optional[bool] = None,
                  fused: Optional[bool] = None):
-        assert cache_mode in ("arena", "legacy"), cache_mode
+        if cache_mode not in ("arena", "legacy"):
+            raise ValueError(f"cache_mode must be 'arena' or 'legacy', "
+                             f"got {cache_mode!r}")
         # arena sizing: explicit n_slots WITHOUT max_slots pins the arena
         # (exhaustion raises — the seed behavior); otherwise the arena is
         # *paged*: it starts at n_slots (or min_slots, default 32), doubles
@@ -177,8 +183,10 @@ class JaxEngine(Backend):
             n_slots = min_slots if min_slots is not None else 32
             if max_slots is not None:        # default start clamps to the cap
                 n_slots = min(n_slots, max_slots)
-        if max_slots is not None:
-            assert max_slots >= n_slots, (max_slots, n_slots)
+        if max_slots is not None and max_slots < n_slots:
+            raise ValueError(
+                f"max_slots ({max_slots}) must be >= the starting arena "
+                f"size n_slots ({n_slots})")
         self.max_slots = max_slots
         self._min_slots = min_slots if min_slots is not None else n_slots
         self._auto_grow = not pinned
@@ -202,6 +210,14 @@ class JaxEngine(Backend):
         self.nodes_executed = 0
         self.runs_executed = 0
         self._jit_cache: Dict[tuple, object] = {}
+        # hot-path sanitizer counters (Backend.sanitizer_stats): retraces
+        # are counted by a Python-side effect at the top of every jitted
+        # body (it only executes while JAX traces — i.e. per XLA compile);
+        # host syncs count run-boundary synchronization EVENTS (the whole
+        # fused-run epilogue is one event)
+        self._san_retraces = 0
+        self._san_host_syncs = 0
+        self._san_max_syncs_per_run = 0
         # batched decode activations keyed by sub-batch membership: while a
         # merged batch advances in lockstep its (B, d) activation tensor is
         # reused across D-nodes / head without per-node stack + unstack;
@@ -331,9 +347,10 @@ class JaxEngine(Backend):
         # padded-row scatters use the _PAD_SLOT sentinel: growth must never
         # bring a real row index into the sentinel's range, or a padding
         # row's dropped scatter would silently alias a live slot
-        assert new < _PAD_SLOT, (
-            f"arena growth to {new} slots would reach the padded-row "
-            f"sentinel (_PAD_SLOT={int(_PAD_SLOT)})")
+        if new >= _PAD_SLOT:
+            raise RuntimeError(
+                f"arena growth to {new} slots would reach the padded-row "
+                f"sentinel (_PAD_SLOT={int(_PAD_SLOT)})")
 
         def grow(l):
             span_len = l.shape[0] // old
@@ -376,7 +393,11 @@ class JaxEngine(Backend):
         is rare and off the decode hot path; the next fused dispatch
         retraces once for the new arena shape, exactly as growth does."""
         old = self.n_slots
-        assert target < old and len(self._slot) <= target, (target, old)
+        if not (target < old and len(self._slot) <= target):
+            raise RuntimeError(
+                f"_shrink_arena precondition violated: target={target} "
+                f"must be < current {old} slots and hold all "
+                f"{len(self._slot)} live slots")
         # host-side relocation plan: live slots >= target move into the
         # lowest free slots < target (enough exist: live <= target)
         moving = sorted(s for s in self._slot.values() if s >= target)
@@ -457,6 +478,24 @@ class JaxEngine(Backend):
             bytes_per_slot=total_bytes / max(1, self.n_slots),
             max_slots=self.max_slots,
             pool=id(self))
+
+    def sanitizer_stats(self, model=None):
+        """Hot-path sanitizer snapshot: committed runs, run-boundary host
+        sync events, and actual jit traces (= XLA compiles). Steady-state
+        fused decode must show ``host_syncs`` growing at most one per run
+        and ``retraces`` not growing at all — the dynamic counterpart of
+        the ``sync-point`` / ``retrace-hazard`` static checkers."""
+        from .backend import SanitizerStats
+        return SanitizerStats(
+            runs=self.runs_executed,
+            host_syncs=self._san_host_syncs,
+            retraces=self._san_retraces,
+            max_syncs_per_run=self._san_max_syncs_per_run)
+
+    def _note_trace(self):
+        """Called from INSIDE jitted bodies: executes only at trace time,
+        so each call is exactly one retrace/compile."""
+        self._san_retraces += 1
 
     def on_finished(self, model, reqs: Sequence[Request]) -> None:
         self._release_slots(reqs)
@@ -550,6 +589,7 @@ class JaxEngine(Backend):
             kind, window = self._kind_window(i)
 
             def fn(bp, x):
+                self._note_trace()
                 positions = jnp.arange(x.shape[1])[None, :]
                 x, cache = self.model.apply_block_dense(
                     bp, x, kind, return_cache=True, window=window,
@@ -570,6 +610,7 @@ class JaxEngine(Backend):
             kind, window, _, _ = self._spans[si]
 
             def fn(bp, arena, x, row):
+                self._note_trace()
                 positions = jnp.arange(x.shape[1])[None, :]
                 x, cache = self.model.apply_block_dense(
                     bp, x, kind, return_cache=True, window=window,
@@ -599,6 +640,7 @@ class JaxEngine(Backend):
             kind, window = self._kind_window(i)
 
             def fn(bp, x, cache, pos):
+                self._note_trace()
                 return self.model.apply_block_decode(
                     bp, x, cache, pos, kind, window=window)
 
@@ -615,6 +657,7 @@ class JaxEngine(Backend):
             kind, window, _, _ = self._spans[si]
 
             def fn(bp, arena, x, pos, slots, off):
+                self._note_trace()
                 return self.model.apply_block_decode(
                     bp, x, arena, pos, kind, window=window,
                     slots=slots + off)
@@ -625,6 +668,7 @@ class JaxEngine(Backend):
     def _fn_head(self):
         if "head" not in self._jit_cache:
             def fn(params, x):
+                self._note_trace()
                 h = L.rms_norm(x, params["final_norm"], self.cfg.norm_eps)
                 logits = self.model.unembed(params, h)
                 return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -664,6 +708,7 @@ class JaxEngine(Backend):
         if key not in self._jit_cache:
 
             def fn(params, span_params, arenas, entry, pos, slots, offs):
+                self._note_trace()
                 x = (self.model.embed(params, entry) if lo == 0 else entry)
                 new_arenas = list(arenas)
                 if lo >= 0:
@@ -698,6 +743,7 @@ class JaxEngine(Backend):
         if key not in self._jit_cache:
 
             def fn(params, span_params, arenas, entry, slots, offs):
+                self._note_trace()
                 x = self.model.embed(params, entry) if embed else entry
                 positions = jnp.arange(x.shape[1])[None, :]
 
@@ -831,7 +877,11 @@ class JaxEngine(Backend):
         """Execute a committed run; returns ``(latency, None)`` — per-node
         latency is unobservable inside fused dispatches, by design."""
         if self.cache_mode != "arena" or not self.fused or len(node_ids) == 1:
-            return super().execute_run(model, sb, node_ids)
+            s0 = self._san_host_syncs
+            out = super().execute_run(model, sb, node_ids)
+            self._san_max_syncs_per_run = max(
+                self._san_max_syncs_per_run, self._san_host_syncs - s0)
+            return out
         t0 = time.perf_counter()
         reqs = sb.live_requests
         wl = reqs[0].workload
@@ -900,9 +950,10 @@ class JaxEngine(Backend):
                 x_dev = out
         # ---- run boundary: the ONLY sync point -----------------------
         if head_toks:
+            # reprolint: disable=sync-point
             for arr in [np.asarray(t) for t in head_toks]:
                 for bi, st in enumerate(sts):
-                    st.next_token = int(arr[bi])
+                    st.next_token = int(arr[bi])  # reprolint: disable=sync-point
                     st.generated.append(st.next_token)
                     st.pos += 1
         if n_heads and pos0 is not None:
@@ -912,7 +963,11 @@ class JaxEngine(Backend):
             self._xbatch = (rids, x_dev[:B])      # run ended mid-cycle
         else:
             self._xbatch = None
-        jax.block_until_ready(self.arenas)
+        jax.block_until_ready(self.arenas)  # reprolint: disable=sync-point
+        # the whole epilogue (token readback + arena fence at ONE run
+        # boundary) is a single logical sync event — the PR 2 contract
+        self._san_host_syncs += 1
+        self._san_max_syncs_per_run = max(self._san_max_syncs_per_run, 1)
         self.nodes_executed += len(node_ids)
         self.runs_executed += 1
         n = len(node_ids)
@@ -1014,6 +1069,9 @@ class JaxEngine(Backend):
         else:
             raise KeyError(f"unknown node {node_id!r}")
         self.nodes_executed += 1
+        # per-node dispatch fences every node — one sync event per NODE,
+        # which is exactly why fused runs beat it (their whole run is one)
+        self._san_host_syncs += 1
         for o in outs:
             jax.block_until_ready(o)
         # free arena slots of requests that just executed their final node
@@ -1037,7 +1095,10 @@ class JaxEngine(Backend):
             if leaf.ndim >= 2 and leaf.shape[0] == 1:
                 leaf = leaf[0]                    # drop the batch=1 dim
             pad_n = self.max_len - leaf.shape[0]
-            assert pad_n >= 0, (leaf.shape, self.max_len)
+            if pad_n < 0:
+                raise ValueError(
+                    f"cache leaf time-dim {leaf.shape} exceeds engine "
+                    f"max_len {self.max_len}")
             return jnp.pad(leaf, [(0, pad_n)] + [(0, 0)] * (leaf.ndim - 1))
 
         padded = jax.tree_util.tree_map_with_path(pad, cache)

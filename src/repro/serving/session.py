@@ -196,7 +196,10 @@ class ServingSession:
                  reject_infeasible: bool = False,
                  memory_aware: bool = True,
                  log: Optional[ServerLog] = None):
-        assert backend is not None, "ServingSession requires a backend"
+        if backend is None:
+            raise ValueError(
+                "ServingSession requires a backend — pass SimExecutor(...) "
+                "or a JaxEngine-backed MultiBackend")
         self.registry = ModelRegistry()
         self.backend = backend
         self.arbiter = arbiter if arbiter is not None else LeastSlackArbiter()
@@ -295,7 +298,9 @@ class ServingSession:
         submit-time workload check) > the request's own ``model`` tag.
         Ambiguous (multi-model, untagged) submissions raise."""
         entries = self.registry.entries()
-        assert entries, "no model registered — call session.register() first"
+        if not entries:
+            raise RuntimeError(
+                "no model registered — call session.register() first")
         if model is not None:
             return self.registry[model]
         if len(entries) == 1:
@@ -310,9 +315,10 @@ class ServingSession:
     def policy(self) -> Policy:
         """The sole registered model's policy (single-model compat)."""
         entries = self.registry.entries()
-        assert len(entries) == 1, (
-            "session.policy is single-model only — use "
-            "session.registry[name].policy")
+        if len(entries) != 1:
+            raise RuntimeError(
+                "session.policy is single-model only — use "
+                "session.registry[name].policy")
         return entries[0].policy
 
     # ------------------------------------------------------------------
@@ -335,7 +341,9 @@ class ServingSession:
         instant, not a stale timestamp). ``on_token(handle, token)`` fires
         once per response token at the producing run's boundary.
         """
-        assert req.rid not in self.handles, f"rid {req.rid} already submitted"
+        if req.rid in self.handles:
+            raise ValueError(f"rid {req.rid} already submitted — clone the "
+                             f"request to resubmit the same trace entry")
         entry = self._resolve_model(model, req)
         # workloads are compared by name, not identity: PAPER_WORKLOADS /
         # get_workload return a fresh instance per call, and same-name
@@ -360,10 +368,12 @@ class ServingSession:
         self.handles[req.rid] = handle
         deadline = req.sla.deadline if req.sla else None
         prev = self._classes.setdefault(req.sla_name, deadline)
-        assert prev == deadline, (
-            f"SLA class {req.sla_name!r} submitted with deadline {deadline} "
-            f"but previously seen with {prev} — per-class reporting needs "
-            f"one deadline per class name")
+        if prev != deadline:
+            del self.handles[req.rid]
+            raise ValueError(
+                f"SLA class {req.sla_name!r} submitted with deadline "
+                f"{deadline} but previously seen with {prev} — per-class "
+                f"reporting needs one deadline per class name")
         if self.reject_infeasible and self._infeasible(entry, req):
             handle._rejected = True
             self._rejected[req.rid] = req

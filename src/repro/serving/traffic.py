@@ -76,10 +76,13 @@ def poisson_mixture(models: Sequence[Tuple[str, Workload, float]],
     (determinism across experiment grids). Ties in arrival time keep the
     mixture's listing order (stable sort)."""
     names = [name for name, _, _ in models]
-    assert len(set(names)) == len(names), f"duplicate model names: {names}"
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate model names in mixture: {names}")
     reqs: List[Request] = []
     for name, wl, rate in models:
-        assert rate > 0, f"model {name!r} has non-positive rate {rate}"
+        if rate <= 0:
+            raise ValueError(
+                f"model {name!r} has non-positive rate {rate}")
         rng = np.random.default_rng([seed, _stream_key(name)])
         t = 0.0
         while True:

@@ -63,7 +63,7 @@ def test_subbatch_invariant_detects_divergence():
     r1, r2 = mk_req("AB"), mk_req("AB")
     sb = SubBatch([r1, r2])
     r1.advance()
-    with pytest.raises(AssertionError):
+    with pytest.raises(RuntimeError, match="different nodes"):
         _ = sb.node_id
 
 

@@ -138,7 +138,7 @@ def test_grow_is_guarded_against_pad_slot_sentinel():
     cfg = _tiny()
     engine = JaxEngine(cfg, max_len=32)
     engine.n_slots = int(_PAD_SLOT) // 2 + 1     # next double would alias
-    with pytest.raises(AssertionError, match="sentinel"):
+    with pytest.raises(RuntimeError, match="sentinel"):
         engine._grow_arena()
 
 

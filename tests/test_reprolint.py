@@ -1,0 +1,327 @@
+"""reprolint checker suite: each checker catches a seeded violation of
+its invariant class and stays quiet on the clean twin, suppressions and
+baselines behave, and the repo-wide run matches the committed baseline
+EXACTLY (0 new findings, 0 stale entries) — so the suite fails loudly
+the moment someone reintroduces a burned-down bug class OR fixes debt
+without updating the baseline.
+
+Fixture files are written under ``tmp_path/repro/...`` because path
+scoping (hot-path checker only in ``serving/engine.py``, determinism
+only in virtual-time modules) keys on the repo-relative suffix after
+the last ``repro/`` marker — exactly how fingerprints stay stable
+across checkouts.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.base import Finding, rel_path
+from repro.analysis.lint import ALL_CHECKERS, run_lint
+from repro.analysis import load_baseline
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _write(tmp_path: Path, rel: str, text: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return p
+
+
+def _lint(tmp_path, rel, text, checker=None):
+    p = _write(tmp_path, rel, text)
+    checkers = [c for c in ALL_CHECKERS if checker is None
+                or c.name == checker]
+    return run_lint([p], checkers=checkers)
+
+
+def _names(res):
+    return sorted(f.checker for f in res.new)
+
+
+# ---------------------------------------------------------------------------
+# sync-point
+# ---------------------------------------------------------------------------
+
+SYNC_VIOLATION = """
+import numpy as np
+
+class JaxEngine:
+    def execute_run(self, model, sb, node_ids):
+        for nid in node_ids:
+            toks = self._dispatch(nid)
+            val = toks.item()            # hidden per-node sync!
+        return 0.0, None
+"""
+
+SYNC_CLEAN = """
+import numpy as np
+
+class JaxEngine:
+    def execute_run(self, model, sb, node_ids):
+        out = self._dispatch(node_ids)
+        arr = np.asarray(out)  # reprolint: disable=sync-point
+        return 0.0, None
+
+    def debug_dump(self):
+        # not a hot function: syncing here is fine
+        return [np.asarray(a) for a in self.arenas]
+"""
+
+
+def test_sync_point_catches_hidden_sync_in_hot_path(tmp_path):
+    res = _lint(tmp_path, "repro/serving/engine.py", SYNC_VIOLATION,
+                checker="sync-point")
+    assert _names(res) == ["sync-point"]
+    assert "execute_run" in res.new[0].message
+
+
+def test_sync_point_respects_suppression_and_cold_functions(tmp_path):
+    res = _lint(tmp_path, "repro/serving/engine.py", SYNC_CLEAN,
+                checker="sync-point")
+    assert res.new == []
+
+
+def test_sync_point_scoped_to_engine_module(tmp_path):
+    # the same construct in a non-engine file is out of scope
+    res = _lint(tmp_path, "repro/serving/metrics.py", SYNC_VIOLATION,
+                checker="sync-point")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# retrace-hazard
+# ---------------------------------------------------------------------------
+
+RETRACE_VIOLATION = """
+class JaxEngine:
+    def execute_run(self, model, sb, node_ids):
+        sts = [self.states[r.rid] for r in sb.live_requests]
+        # unbucketed batch size in the jit-cache key: one compile per B
+        fn = self._fn_mega(0, len(sts), True, sts[0].pos)
+        return fn(self.params)
+"""
+
+RETRACE_CLEAN = """
+class JaxEngine:
+    def execute_run(self, model, sb, node_ids):
+        sts = [self.states[r.rid] for r in sb.live_requests]
+        fn = self._fn_mega(0, _pow2(len(sts)), True,
+                           _pow2(sts[0].pos))
+        return fn(self.params)
+"""
+
+JIT_OUTSIDE_GETTER = """
+import jax
+
+class JaxEngine:
+    def execute_run(self, model, sb, node_ids):
+        fn = jax.jit(lambda x: x + 1)    # uncached jit: retrace per call
+        return fn(1.0)
+"""
+
+
+def test_retrace_catches_unbucketed_dynamic_scalars(tmp_path):
+    res = _lint(tmp_path, "repro/serving/engine.py", RETRACE_VIOLATION,
+                checker="retrace-hazard")
+    assert len(res.new) >= 1
+    assert all(f.checker == "retrace-hazard" for f in res.new)
+
+
+def test_retrace_accepts_pow2_bucketed_args(tmp_path):
+    res = _lint(tmp_path, "repro/serving/engine.py", RETRACE_CLEAN,
+                checker="retrace-hazard")
+    assert res.new == []
+
+
+def test_retrace_flags_jit_outside_cached_getter(tmp_path):
+    res = _lint(tmp_path, "repro/serving/engine.py", JIT_OUTSIDE_GETTER,
+                checker="retrace-hazard")
+    assert _names(res) == ["retrace-hazard"]
+
+
+# ---------------------------------------------------------------------------
+# bare-assert
+# ---------------------------------------------------------------------------
+
+def test_bare_assert_flags_runtime_invariant(tmp_path):
+    res = _lint(tmp_path, "repro/serving/foo.py",
+                "def f(x):\n    assert x > 0, 'bad'\n    return x\n",
+                checker="bare-assert")
+    assert _names(res) == ["bare-assert"]
+    assert "python -O" in res.new[0].message
+
+
+def test_bare_assert_suppression_on_preceding_line(tmp_path):
+    res = _lint(tmp_path, "repro/serving/foo.py",
+                "def f(x):\n"
+                "    # reprolint: disable=bare-assert\n"
+                "    assert x > 0\n",
+                checker="bare-assert")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+DET_VIOLATIONS = """
+import time
+import random
+import numpy as np
+
+def schedule(queue):
+    t = time.time()                      # wall clock in sim path
+    rng = np.random.default_rng()        # unseeded
+    jitter = random.random()             # global stdlib RNG
+    pick = np.random.rand()              # numpy GLOBAL RNG
+    best = min({q.name for q in queue}, key=lambda n: len(n))
+    return t, rng, jitter, pick, best
+"""
+
+DET_CLEAN = """
+import numpy as np
+
+def schedule(queue, now, seed):
+    rng = np.random.default_rng(seed)            # seeded: fine
+    names = sorted({q.name for q in queue})      # key-less: total order
+    return now + rng.exponential(1.0), names
+"""
+
+
+def test_determinism_catches_all_violation_kinds(tmp_path):
+    res = _lint(tmp_path, "repro/core/sched.py", DET_VIOLATIONS,
+                checker="determinism")
+    assert len(res.new) == 5
+    msgs = " ".join(f.message for f in res.new)
+    assert "wall-clock" in msgs
+    assert "without a seed" in msgs
+    assert "stdlib" in msgs
+    assert "GLOBAL" in msgs
+    assert "set iteration" in msgs
+
+
+def test_determinism_clean_patterns_pass(tmp_path):
+    res = _lint(tmp_path, "repro/core/sched.py", DET_CLEAN,
+                checker="determinism")
+    assert res.new == []
+
+
+def test_determinism_scoped_to_virtual_time_modules(tmp_path):
+    # launch/train.py is NOT a virtual-time module: wall clock is fine
+    res = _lint(tmp_path, "repro/launch/train.py", DET_VIOLATIONS,
+                checker="determinism")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# backend-contract
+# ---------------------------------------------------------------------------
+
+CONTRACT_VIOLATION = """
+from repro.serving.backend import Backend
+
+class DriftingBackend(Backend):
+    def execute(self, sb, node_id):      # lost the model key!
+        return 0.0
+
+    def memory_stats(self, which=None):  # renamed the model key!
+        return None
+"""
+
+CONTRACT_CLEAN = """
+from repro.serving.backend import Backend
+
+class GoodBackend(Backend):
+    def execute(self, model, sb, node_id):
+        return 0.0
+
+    def helper(self, x):                 # non-contract method: free-form
+        return x
+"""
+
+EXECUTOR_USE = """
+from repro.serving.server import Executor
+
+def build():
+    return Executor()
+"""
+
+
+def test_contract_catches_signature_drift(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", CONTRACT_VIOLATION,
+                checker="backend-contract")
+    assert len(res.new) == 2
+    assert all("model-keyed" in f.message for f in res.new)
+
+
+def test_contract_accepts_conforming_subclass(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", CONTRACT_CLEAN,
+                checker="backend-contract")
+    assert res.new == []
+
+
+def test_contract_flags_retired_executor_alias(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", EXECUTOR_USE,
+                checker="backend-contract")
+    assert len(res.new) >= 1
+    assert all("Executor" in f.message for f in res.new)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints and baselines
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_survives_unrelated_edits(tmp_path):
+    before = "def f(x):\n    assert x > 0\n"
+    after = "import os\n\n\ndef g():\n    pass\n\n\ndef f(x):\n    assert x > 0\n"
+    f1 = _lint(tmp_path / "a", "repro/serving/foo.py", before,
+               checker="bare-assert").new[0]
+    f2 = _lint(tmp_path / "b", "repro/serving/foo.py", after,
+               checker="bare-assert").new[0]
+    assert f1.line != f2.line            # the site moved...
+    assert f1.fingerprint == f2.fingerprint  # ...the identity did not
+
+
+def test_baseline_splits_new_known_and_stale(tmp_path):
+    two = "def f(x):\n    assert x > 0\n    assert x < 9\n"
+    res = _lint(tmp_path, "repro/serving/foo.py", two,
+                checker="bare-assert")
+    baseline = [{"fingerprint": res.new[0].fingerprint,
+                 "checker": "bare-assert", "path": res.new[0].path},
+                {"fingerprint": "feedfacedeadbeef",
+                 "checker": "bare-assert", "path": "repro/gone.py"}]
+    p = tmp_path / "repro/serving/foo.py"
+    res2 = run_lint([p], checkers=[c for c in ALL_CHECKERS
+                                   if c.name == "bare-assert"],
+                    baseline=baseline)
+    assert len(res2.new) == 1            # the un-baselined assert
+    assert len(res2.baselined) == 1      # the pinned one
+    assert len(res2.stale) == 1          # the paid-down debt
+    assert not res2.ok
+
+
+# ---------------------------------------------------------------------------
+# the repo itself
+# ---------------------------------------------------------------------------
+
+def test_repo_matches_committed_baseline_exactly():
+    """The gate CI runs: linting ``src/`` against the committed baseline
+    yields zero NEW findings and zero STALE entries. If this fails you
+    either introduced a violation (fix it) or fixed known debt
+    (regenerate the baseline with --write-baseline and commit the
+    shrunken file)."""
+    baseline = load_baseline(REPO / "reprolint.baseline.json")
+    res = run_lint([REPO / "src"], baseline=baseline)
+    assert res.new == [], "\n".join(str(f) for f in res.new)
+    assert res.stale == [], f"stale baseline entries: {res.stale}"
+    # the baseline is debt, bounded and shrinking — never growing
+    assert len(res.baselined) <= 5
+
+
+def test_rel_path_normalizes_across_checkouts():
+    assert rel_path("/home/x/repo/src/repro/serving/engine.py") \
+        == "repro/serving/engine.py"
+    assert rel_path("/tmp/pytest-1/repro/serving/engine.py") \
+        == "repro/serving/engine.py"

@@ -1,0 +1,127 @@
+"""Runtime hot-path sanitizer: the dynamic half of reprolint.
+
+The static checkers prove the engine *source* contains no stray sync or
+retrace constructs; these tests prove the *execution* honors the PR 2
+contract — after warmup, N fused decode cycles cost at most one host
+sync per committed run and ZERO retraces (the jit cache is keyed only
+by pow2-bucketed statics, so steady-state shapes never recompile).
+Retraces are counted exactly: a Python-side counter increment inside
+each jitted body runs only while JAX traces.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.request import SubBatch
+from repro.serving.backend import Backend, MultiBackend, SanitizerStats
+from repro.serving.engine import JaxEngine
+from repro.serving.workload import LengthDist, from_model_config
+
+
+def _tiny():
+    cfg = get_config("llama3.2-1b").reduced()
+    return dataclasses.replace(cfg, d_model=64, d_ff=128, vocab_size=128,
+                               num_prefix_embeddings=0)
+
+
+def _workload(cfg):
+    return from_model_config(cfg,
+                             prompt_dist=LengthDist((6,), (1.0,)),
+                             decode_dist=LengthDist((3,), (1.0,)))
+
+
+def _mk_req(wl, rng, prompt_len=6, decode_len=3):
+    r = wl.sample_request(rng, 0.0)
+    seq, prefix_len, cycle_len = wl.build_sequence(prompt_len, decode_len)
+    r.sequence, r.prefix_len, r.cycle_len = seq, prefix_len, cycle_len
+    r.prompt_len, r.decode_len = prompt_len, decode_len
+    return r
+
+
+def _finish(engine, req):
+    sb = SubBatch([req])
+    while sb.size:
+        run = sb.run_nodes(stop_after={"head"})
+        engine.execute_run("m", sb, run)
+        sb.advance_n(len(run), 0.0)
+
+
+def test_steady_state_fused_decode_is_one_sync_zero_retrace():
+    """The headline contract: warm the jit cache with one request, then
+    serve an identically-shaped one — every committed run costs <= 1
+    host sync and the steady-state window adds ZERO retraces."""
+    cfg = _tiny()
+    engine = JaxEngine(cfg, max_len=64)
+    wl = _workload(cfg)
+    rng = np.random.default_rng(0)
+
+    warm = _mk_req(wl, rng)
+    engine.prepare("m", warm, rng)
+    _finish(engine, warm)
+    s0 = engine.sanitizer_stats()
+    assert s0.retraces > 0               # warmup compiles show up
+    assert s0.runs > 0
+
+    req = _mk_req(wl, rng)
+    engine.prepare("m", req, rng)
+    _finish(engine, req)
+    s1 = engine.sanitizer_stats()
+
+    d_runs = s1.runs - s0.runs
+    assert d_runs > 0
+    assert s1.retraces - s0.retraces == 0, \
+        "steady-state decode recompiled — a jit-cache key leaked a " \
+        "dynamic scalar"
+    assert s1.host_syncs - s0.host_syncs <= d_runs, \
+        "more host syncs than committed runs — a hidden sync crept " \
+        "into the hot path"
+    assert s1.max_syncs_per_run <= 1
+    assert s1.ok
+
+
+def test_sanitizer_counts_runs_and_syncs_monotonically():
+    cfg = _tiny()
+    engine = JaxEngine(cfg, max_len=64)
+    wl = _workload(cfg)
+    rng = np.random.default_rng(1)
+    assert engine.sanitizer_stats() == SanitizerStats()
+
+    req = _mk_req(wl, rng)
+    engine.prepare("m", req, rng)
+    _finish(engine, req)
+    s = engine.sanitizer_stats()
+    assert s.runs == engine.runs_executed
+    assert 0 < s.host_syncs <= s.runs
+
+
+def test_default_backend_reports_zero_stats():
+    s = Backend().sanitizer_stats()
+    assert s == SanitizerStats()
+    assert s.ok                          # trivially satisfied
+
+
+def test_multibackend_aggregates_and_routes():
+    cfg = _tiny()
+    wl = _workload(cfg)
+    rng = np.random.default_rng(2)
+    a, b = JaxEngine(cfg, max_len=64), JaxEngine(cfg, max_len=64)
+    mux = MultiBackend({"a": a, "b": b})
+
+    req = _mk_req(wl, rng)
+    a.prepare("a", req, rng)
+    _finish(a, req)
+
+    # routed query hits the named engine; the other is untouched
+    assert mux.sanitizer_stats("a") == a.sanitizer_stats()
+    assert mux.sanitizer_stats("b") == SanitizerStats()
+
+    agg = mux.sanitizer_stats()
+    assert agg.runs == a.sanitizer_stats().runs
+    assert agg.retraces == a.sanitizer_stats().retraces
+    assert agg.max_syncs_per_run == a.sanitizer_stats().max_syncs_per_run
+
+    # shared instance registered under two names is counted once
+    shared = MultiBackend({"x": a, "y": a})
+    assert shared.sanitizer_stats().runs == a.sanitizer_stats().runs
