@@ -1,0 +1,106 @@
+"""Fig. 17 (beyond the paper): fault-tolerant serving under chaos.
+
+Seeded two-tier overload — a protected *gold* tier with a tight SLA and
+a best-effort *bulk* tier at 2-3x device capacity — with injected
+transient backend faults and latency-spike stragglers. Two lazyb
+variants serve the identical trace through the identical seeded
+`FaultInjectingBackend`:
+
+  * ``baseline`` — retry/backoff only (the pre-robustness stack: every
+    admitted request is served to completion no matter how late),
+  * ``robust``   — retry/backoff **plus** mid-flight deadline
+    cancellation, a bounded ingress queue, and brownout shedding of the
+    bulk tier (``shed_priority`` 0 < gold's 1).
+
+The claim this records: on BOTH seeds the robust stack holds gold-tier
+SLA attainment strictly above the baseline, and neither variant leaks a
+KV slot (``memory_stats()`` residency returns to zero after drain).
+"""
+import numpy as np
+
+from repro.core.policies import LazyBatching
+from repro.core.request import SLAClass
+from repro.core.slack import SlackPredictor
+from repro.serving import (BrownoutConfig, FaultInjectingBackend, FaultSpec,
+                           RetryPolicy, ServingSession)
+from repro.serving.npu_model import NPUPerfModel
+from repro.serving.server import SimExecutor
+from repro.serving.traffic import poisson_trace
+from repro.serving.workload import get_workload
+
+GOLD_SLA = 0.035                 # tight tier; alone it fits in capacity
+BULK_SLA = 0.5                   # best-effort tier; provides the overload
+GOLD_SHARE = 0.1                 # fraction of the offered load
+SPEC = FaultSpec(p_transient=0.01, p_straggler=0.03, straggler_factor=4.0,
+                 fault_latency=0.002)
+
+
+def _serve(seed: int, rate: float, duration: float, robust: bool):
+    wl = get_workload("transformer")
+    perf = NPUPerfModel()
+    backend = FaultInjectingBackend(SimExecutor(perf), SPEC, seed=seed)
+    kwargs = dict(retry=RetryPolicy(max_retries=5))
+    if robust:
+        kwargs.update(cancel_expired=True, max_queue=96,
+                      brownout=BrownoutConfig(floor=0.9, window=32,
+                                              min_samples=8))
+    session = ServingSession(backend=backend, seed=seed, **kwargs)
+
+    def lazyb(sla):
+        return LazyBatching(SlackPredictor.build([wl], perf, sla),
+                            max_batch=64)
+
+    session.register("gold", wl, policy=lazyb(GOLD_SLA), shed_priority=1)
+    session.register("bulk", wl, policy=lazyb(BULK_SLA), shed_priority=0)
+    # same workload both tiers; only deadline + priority differ (the
+    # arrivals heap orders submissions, so per-tier traces interleave)
+    for tier, share, sla, off in (("gold", GOLD_SHARE, GOLD_SLA, 0),
+                                  ("bulk", 1 - GOLD_SHARE, BULK_SLA, 1000)):
+        trace = poisson_trace(wl, rate * share, duration, seed=seed + off)
+        for r in trace.requests:
+            r.sla = SLAClass(tier, sla)
+            session.submit(r, model=tier)
+    session.duration = duration
+    stats = session.drain()
+    pc = stats.per_class()
+    return {
+        "gold_attainment": pc["gold"]["sla_attainment"],
+        "bulk_attainment": pc["bulk"]["sla_attainment"],
+        "completed": len(stats.finished),
+        "expired": len(stats.expired_requests),
+        "shed": len(stats.shed_requests),
+        "failed": len(stats.failed_requests),
+        "retried": stats.retried,
+        "faults": session.log.faults,
+        "leaked_slots": backend.memory_stats().slots_live,
+    }
+
+
+def run(quick: bool = True) -> dict:
+    rate = 8000.0                          # ~3x device capacity
+    duration = 0.25 if quick else 1.0
+    out, holds = {}, True
+    for seed in (0, 1):
+        base = _serve(seed, rate, duration, robust=False)
+        rob = _serve(seed, rate, duration, robust=True)
+        improves = rob["gold_attainment"] > base["gold_attainment"]
+        no_leak = base["leaked_slots"] == 0 and rob["leaked_slots"] == 0
+        holds = holds and improves and no_leak
+        out[f"seed{seed}"] = {"baseline": base, "robust": rob,
+                              "gold_improves": improves,
+                              "no_leak": no_leak}
+        print(f"  seed {seed}: gold attainment "
+              f"{base['gold_attainment'] * 100:5.1f}% -> "
+              f"{rob['gold_attainment'] * 100:5.1f}%  "
+              f"(faults {rob['faults']}, retried {rob['retried']}, "
+              f"expired {rob['expired']}, shed {rob['shed']}, "
+              f"leaked {base['leaked_slots']}+{rob['leaked_slots']})")
+    out["holds_on_both_seeds"] = holds
+    verdict = "HOLDS" if holds else "VIOLATED"
+    print(f"  robust gold-tier attainment strictly above baseline with "
+          f"zero leaks on both seeds: {verdict}")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

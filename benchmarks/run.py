@@ -8,8 +8,8 @@ import time
 
 from . import (bursty_traffic, colocation, dec_timesteps, fig3_batch_curve,
                fig5_time_window, fig12_latency, fig13_throughput, fig14_cdf,
-               fig15_sla, fig16_robustness, max_batch_sensitivity,
-               roofline_report, table2_latency)
+               fig15_sla, fig16_robustness, fig17_chaos,
+               max_batch_sensitivity, roofline_report, table2_latency)
 
 SUITES = {
     "table2": table2_latency,
@@ -20,6 +20,7 @@ SUITES = {
     "fig14": fig14_cdf,
     "fig15": fig15_sla,
     "fig16": fig16_robustness,
+    "fig17": fig17_chaos,
     "dec_timesteps": dec_timesteps,
     "max_batch": max_batch_sensitivity,
     "colocation": colocation,

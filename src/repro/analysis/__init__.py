@@ -6,7 +6,7 @@ unseeded RNG in virtual-time paths, bounded retraces via pow2 bucketing,
 no ``assert``-guarded runtime invariants (they vanish under ``python
 -O``), and the model-keyed Backend contract. This package makes them
 *enforced*: an AST lint pass (``python -m repro.analysis.lint src/``)
-with five repo-specific checkers, reported against a committed baseline
+with six repo-specific checkers, reported against a committed baseline
 (new findings fail CI; legacy ones are burned down), plus cheap runtime
 sanitizer counters in the JAX engine (``Backend.sanitizer_stats()``)
 that let a test assert "N decode cycles => <= 1 sync per run and 0
@@ -24,7 +24,10 @@ Checkers (see each module's docstring for the precise rules):
     tiebreaks in virtual-time modules (``determinism``),
   * ``backend-contract`` — Backend subclasses drifting off the
     model-keyed signatures, or internal use of the retired ``Executor``
-    alias (``contracts``).
+    alias (``contracts``),
+  * ``swallowed-exception`` — bare/trivial handlers that eat backend
+    faults, and serving ``try`` bodies that can strand an acquired KV
+    slot without a finally/handler release (``exceptions``).
 
 Suppress a legitimate finding with a trailing (or preceding-line)
 comment: ``# reprolint: disable=<checker>[,<checker>]``.

@@ -1,0 +1,133 @@
+"""swallowed-exception: error paths must not eat faults or leak slots.
+
+The failure model (serving.session + serving.faults) turns backend
+faults into *accounted* outcomes — retries, terminal FAILED states,
+released KV slots. That only works if no layer underneath silently
+swallows the exception first, and if no acquire-then-raise window can
+strand a slot. Two rule families:
+
+**A — swallowed exceptions (repo-wide).** A bare ``except:`` (catches
+``KeyboardInterrupt``/``SystemExit`` too) whose handler does not
+re-raise, and any ``except Exception/BaseException`` handler whose
+entire body is ``pass``/``...`` — the canonical fault black hole: a
+``BackendError`` raised under it simply vanishes, the session never
+sees the fault, and the dispatched run's requests hang forever.
+
+**B — slot-leaking try bodies (serving modules).** A ``try`` whose body
+can ACQUIRE per-request device residency (``slot_of`` / ``_touch`` /
+``_grow_arena`` / ``prepare``) but has no ``finally`` and whose
+handlers neither re-raise nor call a RELEASE hook (``release_slot`` /
+``_release_slots`` / ``release_request`` / ``reset_request`` /
+``on_finished``): if the body raises after the acquire, the slot never
+returns to the free pool — exactly the leak class the
+``memory_stats()``-based zero-leak gates exist to catch at runtime;
+this checker catches it at review time.
+
+Legitimate record-don't-crash handlers (launch-time probes) carry a
+reviewed ``# reprolint: disable=swallowed-exception`` suppression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List
+
+from .base import Checker, Finding, SourceFile, dotted_name, walk_calls
+
+#: calls that take per-request device residency (a KV slot) ...
+ACQUIRE_CALLS = frozenset({"slot_of", "_touch", "_grow_arena", "prepare"})
+#: ... and the hooks that give it back (any one on the handler path
+#: makes the try fault-safe; so does re-raising to a fault-aware caller)
+RELEASE_CALLS = frozenset({"release_slot", "_release_slots",
+                           "release_request", "reset_request",
+                           "on_finished"})
+
+
+def _is_serving_file(rel: str) -> bool:
+    return "repro/serving/" in rel
+
+
+def _handler_reraises(handler: ast.ExceptHandler) -> bool:
+    return any(isinstance(n, ast.Raise) for n in ast.walk(handler))
+
+
+def _trivial_body(body: List[ast.stmt]) -> bool:
+    """True when the handler body does nothing: only ``pass`` and/or
+    bare ``...`` expressions."""
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis):
+            continue
+        return False
+    return True
+
+
+def _call_names(nodes: Iterable[ast.stmt]) -> set:
+    names = set()
+    for stmt in nodes:
+        for call in walk_calls(stmt):
+            dn = dotted_name(call.func)
+            if dn:
+                names.add(dn.rsplit(".", 1)[-1])
+    return names
+
+
+class SwallowedExceptionChecker(Checker):
+    name = "swallowed-exception"
+    description = ("bare/trivial exception handlers that eat backend "
+                   "faults, and serving try bodies that can strand an "
+                   "acquired KV slot without a finally/handler release")
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        serving = _is_serving_file(sf.rel)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Try):
+                continue
+            findings.extend(self._check_handlers(sf, node))
+            if serving:
+                findings.extend(self._check_slot_leak(sf, node))
+        return [f for f in findings if f is not None]
+
+    # -- rule A ---------------------------------------------------------
+    def _check_handlers(self, sf: SourceFile, node: ast.Try):
+        for handler in node.handlers:
+            if handler.type is None:
+                if not _handler_reraises(handler):
+                    yield sf.finding(
+                        self.name, handler,
+                        "bare 'except:' swallows every exception "
+                        "(KeyboardInterrupt and backend faults alike) — "
+                        "catch the specific error, or re-raise")
+                continue
+            broad = dotted_name(handler.type) in ("Exception",
+                                                  "BaseException")
+            if broad and _trivial_body(handler.body):
+                yield sf.finding(
+                    self.name, handler,
+                    "'except Exception: pass' is a fault black hole — a "
+                    "BackendError dying here leaves its requests hanging "
+                    "forever; handle it, record it, or let it propagate")
+
+    # -- rule B ---------------------------------------------------------
+    def _check_slot_leak(self, sf: SourceFile, node: ast.Try):
+        if node.finalbody:
+            return                       # finally runs on every path
+        if not node.handlers:
+            return                       # try/finally already handled
+        acquired = _call_names(node.body) & ACQUIRE_CALLS
+        if not acquired:
+            return
+        for handler in node.handlers:
+            if _handler_reraises(handler):
+                continue
+            if _call_names(handler.body) & RELEASE_CALLS:
+                continue
+            yield sf.finding(
+                self.name, handler,
+                f"try body acquires per-request residency "
+                f"({', '.join(sorted(acquired))}) but this handler "
+                f"neither re-raises nor releases it (no finally either) "
+                f"— an exception after the acquire leaks the KV slot")

@@ -29,6 +29,7 @@ from .base import (Checker, Finding, LintResult, SourceFile,
                    split_against_baseline, write_baseline)
 from .contracts import BackendContractChecker
 from .determinism import DeterminismChecker
+from .exceptions import SwallowedExceptionChecker
 from .retrace import RetraceHazardChecker
 from .sync_points import SyncPointChecker
 
@@ -38,6 +39,7 @@ ALL_CHECKERS: List[Checker] = [
     BareAssertChecker(),
     DeterminismChecker(),
     BackendContractChecker(),
+    SwallowedExceptionChecker(),
 ]
 
 

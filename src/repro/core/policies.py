@@ -114,6 +114,23 @@ class Policy:
         per-request scheduling state (e.g. slack-predictor memo entries).
         Default no-op."""
 
+    def cancel(self, reqs: List[Request]) -> None:
+        """Evict ``reqs`` from this policy's scheduling state mid-flight
+        (cancellation / expiry / fault-retry requeue): drop them from the
+        InfQ and physically remove them from any batch entry, pruning
+        entries that empty out — the same live-filtering / drop-empty
+        machinery that removes finished members at run boundaries, so
+        surviving batch members are untouched. Only called at run
+        boundaries (never while a run is in flight). Idempotent: unknown
+        rids are ignored."""
+        gone = {r.rid for r in reqs}
+        if any(r.rid in gone for r in self.queue):
+            self.queue = deque(r for r in self.queue if r.rid not in gone)
+        self._evict_batched(gone)
+
+    def _evict_batched(self, gone: set) -> None:
+        """Hook: remove ``gone`` rids from the policy's batch state."""
+
     def next_timer(self, now: float) -> Optional[float]:
         return None
 
@@ -147,6 +164,13 @@ class Serial(Policy):
         if sb.size == 0:
             self.active = None
         return finished
+
+    def _evict_batched(self, gone):
+        if self.active is not None:
+            self.active.requests = [r for r in self.active.requests
+                                    if r.rid not in gone]
+            if self.active.size == 0:
+                self.active = None
 
     @property
     def admitted_requests(self):
@@ -199,6 +223,13 @@ class GraphBatching(Policy):
         if sb.size == 0:
             self.active = None
         return finished
+
+    def _evict_batched(self, gone):
+        if self.active is not None:
+            self.active.requests = [r for r in self.active.requests
+                                    if r.rid not in gone]
+            if self.active.size == 0:
+                self.active = None
 
     def next_timer(self, now):
         if self.queue and (self.active is None or self.active.size == 0):
@@ -283,6 +314,11 @@ class _TableBased(Policy):
         finished = sb.advance_n(n_nodes, now)
         self._merge_top()
         return finished
+
+    def _evict_batched(self, gone):
+        for sb in self.table.stack:
+            sb.requests = [r for r in sb.requests if r.rid not in gone]
+        self.table._drop_empty()
 
     @property
     def admitted_requests(self):

@@ -52,6 +52,13 @@ class Request:
     # ServingSession.submit; None falls back to the workload's own name
     # for per-model reporting)
     model: Optional[str] = None
+    # terminal out-of-band disposition (None = normal lifecycle):
+    # "cancelled" (caller), "expired" (deadline provably blown mid-flight),
+    # "failed" (backend fault, retries exhausted), "shed" (load shedding).
+    # A fated request is dead to the scheduler: SubBatch live-filtering
+    # drops it exactly like a finished one, but it never gets a t_finish.
+    fate: Optional[str] = None
+    retries: int = 0                    # fault-retry attempts so far
     t_first_issue: Optional[float] = None
     # stamped by the session at the run boundary emitting token #1:
     t_first_token: Optional[float] = None
@@ -65,6 +72,12 @@ class Request:
     @property
     def done(self) -> bool:
         return self.idx >= len(self.sequence)
+
+    @property
+    def terminal(self) -> bool:
+        """Finished OR removed from service (cancelled/expired/failed/
+        shed) — either way the scheduler never dispatches it again."""
+        return self.done or self.fate is not None
 
     @property
     def next_node_id(self) -> Optional[str]:
@@ -135,7 +148,7 @@ class SubBatch:
 
     @property
     def node_id(self) -> Optional[str]:
-        live = [r for r in self.requests if not r.done]
+        live = [r for r in self.requests if not r.terminal]
         if not live:
             return None
         nid = live[0].next_node_id
@@ -147,7 +160,11 @@ class SubBatch:
 
     @property
     def live_requests(self) -> List[Request]:
-        return [r for r in self.requests if not r.done]
+        # fated (cancelled/expired/failed/shed) members fall out exactly
+        # like finished ones — the session evicts them physically at run
+        # boundaries; this filter makes any missed path fail-safe instead
+        # of dispatching a dead request
+        return [r for r in self.requests if not r.terminal]
 
     @property
     def size(self) -> int:

@@ -34,9 +34,21 @@ pool across the ``--models`` tenants (keys are registered MODEL names,
 not SLA tiers) so neither can starve the other of slots; it requires
 both ``--models`` and ``--mem-slots``.
 
+Fault-tolerant serving: ``--fault-spec "transient:0.05,straggler:0.1x4"``
+wraps the backend in a seeded deterministic chaos layer (per-model form:
+``bulk=transient:0.1;gold=straggler:0.02x6``) and arms retry with capped
+exponential backoff (``--max-retries``). ``--cancel-expired`` reaps
+provably deadline-blown requests mid-flight at run boundaries,
+``--max-queue`` bounds the ingress backlog with deadline-aware shedding,
+and ``--shed`` arms brownout shedding (drop lowest-``shed_priority``
+work while the protected tier's rolling attainment is below floor;
+per-model priorities via ``--shed-priorities "gold:1,bulk:0"``). CI
+gates on ``--assert-attainment gold:0.5`` (exit 1 below the floor) and
+``--assert-no-leak`` (exit 1 if any KV slot stays resident after drain).
+
 ``--json-out stats.json`` dumps the full ServeStats — summary, per-class
-AND per-model breakdowns, device-time shares — for CI artifacts and
-offline analysis.
+AND per-model breakdowns, device-time shares, fault/retry/shed
+accounting — for CI artifacts and offline analysis.
 """
 from __future__ import annotations
 
@@ -52,8 +64,9 @@ from ..core.policies import (CellularBatching, GraphBatching, LazyBatching,
 from ..core.request import SLAClass
 from ..core.slack import OracleSlackPredictor, SlackPredictor
 from ..serving.backend import MultiBackend
+from ..serving.faults import FaultInjectingBackend, parse_fault_specs
 from ..serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
-from ..serving.session import ServingSession
+from ..serving.session import BrownoutConfig, RetryPolicy, ServingSession
 from ..serving.server import SimExecutor
 from ..serving.traffic import (bursty_trace, poisson_mixture, poisson_trace,
                                with_sla_classes)
@@ -176,6 +189,87 @@ def parse_mem_shares(spec):
     return shares
 
 
+def parse_shed_priorities(spec):
+    """Parse ``name:priority[,name:priority...]`` per-model shed
+    priorities (ints; brownout sheds strictly-lower tiers to protect the
+    highest)."""
+    if not spec:
+        return {}
+    out = {}
+    for part in spec.split(","):
+        name, _, prio = part.strip().rpartition(":")
+        try:
+            value = int(prio)
+        except ValueError:
+            name = ""
+        if not name:
+            raise SystemExit(
+                f"--shed-priorities entry {part!r} must be name:int")
+        out[name] = value
+    return out
+
+
+def _wrap_faults(backend, args):
+    """Seeded chaos layer between the session and the real backend."""
+    if not args.fault_spec:
+        return backend
+    try:
+        spec = parse_fault_specs(args.fault_spec)
+    except ValueError as e:
+        raise SystemExit(f"--fault-spec: {e}")
+    seed = args.fault_seed if args.fault_seed is not None else args.seed
+    return FaultInjectingBackend(backend, spec, seed=seed)
+
+
+def _session_kwargs(args):
+    """Robustness knobs shared by both launcher paths. Retry arms
+    whenever faults can occur (or the budget is set explicitly); all
+    knobs default OFF so fault-free runs are bit-identical to before."""
+    kw = {"cancel_expired": args.cancel_expired,
+          "max_queue": args.max_queue,
+          "brownout": BrownoutConfig() if args.shed else None}
+    if args.fault_spec or args.max_retries is not None:
+        budget = 3 if args.max_retries is None else args.max_retries
+        kw["retry"] = RetryPolicy(max_retries=budget)
+    return kw
+
+
+def _check_gates(session, stats, args):
+    """CI gates: exit nonzero on a leaked KV slot or attainment below
+    the asserted floor (``tier:floor`` judges one SLA class, a bare
+    float judges the aggregate)."""
+    failed = False
+    if args.assert_no_leak:
+        mem = session.backend.memory_stats()
+        if mem.slots_live != 0:
+            print(f"  LEAK: {mem.slots_live} KV slot(s) resident after "
+                  f"drain")
+            failed = True
+        else:
+            print("  no leaked KV slots (slots_live=0 after drain)")
+    if args.assert_attainment:
+        tier, _, floor_s = args.assert_attainment.rpartition(":")
+        try:
+            floor = float(floor_s)
+        except ValueError:
+            raise SystemExit(f"--assert-attainment {args.assert_attainment!r}"
+                             f" must be [tier:]floor_fraction")
+        if tier:
+            row = stats.per_class(args.sla).get(tier)
+            att = row["sla_attainment"] if row else float("nan")
+            label = f"{tier}-tier"
+        else:
+            att = stats.attainment(args.sla)
+            label = "aggregate"
+        ok = not np.isnan(att) and att + 1e-12 >= floor
+        print(f"  attainment gate: {label} "
+              f"{att * 100:.1f}% vs floor {floor * 100:.1f}% -> "
+              f"{'PASS' if ok else 'FAIL'}")
+        failed = failed or not ok
+    if failed:
+        raise SystemExit(1)
+
+
 def _run_session(session, trace, label, args):
     """The shared tail of every launcher path: replay, drain, report."""
     session.duration = trace.duration
@@ -184,7 +278,8 @@ def _run_session(session, trace, label, args):
     stats = session.drain()
     print_summary(label, args, stats, session.log)
     if args.json_out:
-        dump_json(args.json_out, stats, session.log, args)
+        dump_json(args.json_out, stats, session.log, args, session=session)
+    _check_gates(session, stats, args)
 
 
 def print_summary(wl_name: str, args, stats, log):
@@ -197,6 +292,12 @@ def print_summary(wl_name: str, args, stats, log):
           f"thr {s['throughput_rps']:.0f} r/s  "
           f"SLA viol {s['sla_violation_rate'] * 100:.1f}%  "
           f"avg batch {log.avg_batch_size:.1f}")
+    extras = [f"{key} {s[key]}"
+              for key in ("cancelled", "expired", "failed", "shed",
+                          "retried")
+              if key in s]
+    if extras or log.faults:
+        print(f"  faults {log.faults}  " + "  ".join(extras))
     per_class = stats.per_class(args.sla)
     if set(per_class) != {"default"}:
         tiers = "  ".join(f"{name} {row['sla_violation_rate'] * 100:.1f}%"
@@ -213,9 +314,10 @@ def print_summary(wl_name: str, args, stats, log):
                   f"busy {busy * 1e3:.1f}ms")
 
 
-def dump_json(path: str, stats, log, args):
+def dump_json(path: str, stats, log, args, session=None):
     """Full ServeStats snapshot: aggregate summary + per-class + per-model
-    breakdowns + device-time shares (NaN-safe: NaN serializes as null)."""
+    breakdowns + device-time shares + fault/retry/shed accounting
+    (NaN-safe: NaN serializes as null)."""
 
     def clean(obj):
         if isinstance(obj, dict):
@@ -229,7 +331,12 @@ def dump_json(path: str, stats, log, args):
                  "rate": args.rate, "duration": args.duration,
                  "sla": args.sla, "models": args.models,
                  "arbiter": args.arbiter, "seed": args.seed,
-                 "mem_slots": args.mem_slots, "mem_shares": args.mem_shares},
+                 "mem_slots": args.mem_slots, "mem_shares": args.mem_shares,
+                 "fault_spec": args.fault_spec,
+                 "max_retries": args.max_retries,
+                 "cancel_expired": args.cancel_expired,
+                 "max_queue": args.max_queue, "shed": args.shed,
+                 "shed_priorities": args.shed_priorities},
         "summary": clean(stats.summary(sla=args.sla)),
         "per_class": clean(stats.per_class(args.sla)),
         "per_model": clean(stats.per_model(args.sla)),
@@ -240,8 +347,16 @@ def dump_json(path: str, stats, log, args):
                 "busy_time": log.busy_time,
                 "avg_batch_size": log.avg_batch_size,
                 "avg_run_length": log.avg_run_length,
-                "busy_by_model": dict(log.busy_by_model)},
+                "busy_by_model": dict(log.busy_by_model),
+                "faults": log.faults},
     }
+    if session is not None:
+        mem = session.backend.memory_stats()
+        doc["memory"] = {"slots_live": mem.slots_live,
+                         "slots_total": mem.slots_total,
+                         "max_slots": mem.max_slots}
+        if isinstance(session.backend, FaultInjectingBackend):
+            doc["injected_faults"] = session.backend.fault_stats()
     with open(path, "w") as f:
         json.dump(doc, f, indent=2)
     print(f"wrote {path}")
@@ -282,6 +397,36 @@ def main():
                          '"transformer:0.6,gnmt:0.4" (fractions of the slot '
                          'pool; keeps one tenant from starving another); '
                          'requires --models and --mem-slots')
+    ap.add_argument("--fault-spec", default=None,
+                    help='seeded fault injection, e.g. '
+                         '"transient:0.05,oom:0.01,straggler:0.1x4" or the '
+                         'per-model form "bulk=transient:0.1;gold=..." — '
+                         'arms retry/backoff automatically')
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="fault-injection RNG seed (default: --seed)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="retry budget per request before FAILED "
+                         "(default 3 when --fault-spec is set)")
+    ap.add_argument("--cancel-expired", action="store_true",
+                    help="reap provably deadline-blown requests mid-flight "
+                         "at run boundaries (frees their KV slots early)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound the ingress backlog; overflow sheds the "
+                         "lowest-priority / most-hopeless request")
+    ap.add_argument("--shed", action="store_true",
+                    help="arm brownout shedding: drop lowest-shed-priority "
+                         "work while the protected tier's rolling "
+                         "attainment is below floor")
+    ap.add_argument("--shed-priorities", default=None,
+                    help='per-model shed priorities "gold:1,bulk:0" '
+                         '(higher survives brownout; requires --models)')
+    ap.add_argument("--assert-attainment", default=None,
+                    help='CI gate "tier:floor" (or bare "floor" for the '
+                         "aggregate): exit 1 when SLA attainment lands "
+                         "below the floor fraction")
+    ap.add_argument("--assert-no-leak", action="store_true",
+                    help="CI gate: exit 1 when any KV slot is still "
+                         "resident after drain")
     ap.add_argument("--window", type=float, default=0.025)
     ap.add_argument("--bursty", action="store_true",
                     help="MMPP bursty arrivals instead of Poisson")
@@ -304,6 +449,10 @@ def main():
     if args.mem_shares and args.mem_slots is None:
         raise SystemExit("--mem-shares describes fractions of the "
                          "--mem-slots pool; pass --mem-slots too")
+    if args.shed_priorities and not args.models:
+        raise SystemExit("--shed-priorities keys registered model names; "
+                         "pass --models (a single-model run has one tier, "
+                         "so brownout never sheds)")
 
     # ---- multi-tenant mixture path -------------------------------------
     if args.models:
@@ -333,14 +482,17 @@ def main():
                    if args.arbiter == "rr"
                    else LeastSlackArbiter(sla_default=args.sla,
                                           mem_shares=arb_shares))
-        session = ServingSession(backend=backend, arbiter=arbiter,
-                                 seed=args.seed)
+        session = ServingSession(backend=_wrap_faults(backend, args),
+                                 arbiter=arbiter, seed=args.seed,
+                                 **_session_kwargs(args))
+        prios = parse_shed_priorities(args.shed_priorities)
         for name, _ in shares:
             wl = workloads[name]
             session.register(name, wl,
                              policy=build_policy(args.policy, wl, perf,
                                                  args.sla, args.max_batch,
-                                                 args.window))
+                                                 args.window),
+                             shed_priority=prios.get(name, 0))
         trace = poisson_mixture(
             [(name, workloads[name], args.rate * share)
              for name, share in shares],
@@ -371,7 +523,9 @@ def main():
 
     policy = build_policy(args.policy, wl, perf, args.sla, args.max_batch,
                           args.window)
-    _run_session(session=ServingSession(policy, backend, seed=args.seed),
+    _run_session(session=ServingSession(policy, _wrap_faults(backend, args),
+                                        seed=args.seed,
+                                        **_session_kwargs(args)),
                  trace=trace, label=wl.name, args=args)
 
 

@@ -4,13 +4,17 @@ from .workload import (Workload, NodeDesc, Segment, LengthDist,
 from .npu_model import NPUPerfModel, HardwareSpec, PAPER_NPU, TPU_V5E
 from .traffic import (Trace, poisson_trace, poisson_mixture, bursty_trace,
                       colocated_trace, with_sla_classes)
-from .backend import (Backend, MemoryStats, MultiBackend, ServerLog,
+from .backend import (Backend, BackendError, BackendOOMError, MemoryStats,
+                      MultiBackend, ServerLog, TransientBackendError,
                       run_label)
 from .registry import ModelEntry, ModelRegistry
-from .session import (ServingSession, RequestHandle, HandleState, run_trace,
+from .session import (ServingSession, RequestHandle, HandleState,
+                      RetryPolicy, BrownoutConfig, run_trace,
                       run_mixture, DEFAULT_MODEL)
 from .server import InferenceServer, SimExecutor, run_policy
 from .metrics import ServeStats
+from .faults import (FaultSpec, FaultInjectingBackend, parse_fault_spec,
+                     parse_fault_specs)
 
 __all__ = [
     "Workload", "NodeDesc", "Segment", "LengthDist", "wmt_like_length_dist",
@@ -18,11 +22,14 @@ __all__ = [
     "NPUPerfModel", "HardwareSpec", "PAPER_NPU", "TPU_V5E",
     "Trace", "poisson_trace", "poisson_mixture", "bursty_trace",
     "colocated_trace", "with_sla_classes",
-    "Backend", "MemoryStats", "MultiBackend", "ServerLog", "run_label",
+    "Backend", "BackendError", "BackendOOMError", "TransientBackendError",
+    "MemoryStats", "MultiBackend", "ServerLog", "run_label",
     "ModelEntry", "ModelRegistry",
-    "ServingSession", "RequestHandle", "HandleState", "run_trace",
-    "run_mixture", "DEFAULT_MODEL",
+    "ServingSession", "RequestHandle", "HandleState", "RetryPolicy",
+    "BrownoutConfig", "run_trace", "run_mixture", "DEFAULT_MODEL",
     "InferenceServer", "SimExecutor", "run_policy", "ServeStats",
+    "FaultSpec", "FaultInjectingBackend", "parse_fault_spec",
+    "parse_fault_specs",
 ]
 
 

@@ -49,6 +49,41 @@ from typing import Dict, List, Optional, Sequence, Tuple
 from ..core.request import Request, SubBatch
 
 
+class BackendError(RuntimeError):
+    """A backend dispatch fault with *defined* session semantics.
+
+    Raised by ``execute``/``execute_run`` when a dispatch cannot complete.
+    The session's failure model (see ``ServingSession``) treats it as a
+    whole-run loss: every member's device-side progress (KV rows, slot)
+    is discarded via :meth:`Backend.reset_request` and — when
+    ``retryable`` — the requests are requeued with capped exponential
+    backoff to replay prefill from node 0; retries exhausted (or
+    ``retryable=False``) turns them terminal ``FAILED``, an SLA
+    violation. ``latency`` is the device time burned before the fault
+    was detected — charged to the session clock so faults are not free.
+
+    Subclasses ``RuntimeError`` deliberately: code predating the failure
+    model that catches RuntimeError keeps working unchanged.
+    """
+
+    def __init__(self, message: str, *, latency: float = 0.0,
+                 retryable: bool = True):
+        super().__init__(message)
+        self.latency = float(latency)
+        self.retryable = retryable
+
+
+class TransientBackendError(BackendError):
+    """A fault expected to clear on retry (flaky dispatch, preempted
+    device, dropped interconnect message)."""
+
+
+class BackendOOMError(BackendError):
+    """Slot-allocation failure under memory pressure: the KV arena is at
+    its cap with every slot held. Retryable — residency drains as live
+    requests complete, so a backed-off replay can succeed."""
+
+
 @dataclass
 class MemoryStats:
     """One backend memory pool's accounting snapshot.
@@ -142,6 +177,15 @@ class Backend:
         they stay readable until :meth:`release_request`. The analytic
         simulator keeps no per-request state — default no-op."""
 
+    def reset_request(self, model: str, req: Request) -> None:
+        """Discard ``req``'s *device-side* progress after a fault so the
+        request can re-execute from node 0 (prefill replay): release its
+        KV slot back to the pool idempotently and reset any per-request
+        execution state to its freshly-prepared form — the prompt (and
+        host-side tokens already streamed) must survive, a retry
+        regenerates the rest bit-exactly. Stateless backends need
+        nothing — default no-op."""
+
     def release_request(self, model: str, req: Request) -> None:
         """Forget ``req`` entirely (``ServingSession.release``): drop any
         remaining host-side state, e.g. the JAX engine's per-request
@@ -216,6 +260,9 @@ class MultiBackend(Backend):
     def on_finished(self, model, reqs):
         self.backend_for(model).on_finished(model, reqs)
 
+    def reset_request(self, model, req):
+        self.backend_for(model).reset_request(model, req)
+
     def release_request(self, model, req):
         self.backend_for(model).release_request(model, req)
 
@@ -288,6 +335,10 @@ class ServerLog:
     runs_executed: int = 0
     busy_time: float = 0.0
     batch_size_sum: int = 0
+    # backend faults the session absorbed (BackendError from execute_run:
+    # injected or real); the faulted dispatch's detection latency is in
+    # busy_time but its nodes are NOT in nodes_executed — nothing ran
+    faults: int = 0
     # per-node-id latency breakdown; fused runs (no per-node observability)
     # are keyed by their span, e.g. "D0..head" — making run-fusion wins
     # visible per phase next to the per-node entries. Multi-model sessions

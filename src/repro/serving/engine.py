@@ -101,7 +101,7 @@ from ..core.request import Request, SubBatch
 from ..models import layers as L
 from ..models.cost import _layer_kinds
 from ..models.model import Model, RuntimeFlags, _index, _stack
-from .backend import Backend
+from .backend import Backend, BackendOOMError
 
 # cache leaves whose leading (post-batch) axis is the KV time axis
 _TIME_AXIS_KEYS = ("k", "v", "ckv", "krope")
@@ -317,7 +317,10 @@ class JaxEngine(Backend):
         if slot is None:
             if not self._free_slots:
                 if not self._auto_grow:
-                    raise RuntimeError(
+                    # BackendOOMError subclasses RuntimeError: legacy
+                    # catches keep working, fault-aware sessions can
+                    # retry/fail the victims instead of crashing the loop
+                    raise BackendOOMError(
                         f"cache arena exhausted: {self.n_slots} slots all "
                         f"held by live requests — raise "
                         f"JaxEngine(n_slots=...) above the policy's max "
@@ -338,7 +341,7 @@ class JaxEngine(Backend):
         new = 2 * old if self.max_slots is None else min(2 * old,
                                                          self.max_slots)
         if new <= old:
-            raise RuntimeError(
+            raise BackendOOMError(
                 f"cache arena exhausted at its memory cap: all "
                 f"{self.n_slots} slots (max_slots={self.max_slots}) held "
                 f"by live requests — raise JaxEngine(max_slots=...) or "
@@ -499,6 +502,36 @@ class JaxEngine(Backend):
 
     def on_finished(self, model, reqs: Sequence[Request]) -> None:
         self._release_slots(reqs)
+
+    def reset_request(self, model, req: Request) -> None:
+        """Fault recovery: discard the request's device-side progress.
+
+        The membership-keyed device caches are invalidated FIRST and
+        without flushing — the in-flight activations/positions/tokens
+        belong to the faulted (void) run, and an identical-rids batch
+        re-forming after the retry must never read them back. Then the
+        KV slot returns to the free pool (idempotent; survivors'
+        slots are untouched) and the host-side EngineState rewinds to
+        its post-``prepare`` point: prompt intact, caches/activations/
+        generated tokens gone, so the retry replays prefill from node 0
+        and regenerates the same tokens bit-exactly."""
+        rid = req.rid
+        if self._xbatch is not None and rid in self._xbatch[0]:
+            self._xbatch = None
+        if self._slotbatch is not None and rid in self._slotbatch[0]:
+            self._slotbatch = None
+        if self._posbatch is not None and rid in self._posbatch[0][0]:
+            self._posbatch = None
+        if self._tokbatch is not None and rid in self._tokbatch[0][0]:
+            self._tokbatch = None
+        self._release_slots([req])
+        st = self.states.get(rid)
+        if st is not None:
+            st.x = None
+            st.caches = {}
+            st.generated = []
+            st.next_token = int(st.prompt_np[-1])
+            st.pos = st.prefill_len
 
     def release_request(self, model, req: Request) -> None:
         """Drop the request's host-side EngineState (prompt, generated

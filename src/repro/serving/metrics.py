@@ -16,8 +16,13 @@ against its **own** deadline (class deadline, else the supplied default).
 SLA accounting judges every SUBMITTED request: a request rejected at
 admission control counts as a violation of its own class deadline (the
 paper's SLA-satisfaction figures count all submitted requests — without
-this a policy could inflate attainment by rejecting aggressively).
-Latency/TTFT/TPOT/throughput remain finished-only by construction.
+this a policy could inflate attainment by rejecting aggressively). The
+same rule covers every *dropped* disposition of the failure model —
+cancelled, expired, failed (fault retries exhausted), shed — none ever
+produced a response by any deadline, so cancellation/shedding can only
+raise attainment by rescuing OTHER requests, never by hiding its
+victims. Latency/TTFT/TPOT/throughput remain finished-only by
+construction.
 
 All aggregates are NaN-safe when a slice has no finishers. TTFT/TPOT need
 ``t_first_token``, which only the session front-end stamps (at the run
@@ -57,6 +62,13 @@ class ServeStats:
     # violation of its class deadline — a policy cannot inflate attainment
     # by rejecting aggressively
     rejected_requests: List[Request] = field(default_factory=list)
+    # failure-model terminal dispositions (see serving.session): all are
+    # SLA violations of their own class deadline, like rejections
+    cancelled_requests: List[Request] = field(default_factory=list)
+    expired_requests: List[Request] = field(default_factory=list)
+    failed_requests: List[Request] = field(default_factory=list)
+    shed_requests: List[Request] = field(default_factory=list)
+    retried: int = 0                        # fault-retry requeue events
     # SLA classes observed at submission: name -> relative deadline
     # (None for the default class — its target arrives via summary(sla=...))
     classes: Dict[str, Optional[float]] = field(default_factory=dict)
@@ -85,6 +97,24 @@ class ServeStats:
         return [r for r in self.rejected_requests if r.model_name == name]
 
     @property
+    def dropped_requests(self) -> List[Request]:
+        """Every request removed from service without a response:
+        cancelled + expired + failed + shed (rejections are reported
+        separately — they never entered service at all)."""
+        return (self.cancelled_requests + self.expired_requests
+                + self.failed_requests + self.shed_requests)
+
+    def dropped_of_class(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.dropped_requests
+        return [r for r in self.dropped_requests if r.sla_name == name]
+
+    def dropped_of_model(self, name: Optional[str] = None) -> List[Request]:
+        if name is None:
+            return self.dropped_requests
+        return [r for r in self.dropped_requests if r.model_name == name]
+
+    @property
     def latencies(self) -> np.ndarray:
         return np.array([r.latency() for r in self.finished])
 
@@ -111,12 +141,14 @@ class ServeStats:
     # ------------------------------------------------------------------
     def sla_violation_rate(self, sla: float,
                            cls: Optional[str] = None) -> float:
-        """Fraction of SUBMITTED requests (finished + rejected) of the
-        class missing ``sla``; every rejection is a violation — it never
-        produced a response by any deadline. NaN when the class saw no
-        submissions at all (an all-rejected class reports 1.0)."""
+        """Fraction of SUBMITTED requests (finished + rejected + dropped)
+        of the class missing ``sla``; every rejection and every dropped
+        disposition (cancelled/expired/failed/shed) is a violation — it
+        never produced a response by any deadline. NaN when the class saw
+        no submissions at all (an all-refused class reports 1.0)."""
         reqs = self.of_class(cls)
-        n_rej = len(self.rejected_of_class(cls))
+        n_rej = (len(self.rejected_of_class(cls))
+                 + len(self.dropped_of_class(cls)))
         if not reqs and not n_rej:
             return _NAN
         viol = n_rej
@@ -151,7 +183,8 @@ class ServeStats:
                   for r in self.of_model(model)
                   for d in [self._deadline_of(r, sla)] if d is not None]
         judged += [False
-                   for r in self.rejected_of_model(model)
+                   for r in (self.rejected_of_model(model)
+                             + self.dropped_of_model(model))
                    if self._deadline_of(r, sla) is not None]
         return _mean([float(ok) for ok in judged])
 
@@ -178,7 +211,8 @@ class ServeStats:
         against the class's own deadline, p50/p99, TTFT, TPOT. ``sla``
         supplies the default class's deadline. NaN-safe throughout."""
         names = (set(self.classes) | {r.sla_name for r in self.finished}
-                 | {r.sla_name for r in self.rejected_requests})
+                 | {r.sla_name for r in self.rejected_requests}
+                 | {r.sla_name for r in self.dropped_requests})
         out: Dict[str, Dict[str, float]] = {}
         for name in sorted(names):
             deadline = self._class_deadline(name, sla)
@@ -187,6 +221,14 @@ class ServeStats:
             out[name] = {
                 "completed": len(self.of_class(name)),
                 "rejected": len(self.rejected_of_class(name)),
+                "cancelled": len([r for r in self.cancelled_requests
+                                  if r.sla_name == name]),
+                "expired": len([r for r in self.expired_requests
+                                if r.sla_name == name]),
+                "failed": len([r for r in self.failed_requests
+                               if r.sla_name == name]),
+                "shed": len([r for r in self.shed_requests
+                             if r.sla_name == name]),
                 "deadline_ms": (deadline * 1e3 if deadline is not None
                                 else _NAN),
                 "sla_violation_rate": viol,
@@ -205,7 +247,8 @@ class ServeStats:
         (``sla`` = default class target), p50/p99 latency, TTFT, TPOT.
         Registered models with no finishers appear with NaN rows."""
         names = (set(self.models) | {r.model_name for r in self.finished}
-                 | {r.model_name for r in self.rejected_requests})
+                 | {r.model_name for r in self.rejected_requests}
+                 | {r.model_name for r in self.dropped_requests})
         out: Dict[str, Dict[str, float]] = {}
         for name in sorted(names):
             reqs = self.of_model(name)
@@ -213,6 +256,14 @@ class ServeStats:
             out[name] = {
                 "completed": len(reqs),
                 "rejected": len(self.rejected_of_model(name)),
+                "cancelled": len([r for r in self.cancelled_requests
+                                  if r.model_name == name]),
+                "expired": len([r for r in self.expired_requests
+                                if r.model_name == name]),
+                "failed": len([r for r in self.failed_requests
+                               if r.model_name == name]),
+                "shed": len([r for r in self.shed_requests
+                             if r.model_name == name]),
                 "sla_attainment": att,
                 "sla_violation_rate": (_NAN if np.isnan(att) else 1.0 - att),
                 "p50_ms": _percentile(reqs, 50) * 1e3,
@@ -241,6 +292,16 @@ class ServeStats:
         }
         if self.rejected:
             out["rejected"] = self.rejected
+        # failure-model dispositions only appear when they happened, so a
+        # fault-free run's summary dict is byte-identical to before
+        for key, reqs in (("cancelled", self.cancelled_requests),
+                          ("expired", self.expired_requests),
+                          ("failed", self.failed_requests),
+                          ("shed", self.shed_requests)):
+            if reqs:
+                out[key] = len(reqs)
+        if self.retried:
+            out["retried"] = self.retried
         if sla is not None:
             out["sla_violation_rate"] = self.sla_violation_rate(sla)
         # per-class violation rates (only meaningful keys: a class needs a

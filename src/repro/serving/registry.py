@@ -36,12 +36,18 @@ class ModelEntry:
     fraction of the backend pool's ``max_slots`` under memory-aware
     admission (``None`` = uncapped; the session falls back to the
     arbiter's ``mem_shares``). Per-model shares are what keep a bulk
-    tenant from starving an interactive tenant of device memory."""
+    tenant from starving an interactive tenant of device memory.
+
+    ``shed_priority`` ranks the model for graceful load shedding (higher
+    = more protected): under an ingress-queue overflow or an active
+    brownout, work from strictly lower-priority models is shed first.
+    Ties (the default: every model at 0) shed deadline-aware instead."""
     name: str
     workload: Optional[object]          # serving.workload.Workload
     policy: Policy
     index: int                          # registration order (arbiter RR)
     mem_share: Optional[float] = None   # fraction of the pool's max_slots
+    shed_priority: int = 0              # higher = protected tier
 
     def __repr__(self):
         wl = getattr(self.workload, "name", None)
@@ -57,14 +63,16 @@ class ModelRegistry:
         self._entries: Dict[str, ModelEntry] = {}
 
     def register(self, name: str, workload=None, *, policy: Policy,
-                 mem_share: Optional[float] = None) -> ModelEntry:
+                 mem_share: Optional[float] = None,
+                 shed_priority: int = 0) -> ModelEntry:
         if name in self._entries:
             raise ValueError(f"model {name!r} already registered")
         if mem_share is not None and not 0.0 < mem_share <= 1.0:
             raise ValueError(
                 f"mem_share for {name!r} must lie in (0, 1]: {mem_share}")
         entry = ModelEntry(name=name, workload=workload, policy=policy,
-                           index=len(self._entries), mem_share=mem_share)
+                           index=len(self._entries), mem_share=mem_share,
+                           shed_priority=shed_priority)
         self._entries[name] = entry
         return entry
 

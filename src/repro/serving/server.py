@@ -100,6 +100,14 @@ class SimExecutor(Backend):
             for r in reqs:
                 live.pop(r.rid, None)
 
+    def reset_request(self, model, req):
+        """Fault recovery: drop the request's simulated KV residency (its
+        slot) — idempotent; a retry re-acquires via ``_touch`` on its
+        next dispatch, exactly like a fresh admission."""
+        live = self._live.get(model)
+        if live:
+            live.pop(req.rid, None)
+
     def memory_stats(self, model=None):
         from .backend import MemoryStats
         n_live = sum(len(per) for per in self._live.values())

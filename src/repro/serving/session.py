@@ -48,6 +48,32 @@ Handle lifecycle
 ``RUNNING``  — a committed run containing the request has executed;
 ``DONE``     — finished; ``t_finish``/``latency``/``tokens`` are final.
 
+Terminal failure/degradation states (all count as SLA violations):
+
+``CANCELLED`` — the caller called ``handle.cancel()`` mid-flight;
+``EXPIRED``   — ``cancel_expired=True`` and, at a run boundary, the
+                request's deadline was provably blown (already past, or
+                past even under the predictor's isolated-run bound) — it
+                is evicted from its SubBatch and its KV slot freed so it
+                stops stealing capacity from requests that can attain;
+``FAILED``    — a backend fault (``BackendError``) consumed the request's
+                retry budget (or was not retryable);
+``SHED``      — dropped by graceful load shedding (bounded ingress queue
+                overflow, or brownout mode protecting a higher tier).
+
+Failure model
+-------------
+A ``BackendError`` from ``execute_run`` loses the whole dispatched run:
+every member's device-side progress is discarded
+(``Backend.reset_request`` — KV slot released idempotently, no leaks)
+and, per the session's :class:`RetryPolicy`, members are requeued with
+capped exponential backoff + deterministic jitter (virtual time in sim,
+wall-clock in JAX — both are the one session clock) to replay prefill
+from node 0. SLA accounting always judges the ORIGINAL deadline: retries
+buy a response, never absolution. Eviction — cancellation, expiry,
+fault requeue — never perturbs surviving batch members: they keep their
+slots, caches, and (in the JAX engine) bit-exact tokens.
+
 Streaming
 ---------
 At every run boundary the session asks the backend how many response
@@ -76,10 +102,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from dataclasses import dataclass
+from collections import deque
+
 from ..core.arbiter import Arbiter, LeastSlackArbiter
 from ..core.policies import Policy
 from ..core.request import Request
-from .backend import Backend, ServerLog, run_label
+from .backend import Backend, BackendError, ServerLog, run_label
 from .metrics import ServeStats
 from .registry import ModelEntry, ModelRegistry
 from .traffic import Trace
@@ -93,6 +122,68 @@ class HandleState(Enum):
     RUNNING = "running"
     DONE = "done"
     REJECTED = "rejected"
+    CANCELLED = "cancelled"     # caller cancelled mid-flight
+    EXPIRED = "expired"         # deadline provably blown; evicted
+    FAILED = "failed"           # backend fault, retry budget exhausted
+    SHED = "shed"               # dropped by graceful load shedding
+
+
+#: request.fate value -> terminal HandleState
+_FATE_STATE = {
+    "cancelled": HandleState.CANCELLED,
+    "expired": HandleState.EXPIRED,
+    "failed": HandleState.FAILED,
+    "shed": HandleState.SHED,
+}
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Fault-retry semantics for ``BackendError`` dispatch faults.
+
+    A transiently failed request is requeued ``max_retries`` times with
+    capped exponential backoff — attempt ``k`` waits
+    ``min(backoff_base * 2**(k-1), backoff_cap)`` scaled by a
+    deterministic jitter draw in ``[1, 1+jitter]`` from the session's
+    seeded retry stream. Exhaustion (or a non-retryable fault) turns the
+    request terminal ``FAILED``. ``max_retries=0`` fails every faulted
+    request immediately."""
+    max_retries: int = 3
+    backoff_base: float = 0.002       # seconds (session clock)
+    backoff_cap: float = 0.5
+    jitter: float = 0.25              # max fractional extra backoff
+
+    def __post_init__(self):
+        if self.max_retries < 0 or self.backoff_base < 0 \
+                or self.backoff_cap < self.backoff_base or self.jitter < 0:
+            raise ValueError(f"invalid RetryPolicy: {self}")
+
+    def backoff(self, attempt: int, rng) -> float:
+        """Backoff before retry ``attempt`` (1-based), jittered."""
+        base = min(self.backoff_base * (2.0 ** (attempt - 1)),
+                   self.backoff_cap)
+        return base * (1.0 + self.jitter * float(rng.random()))
+
+
+@dataclass(frozen=True)
+class BrownoutConfig:
+    """Attainment-triggered brownout: when the PROTECTED tier's rolling
+    attainment (a window over its last ``window`` terminal outcomes,
+    evaluated once ``min_samples`` exist) drops below ``floor``, the
+    session sheds all queued + arriving work of strictly lower
+    ``shed_priority`` models until attainment recovers above
+    ``floor + hysteresis``. The protected tier is the highest registered
+    ``shed_priority``; with a single priority level brownout never
+    engages (there is nothing lower-tier to shed)."""
+    floor: float = 0.9
+    window: int = 64
+    hysteresis: float = 0.05
+    min_samples: int = 16
+
+    def __post_init__(self):
+        if not 0.0 < self.floor <= 1.0 or self.window < 1 \
+                or self.hysteresis < 0 or self.min_samples < 1:
+            raise ValueError(f"invalid BrownoutConfig: {self}")
 
 
 class RequestHandle:
@@ -102,6 +193,7 @@ class RequestHandle:
                  on_token: Optional[Callable] = None,
                  model: Optional[str] = None):
         self.request = req
+        self._session = session
         self.t_submit = session.now
         self.on_token = on_token
         # registry name of the entry serving this request (authoritative
@@ -118,6 +210,8 @@ class RequestHandle:
         if self._rejected:
             return HandleState.REJECTED
         r = self.request
+        if r.fate is not None:
+            return _FATE_STATE[r.fate]
         if r.done:
             return HandleState.DONE
         if self._running:
@@ -126,9 +220,28 @@ class RequestHandle:
             return HandleState.ADMITTED
         return HandleState.QUEUED
 
+    _TERMINAL = frozenset((HandleState.DONE, HandleState.REJECTED,
+                           HandleState.CANCELLED, HandleState.EXPIRED,
+                           HandleState.FAILED, HandleState.SHED))
+
     @property
     def done(self) -> bool:
-        return self.state in (HandleState.DONE, HandleState.REJECTED)
+        """Terminal: the request will never run (again) — completed,
+        refused, cancelled, expired, failed, or shed."""
+        return self.state in self._TERMINAL
+
+    @property
+    def retries(self) -> int:
+        """Fault-retry attempts consumed so far."""
+        return self.request.retries
+
+    def cancel(self) -> bool:
+        """Cancel this request mid-flight: evict it from its model's
+        scheduling state (InfQ or SubBatch — surviving batch members are
+        untouched) and free its KV slot immediately. Terminal state
+        becomes ``CANCELLED``; tokens streamed so far stay readable.
+        Returns ``False`` (no-op) when the handle is already terminal."""
+        return self._session.cancel(self)
 
     @property
     def t_first_token(self) -> Optional[float]:
@@ -188,6 +301,34 @@ class ServingSession:
 
     ``seed`` feeds the RNG handed to ``Backend.prepare`` (the JAX engine
     samples synthetic prompts from it when none is supplied).
+
+    Failure & degradation knobs (all default to the pre-failure-model
+    behavior bit-identically):
+
+    ``cancel_expired``: at every run boundary, expire (terminal
+    ``EXPIRED``, slot freed, batch survivors untouched) any request whose
+    deadline is provably blown — already past, or unreachable even under
+    the predictor's conservative isolated-run bound
+    (``single_remaining``). Off by default (the paper's system never
+    drops work).
+
+    ``retry``: the :class:`RetryPolicy` that ARMS the failure model —
+    when set, a ``BackendError`` from a dispatch is absorbed: retryable
+    faults requeue with capped exponential backoff and deterministic
+    jitter, everything else (and budget exhaustion) goes terminal
+    ``FAILED``. ``None`` (the default) leaves the failure model off:
+    backend errors propagate to the caller exactly as before — an
+    engine's own "arena exhausted / memory cap" errors stay loud unless
+    the caller opted into fault handling.
+
+    ``max_queue``: bounded ingress queue — when the total InfQ backlog
+    (across models) is at the bound, an arriving request triggers
+    deadline-aware shedding: the least valuable of (backlog + newcomer)
+    — lowest ``shed_priority`` tier first, loosest absolute deadline
+    within a tier — goes terminal ``SHED``. ``None`` = unbounded.
+
+    ``brownout``: a :class:`BrownoutConfig` enabling attainment-triggered
+    tier shedding via ``register(..., shed_priority=...)``.
     """
 
     def __init__(self, policy: Optional[Policy] = None,
@@ -195,6 +336,10 @@ class ServingSession:
                  arbiter: Optional[Arbiter] = None, seed: int = 0,
                  reject_infeasible: bool = False,
                  memory_aware: bool = True,
+                 cancel_expired: bool = False,
+                 retry: Optional[RetryPolicy] = None,
+                 max_queue: Optional[int] = None,
+                 brownout: Optional[BrownoutConfig] = None,
                  log: Optional[ServerLog] = None):
         if backend is None:
             raise ValueError(
@@ -208,10 +353,27 @@ class ServingSession:
         self.duration: Optional[float] = None    # reporting window override
         self.reject_infeasible = reject_infeasible
         self.memory_aware = memory_aware
+        self.cancel_expired = cancel_expired
+        self.retry = retry          # None = failure model off (errors raise)
+        self.max_queue = max_queue
+        self.brownout = brownout
         self.handles: Dict[int, RequestHandle] = {}
         self._finished: Dict[int, Request] = {}   # rid-keyed: O(1) release
         self._rejected: Dict[int, Request] = {}
+        # terminal failure/degradation dispositions, keyed like _finished
+        self._cancelled: Dict[int, Request] = {}
+        self._expired: Dict[int, Request] = {}
+        self._failed: Dict[int, Request] = {}
+        self._shed: Dict[int, Request] = {}
+        self.retried = 0                 # fault-retry requeue events
+        self.brownouts = 0               # brownout activations
+        self._brownout_active = False
+        self._attain_window: deque = deque(
+            maxlen=brownout.window if brownout is not None else 1)
         self._rng = np.random.default_rng(seed)
+        # separate stream for retry jitter: backoff draws must never
+        # perturb prompt sampling (survivors stay bit-exact vs fault-free)
+        self._retry_rng = np.random.default_rng([seed, 0x5EED])
         self._arrivals: list = []        # heap of (t, rid, seq, req, entry)
         self._seq = itertools.count()
         self._classes: Dict[str, Optional[float]] = {}
@@ -222,7 +384,8 @@ class ServingSession:
     # Model registry
     # ------------------------------------------------------------------
     def register(self, name: str, workload=None, *, policy: Policy,
-                 mem_share: Optional[float] = None) -> ModelEntry:
+                 mem_share: Optional[float] = None,
+                 shed_priority: int = 0) -> ModelEntry:
         """Register a model: ``name`` becomes the routing key for
         ``submit(model=...)``, trace tags, backend muxing, and per-model
         stats; ``policy`` is the model's private batching policy (its own
@@ -231,9 +394,12 @@ class ServingSession:
         checked against it. ``mem_share`` caps the model's resident KV
         slots at that fraction of its backend pool's ``max_slots`` under
         memory-aware admission (falls back to the arbiter's
-        ``mem_shares``)."""
+        ``mem_shares``). ``shed_priority`` ranks the model for graceful
+        load shedding (higher = protected; lower tiers shed first under
+        ingress overflow or brownout)."""
         entry = self.registry.register(name, workload, policy=policy,
-                                       mem_share=mem_share)
+                                       mem_share=mem_share,
+                                       shed_priority=shed_priority)
         if self.memory_aware:
             # the gate re-reads backend stats on every admission decision,
             # so it tracks arena growth/shrink and cross-model usage live
@@ -424,7 +590,196 @@ class ServingSession:
     def _enqueue_due(self):
         while self._arrivals and self._arrivals[0][0] <= self.now + 1e-12:
             _, _, _, req, entry = heapq.heappop(self._arrivals)
+            if req.terminal:        # cancelled/shed while future-queued
+                continue
+            if (self._brownout_active
+                    and entry.shed_priority < self._protected_priority()):
+                self._terminate(self.handles.get(req.rid), "shed")
+                continue
+            if self.max_queue is not None:
+                self._bound_ingress(req, entry)
+                if req.terminal:    # the newcomer itself was the victim
+                    continue
             entry.policy.enqueue(req, self.now)
+
+    # ------------------------------------------------------------------
+    # Failure model: cancellation, expiry, faults, shedding
+    # ------------------------------------------------------------------
+    def cancel(self, handle: RequestHandle) -> bool:
+        """Cancel ``handle``'s request mid-flight (see
+        :meth:`RequestHandle.cancel`). Returns ``False`` when already
+        terminal."""
+        return self._terminate(handle, "cancelled")
+
+    def _terminate(self, handle: Optional[RequestHandle],
+                   fate: str) -> bool:
+        """Make a live request terminal with ``fate`` (``cancelled`` /
+        ``expired`` / ``failed`` / ``shed``): physically evict it from
+        its model's scheduling state (InfQ or SubBatch — survivors are
+        untouched), free its backend resources (KV slot) immediately,
+        and record it for stats. Idempotent: a terminal handle is a
+        no-op (returns ``False``)."""
+        if handle is None or handle.done:
+            return False
+        req = handle.request
+        entry = self.registry[handle.model]
+        req.fate = fate
+        # evict BEFORE touching backend state: the policy drops it from
+        # its InfQ / SubBatch via the same live-filtering a finished
+        # request takes, so the batch-table invariants never see it
+        entry.policy.cancel([req])
+        # batch release + single reclaim; idempotent when it never held
+        # a slot (e.g. cancelled while future-queued)
+        self.backend.on_finished(entry.name, [req])
+        entry.policy.request_finished([req])
+        {"cancelled": self._cancelled, "expired": self._expired,
+         "failed": self._failed, "shed": self._shed}[fate][req.rid] = req
+        if fate != "cancelled":      # caller choice is not a QoS outcome
+            self._note_outcome(entry, ok=False)
+        return True
+
+    def _rel_deadline(self, req: Request,
+                      entry: ModelEntry) -> Optional[float]:
+        """The request's relative deadline as the scheduler sees it: its
+        model predictor's view (per-request SLA class, else the
+        predictor's global target) — without a predictor, the SLA class
+        alone (None = no deadline, never expires)."""
+        pred = getattr(entry.policy, "predictor", None)
+        if pred is not None and hasattr(pred, "deadline"):
+            return pred.deadline(req)
+        return req.sla.deadline if req.sla is not None else None
+
+    def _abs_deadline(self, req: Request,
+                      entry: ModelEntry) -> Optional[float]:
+        rel = self._rel_deadline(req, entry)
+        return None if rel is None else req.arrival + rel
+
+    def _expire_due(self):
+        """Run-boundary expiry sweep (``cancel_expired=True``): turn
+        terminal-``EXPIRED`` every queued or admitted request whose
+        deadline is provably blown — the clock is already past it, or
+        even the predictor's conservative isolated-run bound
+        (``single_remaining``, the mid-flight continuation of the
+        ``reject_infeasible`` single bound) cannot land before it. An
+        expired batch member is evicted and its slot freed so it stops
+        burning device time the survivors could attain with."""
+        for entry in self.registry.entries():
+            pred = getattr(entry.policy, "predictor", None)
+            rem = getattr(pred, "single_remaining", None)
+            pending = list(entry.policy.queue) \
+                + list(entry.policy.admitted_requests)
+            for req in pending:
+                if req.terminal:
+                    continue
+                dl = self._abs_deadline(req, entry)
+                if dl is None:
+                    continue
+                blown = self.now > dl + 1e-12
+                if not blown and rem is not None:
+                    blown = self.now + rem(req) > dl + 1e-12
+                if blown:
+                    self._terminate(self.handles.get(req.rid), "expired")
+
+    def _bound_ingress(self, req: Request, entry: ModelEntry):
+        """Bounded ingress (``max_queue``): when the total InfQ backlog
+        is at the bound, shed the least valuable of (backlog +
+        newcomer) — lowest ``shed_priority`` tier first, loosest
+        absolute deadline (most slack to give up) within a tier,
+        newest arrival as the tiebreak."""
+        depth = sum(len(e.policy.queue) for e in self.registry.entries())
+        if depth < self.max_queue:
+            return
+        cands = [(e, r) for e in self.registry.entries()
+                 for r in e.policy.queue]
+        cands.append((entry, req))
+
+        def _key(pair):
+            e, r = pair
+            dl = self._abs_deadline(r, e)
+            # no deadline = infinitely loose = first to go within a tier
+            return (e.shed_priority,
+                    -dl if dl is not None else -float("inf"),
+                    -r.arrival)
+
+        victim_e, victim_r = min(cands, key=_key)
+        self._terminate(self.handles.get(victim_r.rid), "shed")
+
+    def _protected_priority(self) -> int:
+        return max((e.shed_priority for e in self.registry.entries()),
+                   default=0)
+
+    def _note_outcome(self, entry: ModelEntry, ok: bool):
+        """Feed the brownout controller one terminal outcome of the
+        PROTECTED tier (finish-within-deadline = ok; late finish,
+        expiry, fault-failure, shed = not ok)."""
+        if self.brownout is None:
+            return
+        if entry.shed_priority != self._protected_priority():
+            return
+        self._attain_window.append(1 if ok else 0)
+        cfg = self.brownout
+        if len(self._attain_window) < cfg.min_samples:
+            return
+        att = sum(self._attain_window) / len(self._attain_window)
+        if not self._brownout_active and att < cfg.floor:
+            self._brownout_active = True
+            self.brownouts += 1
+            self._brownout_shed()
+        elif self._brownout_active and att >= cfg.floor + cfg.hysteresis:
+            self._brownout_active = False
+
+    def _brownout_shed(self):
+        """Brownout activation: shed every QUEUED (not yet admitted —
+        admitted work already holds slots and finishes soon) request of
+        strictly lower-priority models; arrivals keep shedding at the
+        ingress while the brownout stays active."""
+        prot = self._protected_priority()
+        for entry in self.registry.entries():
+            if entry.shed_priority >= prot:
+                continue
+            for req in list(entry.policy.queue):
+                self._terminate(self.handles.get(req.rid), "shed")
+
+    def _on_fault(self, entry: ModelEntry, sb, reqs: List[Request],
+                  err: BackendError):
+        """A dispatched run raised ``BackendError``: the whole run's
+        device-side progress is lost. Members are evicted from the
+        batch, their slots/caches discarded (``reset_request`` — KV is
+        gone, so a retry replays prefill from node 0), and each is
+        either requeued with capped exponential backoff + deterministic
+        jitter or turned terminal ``FAILED`` (non-retryable fault or
+        retry budget exhausted). The fault's own latency burns device
+        time (``busy_time``) but commits no nodes; SLA accounting keeps
+        judging the ORIGINAL arrival/deadline."""
+        lat = float(err.latency)
+        self.log.faults += 1
+        self.log.busy_time += lat
+        self.log.busy_by_model[entry.name] = (
+            self.log.busy_by_model.get(entry.name, 0.0) + lat)
+        self.now += lat
+        # evict from the SubBatch first, while member idx values still
+        # satisfy the common-node invariant — THEN rewind per-request
+        entry.policy.cancel(reqs)
+        for req in reqs:
+            # idempotent device-side discard: slot released, engine state
+            # rewound to post-prepare (prompt intact, KV/progress gone)
+            self.backend.reset_request(entry.name, req)
+            handle = self.handles.get(req.rid)
+            if err.retryable and req.retries < self.retry.max_retries:
+                entry.policy.request_finished([req])   # predictor forgets
+                req.retries += 1
+                self.retried += 1
+                req.idx = 0                  # prefill replay from node 0
+                req.t_first_issue = None
+                if handle is not None:
+                    handle._running = False
+                delay = self.retry.backoff(req.retries, self._retry_rng)
+                heapq.heappush(
+                    self._arrivals,
+                    (self.now + delay, req.rid, next(self._seq), req,
+                     entry))
+            else:
+                self._terminate(handle, "failed")
 
     def step(self, limit: Optional[float] = None) -> bool:
         """One scheduling step: enqueue due arrivals, collect each model
@@ -444,6 +799,8 @@ class ServingSession:
         same work next step) and burns waiting time until the arbiter
         picks it."""
         self._enqueue_due()
+        if self.cancel_expired:
+            self._expire_due()
         entries = self.registry.entries()
         candidates: List[Tuple[ModelEntry, object, Tuple[str, ...]]] = []
         for entry in entries:
@@ -476,7 +833,13 @@ class ServingSession:
             entry, sb, run = candidates[self.arbiter.pick(candidates,
                                                           self.now)]
         reqs = list(sb.live_requests)
-        latency, per_node = self.backend.execute_run(entry.name, sb, run)
+        try:
+            latency, per_node = self.backend.execute_run(entry.name, sb, run)
+        except BackendError as err:
+            if self.retry is None:
+                raise       # no retry policy armed: pre-failure-model
+            self._on_fault(entry, sb, reqs, err)
+            return True
         self.log.nodes_executed += len(run)
         self.log.runs_executed += 1
         self.log.busy_time += latency
@@ -500,6 +863,9 @@ class ServingSession:
             entry.policy.request_finished(done_now)
         for r in done_now:
             self._finished[r.rid] = r
+            dl = self._rel_deadline(r, entry)
+            self._note_outcome(entry,
+                               ok=(dl is None or r.latency() <= dl + 1e-12))
         return True
 
     def _observe(self, entry: ModelEntry, req: Request):
@@ -534,10 +900,38 @@ class ServingSession:
         self.now = max(self.now, t)
         return self.now
 
-    def drain(self) -> ServeStats:
-        """Run everything outstanding to completion and return stats."""
+    def drain(self, *, stall_limit: int = 1000) -> ServeStats:
+        """Run everything outstanding to completion and return stats.
+
+        Liveness guard: a step that reports progress (``True``) must
+        change *something* observable — the clock, a run/fault count, a
+        retry, or a terminal disposition. ``stall_limit`` consecutive
+        steps with an identical progress signature mean the scheduler is
+        livelocked (e.g. a policy re-offering work the backend can never
+        place); rather than spinning forever, drain raises a
+        ``RuntimeError`` carrying per-model queue/backlog diagnostics."""
+        last_sig = None
+        stalls = 0
         while self.step():
-            pass
+            sig = (self.now, self.log.runs_executed, self.log.faults,
+                   self.retried, self.outstanding, len(self._finished),
+                   len(self._cancelled), len(self._expired),
+                   len(self._failed), len(self._shed))
+            if sig == last_sig:
+                stalls += 1
+                if stalls >= stall_limit:
+                    backlog = {e.name: {"queued": len(e.policy.queue),
+                                        "admitted": e.policy.admitted}
+                               for e in self.registry.entries()}
+                    raise RuntimeError(
+                        f"drain() livelocked: no observable progress for "
+                        f"{stall_limit} consecutive steps at "
+                        f"t={self.now:.6f} — future arrivals="
+                        f"{len(self._arrivals)}, outstanding="
+                        f"{self.outstanding}, per-model backlog={backlog}")
+            else:
+                stalls = 0
+                last_sig = sig
         return self.stats()
 
     def release(self, handle: RequestHandle) -> None:
@@ -546,20 +940,25 @@ class ServingSession:
         handle, request, and token list ever submitted). The request no
         longer contributes to :meth:`stats`.
 
-        Only terminal handles (DONE/REJECTED) may be released: a QUEUED /
-        ADMITTED / RUNNING request's scheduler and backend state is live,
-        and silently dropping the session's view of it mid-flight would
-        orphan tokens, stats, and KV slots — raises ``ValueError`` (a real
+        Only terminal handles (DONE / REJECTED / CANCELLED / EXPIRED /
+        FAILED / SHED) may be released: a QUEUED / ADMITTED / RUNNING
+        request's scheduler and backend state is live, and silently
+        dropping the session's view of it mid-flight would orphan
+        tokens, stats, and KV slots — raises ``ValueError`` (a real
         error, not an ``assert``, so it cannot be optimized away)."""
         if not handle.done:
             raise ValueError(
                 f"cannot release live request {handle.request.rid} "
-                f"(state={handle.state.value}): only DONE/REJECTED handles "
+                f"(state={handle.state.value}): only terminal handles "
                 f"may be released — wait for completion or drain first")
         req = handle.request
         self.handles.pop(req.rid, None)
         self._finished.pop(req.rid, None)
         self._rejected.pop(req.rid, None)
+        self._cancelled.pop(req.rid, None)
+        self._expired.pop(req.rid, None)
+        self._failed.pop(req.rid, None)
+        self._shed.pop(req.rid, None)
         self.backend.release_request(handle.model, req)
 
     # ------------------------------------------------------------------
@@ -576,6 +975,22 @@ class ServingSession:
     def rejected(self) -> List[Request]:
         return list(self._rejected.values())
 
+    @property
+    def cancelled(self) -> List[Request]:
+        return list(self._cancelled.values())
+
+    @property
+    def expired(self) -> List[Request]:
+        return list(self._expired.values())
+
+    @property
+    def failed(self) -> List[Request]:
+        return list(self._failed.values())
+
+    @property
+    def shed(self) -> List[Request]:
+        return list(self._shed.values())
+
     def stats(self) -> ServeStats:
         duration = self.duration if self.duration is not None else self.now
         entries = self.registry.entries()
@@ -589,6 +1004,11 @@ class ServingSession:
                           finished=list(self._finished.values()),
                           rejected=len(self._rejected),
                           rejected_requests=list(self._rejected.values()),
+                          cancelled_requests=list(self._cancelled.values()),
+                          expired_requests=list(self._expired.values()),
+                          failed_requests=list(self._failed.values()),
+                          shed_requests=list(self._shed.values()),
+                          retried=self.retried,
                           classes=dict(self._classes),
                           models={e.name: e.policy.name for e in entries})
 

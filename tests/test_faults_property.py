@@ -1,0 +1,109 @@
+"""Property test (hypothesis): the failure model under ANY interleaving.
+
+Random interleavings of {run a step, cancel a live request, inject a
+transient fault into the next dispatch} over a real JaxEngine session
+must preserve the failure-model invariants:
+
+  * the arena free pool stays an EXACT partition of the slot range after
+    every step (no leak, no double-issue) — eviction, retry-release, and
+    batch release compose with grow/shrink;
+  * handle lifecycle is monotone and terminal: state rank only moves
+    backward when a fault retry rewound the request (its ``retries``
+    counter grew), and a terminal state is absorbing;
+  * survivors — requests that complete despite the chaos — produce
+    tokens BIT-EXACT equal to the same seed's fault-free run.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="install the [test] extra")
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import LazyBatching, SlackPredictor
+from repro.serving import (HandleState, NPUPerfModel, RetryPolicy, PAPER_NPU,
+                           ServingSession, TransientBackendError)
+from repro.serving.engine import JaxEngine
+from test_engine_memory import _pool_consistent, _tiny, _workload
+
+_CFG = _tiny()
+_WL = _workload(_CFG)
+_PERF = NPUPerfModel(PAPER_NPU)
+
+_RANK = {HandleState.QUEUED: 0, HandleState.ADMITTED: 1,
+         HandleState.RUNNING: 2}
+_TERMINAL = (HandleState.DONE, HandleState.REJECTED, HandleState.CANCELLED,
+             HandleState.EXPIRED, HandleState.FAILED, HandleState.SHED)
+
+
+class _ArmedFaults(JaxEngine):
+    """JaxEngine that raises one retryable fault when armed."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self.armed = False
+
+    def execute_run(self, model, sb, node_ids):
+        if self.armed:
+            self.armed = False
+            raise TransientBackendError("armed fault", latency=0.0)
+        return super().execute_run(model, sb, node_ids)
+
+
+def _serve(ops):
+    engine = _ArmedFaults(_CFG, max_len=32, n_slots=2, max_slots=8,
+                          min_slots=2)
+    pol = LazyBatching(SlackPredictor.build([_WL], _PERF, 60.0),
+                       max_batch=4)
+    session = ServingSession(pol, engine, seed=77,
+                             retry=RetryPolicy(max_retries=100,
+                                               backoff_base=1e-4))
+    rng = np.random.default_rng(31)
+    handles = [session.submit(_WL.sample_request(rng, 0.0))
+               for _ in range(4)]
+    last = {h.request.rid: (h.state, h.retries) for h in handles}
+
+    def check():
+        _pool_consistent(engine)
+        for h in handles:
+            prev_state, prev_retries = last[h.request.rid]
+            state, retries = h.state, h.retries
+            if prev_state in _TERMINAL:
+                assert state is prev_state, \
+                    f"terminal state changed: {prev_state} -> {state}"
+            elif state not in _TERMINAL:
+                if _RANK[state] < _RANK[prev_state]:
+                    assert retries > prev_retries, \
+                        f"{prev_state} -> {state} without a retry"
+            last[h.request.rid] = (state, retries)
+
+    for op in ops:
+        if op == 1:
+            live = [h for h in handles if not h.done]
+            if live:
+                live[0].cancel()
+        elif op == 2:
+            engine.armed = True
+        if not session.step():
+            break
+        check()
+    engine.armed = False                 # drain fault-free
+    while session.step():
+        check()
+    return engine, handles
+
+
+@settings(max_examples=6, deadline=None, derandomize=True,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=st.lists(st.integers(0, 2), min_size=1, max_size=12))
+def test_failure_model_invariants_under_any_interleaving(ops):
+    engine, handles = _serve(ops)
+    # everything terminal, nothing resident, pool an exact partition
+    assert all(h.done for h in handles)
+    assert engine.slots_in_use == 0
+    _pool_consistent(engine)
+    # survivors bit-exact vs the fault-free run of the same seed
+    _, clean = _serve([])
+    assert all(h.state is HandleState.DONE for h in clean)
+    for h, ref in zip(handles, clean):
+        if h.state is HandleState.DONE:
+            assert h.tokens == ref.tokens

@@ -270,6 +270,107 @@ def test_contract_flags_retired_executor_alias(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# swallowed-exception
+# ---------------------------------------------------------------------------
+
+SWALLOW_VIOLATIONS = """
+def fetch(x):
+    try:
+        return x.value()
+    except:
+        return None
+
+def probe(x):
+    try:
+        x.poke()
+    except Exception:
+        pass
+"""
+
+SWALLOW_CLEAN = """
+def fetch(x):
+    try:
+        return x.value()
+    except KeyError:
+        return None
+
+def probe(x):
+    try:
+        x.poke()
+    except Exception as e:
+        record(e)                        # handled, not swallowed
+
+def relay(x):
+    try:
+        return x.value()
+    except:
+        raise                            # bare but transparent
+"""
+
+LEAKY_TRY = """
+class Engine:
+    def dispatch(self, model, req):
+        try:
+            slot = self.slot_of(req)
+            return self._run(slot)
+        except RuntimeError:
+            return None                  # slot never released!
+"""
+
+SAFE_TRY = """
+class Engine:
+    def dispatch(self, model, req):
+        try:
+            slot = self.slot_of(req)
+            return self._run(slot)
+        except RuntimeError:
+            self.release_slot(req)
+            return None
+
+    def dispatch2(self, model, req):
+        try:
+            slot = self.slot_of(req)
+            return self._run(slot)
+        finally:
+            self.release_slot(req)
+"""
+
+
+def test_swallow_flags_bare_and_trivial_handlers(tmp_path):
+    res = _lint(tmp_path, "repro/launch/foo.py", SWALLOW_VIOLATIONS,
+                checker="swallowed-exception")
+    assert len(res.new) == 2
+    msgs = " ".join(f.message for f in res.new)
+    assert "bare" in msgs and "black hole" in msgs
+
+
+def test_swallow_accepts_specific_recorded_or_reraised(tmp_path):
+    res = _lint(tmp_path, "repro/launch/foo.py", SWALLOW_CLEAN,
+                checker="swallowed-exception")
+    assert res.new == []
+
+
+def test_swallow_catches_slot_leaking_try_in_serving(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", LEAKY_TRY,
+                checker="swallowed-exception")
+    assert _names(res) == ["swallowed-exception"]
+    assert "leaks the KV slot" in res.new[0].message
+
+
+def test_swallow_accepts_released_or_finally_guarded_try(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", SAFE_TRY,
+                checker="swallowed-exception")
+    assert res.new == []
+
+
+def test_swallow_slot_rule_scoped_to_serving(tmp_path):
+    # the same leaky shape outside repro/serving is rule-B out of scope
+    res = _lint(tmp_path, "repro/launch/custom.py", LEAKY_TRY,
+                checker="swallowed-exception")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
 # fingerprints and baselines
 # ---------------------------------------------------------------------------
 
