@@ -26,9 +26,13 @@ MODELS = ("resnet", "gnmt", "transformer", "mobilenet")
 def run(quick: bool = True) -> dict:
     perf = NPUPerfModel()
     wls = [get_workload(m) for m in MODELS]
-    # namespace node ids per model to prevent cross-model merges
-    for wl in wls:
-        assert all(nid in wl.nodes for nid in wl.nodes)
+    # cross-model merges are impossible only while every model is a
+    # distinct Workload object (SubBatch.mergeable_with compares the
+    # workload by identity — node ids like "head"/"emb" collide)
+    if len({id(wl) for wl in wls}) != len(wls):
+        raise RuntimeError(
+            "co-location bench needs one distinct Workload per model; "
+            f"got aliased workload objects for {MODELS}")
     dur = 0.5 if quick else 2.0
     rec = {}
     pred = SlackPredictor.build(wls, perf, DEFAULT_SLA)

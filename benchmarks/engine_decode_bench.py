@@ -121,16 +121,24 @@ def bench_mode(mode, cfg, wl, *, batch, max_len, tokens):
                  "steady_syncs": s1.host_syncs - s0.host_syncs,
                  "steady_runs": s1.runs - s0.runs,
                  "max_syncs_per_run": s1.max_syncs_per_run}
-    assert sanitizer["steady_retraces"] == 0, \
-        f"{mode}: steady pass retraced {sanitizer['steady_retraces']}x " \
-        f"after a full warmup — a jit-cache key leaked a dynamic scalar"
+    if sanitizer["steady_retraces"] != 0:
+        raise RuntimeError(
+            f"{mode}: steady pass retraced {sanitizer['steady_retraces']}x "
+            f"after a full warmup — a jit-cache key leaked a dynamic scalar")
     if mode == "fused":
-        assert sanitizer["steady_runs"] > 0
-        assert sanitizer["steady_syncs"] <= sanitizer["steady_runs"], \
-            f"fused: {sanitizer['steady_syncs']} host syncs over " \
-            f"{sanitizer['steady_runs']} committed runs — a hidden sync " \
-            f"crept into the hot path"
-        assert s1.max_syncs_per_run <= 1, s1
+        if sanitizer["steady_runs"] <= 0:
+            raise RuntimeError(
+                "fused: timed window committed zero runs — the bench "
+                "drove no decode steps, nothing was measured")
+        if sanitizer["steady_syncs"] > sanitizer["steady_runs"]:
+            raise RuntimeError(
+                f"fused: {sanitizer['steady_syncs']} host syncs over "
+                f"{sanitizer['steady_runs']} committed runs — a hidden "
+                f"sync crept into the hot path")
+        if s1.max_syncs_per_run > 1:
+            raise RuntimeError(
+                f"fused: {s1.max_syncs_per_run} host syncs in one "
+                f"committed run (limit 1) — sanitizer stats: {s1}")
     # median is the headline number: robust to scheduler noise on shared
     # CPU runners (mean/min recorded alongside)
     return (float(np.median(steady)), float(np.mean(steady)),
@@ -172,9 +180,16 @@ def bench_shrink(cfg, wl, *, batch, max_len, repeats=3):
         engine._maybe_shrink()
         jax.block_until_ready(engine.arenas)
         times.append(time.perf_counter() - t0)
-        assert engine.n_shrinks == 1 and engine.n_slots < grown
-        assert all(engine._slot[r.rid] != old_slots[r.rid]
-                   for r in survivors), "shrink did not relocate any slot"
+        if engine.n_shrinks != 1 or engine.n_slots >= grown:
+            raise RuntimeError(
+                f"shrink bench: expected exactly one shrink below "
+                f"{grown} slots, got n_shrinks={engine.n_shrinks}, "
+                f"n_slots={engine.n_slots}")
+        if any(engine._slot[r.rid] == old_slots[r.rid]
+               for r in survivors):
+            raise RuntimeError(
+                "shrink bench: compaction did not relocate the "
+                "surviving slots — the timed cost excludes row copies")
         before_after = (grown, engine.n_slots, b0,
                         engine.memory_stats().bytes_resident)
     slots_before, slots_after, bytes_before, bytes_after = before_after
@@ -245,8 +260,10 @@ def _run(args) -> dict:
               f"over {args.tokens} steady tokens")
     rec["tokens_bitexact"] = (all_toks["legacy"] == all_toks["arena"]
                               == all_toks["fused"])
-    assert rec["tokens_bitexact"], \
-        "generated tokens diverged across dispatch modes"
+    if not rec["tokens_bitexact"]:
+        raise RuntimeError(
+            "generated tokens diverged across dispatch modes — legacy/"
+            "arena/fused must be bit-exact on the same seed")
     rec["speedup_arena_vs_legacy"] = (rec["legacy"]["median_ms_per_token"]
                                       / rec["arena"]["median_ms_per_token"])
     rec["speedup_fused_vs_arena"] = (rec["arena"]["median_ms_per_token"]

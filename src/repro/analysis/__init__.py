@@ -5,12 +5,15 @@ as convention — one host sync per committed run, no wall-clock or
 unseeded RNG in virtual-time paths, bounded retraces via pow2 bucketing,
 no ``assert``-guarded runtime invariants (they vanish under ``python
 -O``), and the model-keyed Backend contract. This package makes them
-*enforced*: an AST lint pass (``python -m repro.analysis.lint src/``)
-with six repo-specific checkers, reported against a committed baseline
-(new findings fail CI; legacy ones are burned down), plus cheap runtime
-sanitizer counters in the JAX engine (``Backend.sanitizer_stats()``)
-that let a test assert "N decode cycles => <= 1 sync per run and 0
-retraces after warmup".
+*enforced*: a lint pass (``python -m repro.analysis.lint src tests
+benchmarks``) with nine repo-specific checkers — six line-level AST
+matchers plus three that run real dataflow (per-function CFGs with
+exception edges, a worklist fixpoint engine, and an import-resolved
+call graph; :mod:`cfg`, :mod:`dataflow`, :mod:`callgraph`) — reported
+against a committed baseline (new findings fail CI; the baseline is
+empty and must stay so), plus cheap runtime sanitizer counters in the
+JAX engine (``Backend.sanitizer_stats()``) that let a test assert "N
+decode cycles => <= 1 sync per run and 0 retraces after warmup".
 
 Checkers (see each module's docstring for the precise rules):
 
@@ -19,15 +22,26 @@ Checkers (see each module's docstring for the precise rules):
   * ``retrace-hazard``   — dynamic shape-derived scalars flowing into
     jit-cache keys outside the pow2 bucketing helpers (``retrace``),
   * ``bare-assert``      — runtime invariants guarded by ``assert`` in
-    production code (``asserts``),
-  * ``determinism``      — wall-clock / unseeded RNG / set-iteration
-    tiebreaks in virtual-time modules (``determinism``),
+    production code (``asserts``; tests are exempt — pytest asserts
+    are the point there),
+  * ``determinism``      — unseeded RNG / set-iteration tiebreaks in
+    virtual-time modules (``determinism``; wall-clock reads moved to
+    ``wallclock-taint``),
   * ``backend-contract`` — Backend subclasses drifting off the
-    model-keyed signatures, or internal use of the retired ``Executor``
-    alias (``contracts``),
+    model-keyed signatures, classes defining only half of the
+    ``reset_request``/``release_request`` residency pair, or internal
+    use of the retired ``Executor`` alias (``contracts``),
   * ``swallowed-exception`` — bare/trivial handlers that eat backend
-    faults, and serving ``try`` bodies that can strand an acquired KV
-    slot without a finally/handler release (``exceptions``).
+    faults (``exceptions``),
+  * ``slot-leak``        — path-sensitive CFG analysis: any path
+    (including exception edges) on which an acquired KV slot leaves a
+    serving function neither released nor owned (``slotleak``),
+  * ``handle-lattice``   — fate/rollback writes that are not legal
+    edges of the declarative lifecycle table shared with the runtime
+    (``handles``, :mod:`repro.core.lifecycle`),
+  * ``wallclock-taint``  — interprocedural taint: wall-clock reads
+    reaching virtual-time modules through the call graph, however many
+    helpers they are laundered through (``wallclock``).
 
 Suppress a legitimate finding with a trailing (or preceding-line)
 comment: ``# reprolint: disable=<checker>[,<checker>]``.

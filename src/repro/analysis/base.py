@@ -39,15 +39,18 @@ def rel_path(path) -> str:
     """Repo-stable identity for ``path``: the posix path from its last
     ``repro/`` package component down (``repro/serving/engine.py``), so
     fingerprints agree no matter where the tree is checked out or which
-    directory the lint runs from. Paths outside a ``repro`` package fall
-    back to their posix form as given."""
+    directory the lint runs from. ``tests/`` and ``benchmarks/`` trees
+    (now also linted) get the same treatment — ``tests/test_foo.py``,
+    ``benchmarks/fig12_latency.py``. Anything else falls back to its
+    posix form as given."""
     p = Path(path).as_posix()
-    marker = "/repro/"
-    i = p.rfind(marker)
-    if i >= 0:
-        return "repro/" + p[i + len(marker):]
-    if p.startswith("repro/"):
-        return p
+    for root in ("repro", "tests", "benchmarks"):
+        marker = f"/{root}/"
+        i = p.rfind(marker)
+        if i >= 0:
+            return root + "/" + p[i + len(marker):]
+        if p.startswith(root + "/"):
+            return p
     return p
 
 
@@ -59,6 +62,8 @@ class Finding:
     message: str
     snippet: str = ""        # the offending source line, stripped
     occurrence: int = 0      # index among same-(checker, path, snippet)
+    file: str = ""           # real on-disk path (CI annotations only;
+    #                          NOT part of the fingerprint)
 
     @property
     def fingerprint(self) -> str:
@@ -107,7 +112,8 @@ class SourceFile:
         if self.suppressed(checker, lineno):
             return None
         return Finding(checker=checker, path=self.rel, line=lineno,
-                       message=message, snippet=self.line_at(lineno))
+                       message=message, snippet=self.line_at(lineno),
+                       file=str(self.path))
 
 
 class Checker:
@@ -121,6 +127,21 @@ class Checker:
         return True
 
     def check(self, sf: SourceFile) -> Iterable[Finding]:
+        raise NotImplementedError
+
+
+class ProjectChecker:
+    """A whole-project (interprocedural) rule family: runs ONCE over the
+    per-file facts of every linted file (see :mod:`callgraph`) instead
+    of per file — which is also what lets the ``--cache`` layer skip
+    re-parsing unchanged files while interprocedural checks still see
+    the whole tree."""
+
+    name = "abstract-project"
+    description = ""
+
+    def check_project(self, facts: Dict[str, object],
+                      graph) -> Iterable[Finding]:
         raise NotImplementedError
 
 
@@ -194,6 +215,17 @@ def is_engine_file(rel: str) -> bool:
         or rel == "repro/serving/engine.py"
 
 
+def is_test_file(rel: str) -> bool:
+    """Pytest tree: asserts are the idiom there (bare-assert exempt),
+    and tests deliberately poke deprecated shims (Executor-alias rule
+    exempt)."""
+    return rel.startswith("tests/") or "/tests/" in rel
+
+
+def is_benchmark_file(rel: str) -> bool:
+    return rel.startswith("benchmarks/") or "/benchmarks/" in rel
+
+
 #: Modules whose notion of time is VIRTUAL (the discrete-event clock) or
 #: that feed it: wall-clock reads and unseeded RNG here silently break
 #: replay determinism and sim/JAX parity. ``launch/roofline.py`` and
@@ -215,6 +247,10 @@ VIRTUAL_TIME_SUFFIXES = (
 
 def is_virtual_time_file(rel: str) -> bool:
     if "repro/core/" in rel:
+        return True
+    # paper-figure benchmarks drive the virtual-time simulator: their
+    # reported latencies/SLAs must come from the event clock too
+    if is_benchmark_file(rel) and Path(rel).name.startswith("fig"):
         return True
     return any(rel.endswith(sfx) for sfx in VIRTUAL_TIME_SUFFIXES)
 

@@ -1,0 +1,276 @@
+"""Module-level call graph over the linted tree, as cacheable facts.
+
+Interprocedural checkers (``wallclock-taint``) need to know who calls
+whom across files. Exact Python call resolution is undecidable; this
+graph resolves by *import neighborhood* instead of by global name —
+coarse enough to over-approximate, tight enough that ``server.run()``
+does not alias a benchmark's unrelated ``run()``:
+
+  * a bare call ``foo()`` resolves to the caller file's own ``foo``,
+    or to the symbol a ``from m import foo`` binding names,
+  * a dotted call ``alias.foo()`` whose root is an imported module
+    alias resolves into that module,
+  * a dotted call with an unknown root (``self.foo()``, ``obj.foo()``)
+    resolves to every def named ``foo`` in the caller's file or in any
+    module the caller imports — the dynamic-dispatch neighborhood,
+  * calls to a Backend-contract method (``execute_run``, ``prepare``,
+    ...) are **polymorphic barrier sites**: the callee could be the
+    analytic simulator or the JAX engine, and the contract itself is
+    the sanctioned wall-time boundary (the session's virtual clock
+    advances by whatever latency the backend returns — virtual in sim,
+    measured in JAX). Taint never propagates through a barrier name.
+  * test files are callers, never callees: production code cannot call
+    into tests, and a test helper sharing a production name must not
+    taint it by coincidence.
+
+:class:`FileFacts` is a plain-dict round-trip (``to_dict``/
+``from_dict``) so the ``--cache`` layer can persist facts per content
+hash and interprocedural passes run without re-parsing unchanged files.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .base import SourceFile, dotted_name, is_test_file
+from .contracts import MODEL_KEYED
+
+#: Backend-contract method names: polymorphic call sites, taint barriers.
+BARRIER_METHODS = frozenset(MODEL_KEYED) | frozenset({"reset_request"})
+
+#: Wall-clock sources (the same set the old intraprocedural determinism
+#: rule matched; recorded here as facts, judged by the taint checker).
+WALL_CLOCK = frozenset({
+    "time.time", "time.perf_counter", "time.monotonic",
+    "time.process_time", "time.clock",
+    "datetime.now", "datetime.utcnow", "datetime.today",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+})
+
+#: checker name whose suppressions gate clock facts (a suppressed read
+#: is an audited boundary: it neither reports nor taints)
+CHECKER = "wallclock-taint"
+
+
+class FuncFacts:
+    """One function's interprocedural surface."""
+
+    __slots__ = ("qualname", "name", "lineno", "calls", "clock_reads")
+
+    def __init__(self, qualname: str, name: str, lineno: int):
+        self.qualname = qualname
+        self.name = name                 # bare (last) name
+        self.lineno = lineno
+        # [{'name', 'dotted', 'line', 'snippet', 'suppressed'}]
+        self.calls: List[dict] = []
+        # [{'dotted', 'line', 'snippet', 'suppressed'}]
+        self.clock_reads: List[dict] = []
+
+    def to_dict(self) -> dict:
+        return {"qualname": self.qualname, "name": self.name,
+                "lineno": self.lineno, "calls": self.calls,
+                "clock_reads": self.clock_reads}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FuncFacts":
+        f = cls(d["qualname"], d["name"], d["lineno"])
+        f.calls = d["calls"]
+        f.clock_reads = d["clock_reads"]
+        return f
+
+
+class FileFacts:
+    __slots__ = ("rel", "functions", "imports")
+
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.functions: Dict[str, FuncFacts] = {}
+        # local alias -> dotted target ("srv" -> "repro.serving.server",
+        # "run_policy" -> "repro.serving.server.run_policy")
+        self.imports: Dict[str, str] = {}
+
+    def to_dict(self) -> dict:
+        return {"rel": self.rel, "imports": self.imports,
+                "functions": {q: f.to_dict()
+                              for q, f in self.functions.items()}}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FileFacts":
+        ff = cls(d["rel"])
+        ff.imports = d.get("imports", {})
+        ff.functions = {q: FuncFacts.from_dict(fd)
+                        for q, fd in d["functions"].items()}
+        return ff
+
+
+def _package_of(rel: str) -> List[str]:
+    """['repro', 'serving'] for 'repro/serving/session.py'."""
+    parts = rel.split("/")
+    return parts[:-1]
+
+
+def _record_imports(sf: SourceFile, facts: FileFacts) -> None:
+    pkg = _package_of(sf.rel)
+    for node in ast.walk(sf.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                local = alias.asname or alias.name.split(".")[0]
+                target = alias.name if alias.asname else \
+                    alias.name.split(".")[0]
+                facts.imports[local] = target
+                # the full dotted module is reachable through the root
+                if alias.asname is None and "." in alias.name:
+                    facts.imports.setdefault(alias.name, alias.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:                       # relative: resolve
+                base = pkg[:len(pkg) - (node.level - 1)] if node.level > 1 \
+                    else pkg
+                mod = ".".join(base + ([node.module] if node.module else []))
+            else:
+                mod = node.module or ""
+            for alias in node.names:
+                if alias.name == "*":
+                    continue
+                local = alias.asname or alias.name
+                facts.imports[local] = f"{mod}.{alias.name}" if mod \
+                    else alias.name
+
+
+def extract_facts(sf: SourceFile) -> FileFacts:
+    facts = FileFacts(sf.rel)
+    _record_imports(sf, facts)
+
+    def visit(body: Iterable[ast.AST], qual: List[str],
+              fn: Optional[FuncFacts]):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                q = ".".join(qual + [node.name])
+                sub = FuncFacts(q, node.name, node.lineno)
+                facts.functions[q] = sub
+                visit(node.body, qual + [node.name], sub)
+            elif isinstance(node, ast.ClassDef):
+                visit(node.body, qual + [node.name], fn)
+            else:
+                record(node, fn)
+
+    def record(stmt: ast.AST, fn: Optional[FuncFacts]):
+        if fn is None:
+            fn = facts.functions.setdefault(
+                "<module>", FuncFacts("<module>", "<module>", 1))
+        for call in ast.walk(stmt):
+            if not isinstance(call, ast.Call):
+                continue
+            dn = dotted_name(call.func)
+            if not dn:
+                continue
+            line = call.lineno
+            suppressed = sf.suppressed(CHECKER, line)
+            if dn in WALL_CLOCK:
+                fn.clock_reads.append(
+                    {"dotted": dn, "line": line,
+                     "snippet": sf.line_at(line),
+                     "suppressed": suppressed})
+            else:
+                fn.calls.append(
+                    {"name": dn.rsplit(".", 1)[-1], "dotted": dn,
+                     "line": line, "snippet": sf.line_at(line),
+                     "suppressed": suppressed})
+
+    visit(sf.tree.body, [], None)
+    return facts
+
+
+class CallGraph:
+    """Import-neighborhood call resolution over :class:`FileFacts`."""
+
+    def __init__(self, all_facts: Dict[str, FileFacts]):
+        self.files = all_facts
+        # dotted module -> rel of the scanned file implementing it
+        self.module_rel: Dict[str, str] = {}
+        for rel in all_facts:
+            if rel.endswith(".py"):
+                dotted = rel[:-3].replace("/", ".")
+                if dotted.endswith(".__init__"):
+                    dotted = dotted[:-len(".__init__")]
+                self.module_rel[dotted] = rel
+        # (rel, bare name) -> [qualnames] of defs in that file
+        self._defs: Dict[Tuple[str, str], List[str]] = {}
+        for rel, ff in all_facts.items():
+            for q, fn in ff.functions.items():
+                self._defs.setdefault((rel, fn.name), []).append(q)
+        # rel -> rels of the modules it imports (its neighborhood)
+        self._neighbors: Dict[str, Set[str]] = {}
+        for rel, ff in all_facts.items():
+            hood: Set[str] = set()
+            for target in ff.imports.values():
+                r = self._module_file(target)
+                if r is None and "." in target:   # from m import symbol
+                    r = self._module_file(target.rsplit(".", 1)[0])
+                if r is not None:
+                    hood.add(r)
+            self._neighbors[rel] = hood
+
+    # ------------------------------------------------------------------
+    def _module_file(self, dotted: str) -> Optional[str]:
+        rel = self.module_rel.get(dotted)
+        if rel is not None and not is_test_file(rel):
+            return rel
+        return None
+
+    def _defs_in(self, rel: Optional[str], name: str) -> List[Tuple[str, str]]:
+        if rel is None or is_test_file(rel):
+            return []
+        return [(rel, q) for q in self._defs.get((rel, name), ())]
+
+    # ------------------------------------------------------------------
+    def resolve(self, rel: str, call: dict) -> List[Tuple[str, str]]:
+        """Possible (rel, qualname) callees of one recorded call."""
+        name = call["name"]
+        dotted = call.get("dotted", name)
+        ff = self.files[rel]
+        out: List[Tuple[str, str]] = []
+        seen: Set[Tuple[str, str]] = set()
+
+        def add(cands: Iterable[Tuple[str, str]]):
+            for c in cands:
+                if c not in seen:
+                    seen.add(c)
+                    out.append(c)
+
+        def own_defs():
+            # a file can always call its own functions — even a test
+            # file (the cross-file exclusion lives in ``_defs_in``)
+            return [(rel, q) for q in self._defs.get((rel, name), ())]
+
+        if "." not in dotted:
+            # bare call: this file's own def, plus the imported symbol
+            add(own_defs())
+            target = ff.imports.get(name)
+            if target is not None and "." in target:
+                mod, leaf = target.rsplit(".", 1)
+                add(self._defs_in(self._module_file(mod), leaf))
+            return out
+
+        root = dotted.split(".", 1)[0]
+        target = ff.imports.get(root)
+        if target is not None:
+            # alias.path.leaf -> module(alias.path) . leaf
+            full = target + dotted[len(root):]
+            mod, leaf = full.rsplit(".", 1)
+            r = self._module_file(mod)
+            if r is not None:
+                add(self._defs_in(r, leaf))
+                return out
+            # `from m import Class` and the call is Class.method(...)
+            r = self._module_file(target) or (
+                self._module_file(target.rsplit(".", 1)[0])
+                if "." in target else None)
+            if r is not None:
+                add(self._defs_in(r, name))
+                return out
+        # unknown receiver (self.foo(), obj.foo()): the dynamic-dispatch
+        # neighborhood — this file and everything it imports
+        add(own_defs())
+        for nrel in sorted(self._neighbors.get(rel, ())):
+            add(self._defs_in(nrel, name))
+        return out

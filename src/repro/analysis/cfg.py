@@ -1,0 +1,306 @@
+"""Per-function control-flow graphs with explicit exception edges.
+
+The syntactic checkers look at statements one at a time; the PR 7 bug
+class (a KV slot stranded when an exception skips the release epilogue)
+is a property of *paths*, so the path-sensitive checkers
+(:mod:`slotleak`, :mod:`handles`) run over a real CFG instead.
+
+Graph shape
+-----------
+One :class:`CFG` per ``def``. Nodes are single AST statements plus four
+synthetic kinds:
+
+  * ``entry``  — function entry,
+  * ``exit``   — normal return / fall-off-the-end,
+  * ``raise``  — the exceptional exit (an exception escaping the
+    function),
+  * ``branch`` — the test of an ``if``/``while`` (or the iteration step
+    of a ``for``), with ``true``/``false`` out-edges carrying the test
+    expression so analyses can refine state per branch (``is None`` /
+    ``is not None`` narrowing).
+
+Every statement or branch node gets an ``exc`` out-edge to its current
+exception targets: the enclosing ``try``'s handler entries, the
+enclosing ``finally`` entry, or the function's ``raise`` exit. Whether
+that edge is *live* is the analysis's call (``Analysis.may_raise`` in
+:mod:`dataflow`) — the graph over-approximates, the lattice decides.
+On an ``exc`` edge the dataflow engine propagates the statement's PRE
+state (the statement may not have completed), which is the conservative
+direction for may-leak analyses.
+
+Lowering decisions (all over-approximations, safe for may-analyses):
+
+  * ``finally`` bodies are lowered ONCE with multiple continuations:
+    normal completions and exceptional escapes both flow into the one
+    finally block, and its exit flows to both the after-try point and
+    the outer exception targets. States merge at the finally entry —
+    coarser than path duplication, but a ``finally`` that releases a
+    resource makes every continuation safe, which is the property the
+    checkers need.
+  * An ``except:``/``except (Base)Exception`` handler is treated as
+    catch-all: try-body exceptions then cannot escape past it. Typed
+    handlers may not match, so the body also keeps an edge to the outer
+    targets.
+  * ``with`` is an enter statement plus its body; ``__exit__``
+    suppression of exceptions is not modeled (body exceptions flow to
+    the enclosing targets — for resource analyses the context manager's
+    cleanup must be visible as explicit calls anyway).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Tuple
+
+#: edge kinds
+NORMAL, EXC, TRUE, FALSE = "normal", "exc", "true", "false"
+
+_CATCH_ALL = ("Exception", "BaseException")
+
+
+class Node:
+    """One CFG node: a statement, a branch test, or a synthetic
+    entry/exit/raise node."""
+
+    __slots__ = ("nid", "kind", "stmt", "test")
+
+    def __init__(self, nid: int, kind: str, stmt: Optional[ast.AST] = None,
+                 test: Optional[ast.AST] = None):
+        self.nid = nid
+        self.kind = kind            # entry | exit | raise | stmt | branch
+        self.stmt = stmt            # the AST statement (None on synthetic)
+        self.test = test            # branch nodes: the test expression
+
+    def __repr__(self):
+        what = type(self.stmt).__name__ if self.stmt is not None else ""
+        return f"<Node {self.nid} {self.kind} {what}>"
+
+
+class Edge:
+    __slots__ = ("src", "dst", "kind")
+
+    def __init__(self, src: int, dst: int, kind: str):
+        self.src = src
+        self.dst = dst
+        self.kind = kind
+
+    def __repr__(self):
+        return f"<Edge {self.src} -{self.kind}-> {self.dst}>"
+
+
+class CFG:
+    """Control-flow graph of one function."""
+
+    def __init__(self, func: ast.AST):
+        self.func = func
+        self.nodes: Dict[int, Node] = {}
+        self.succs: Dict[int, List[Edge]] = {}
+        self.preds: Dict[int, List[Edge]] = {}
+        self.entry = self._new("entry")
+        self.exit = self._new("exit")
+        self.raise_exit = self._new("raise")
+
+    # ------------------------------------------------------------------
+    def _new(self, kind: str, stmt=None, test=None) -> Node:
+        nid = len(self.nodes)
+        node = Node(nid, kind, stmt, test)
+        self.nodes[nid] = node
+        self.succs[nid] = []
+        self.preds[nid] = []
+        return node
+
+    def _edge(self, src: int, dst: int, kind: str):
+        for e in self.succs[src]:
+            if e.dst == dst and e.kind == kind:
+                return
+        e = Edge(src, dst, kind)
+        self.succs[src].append(e)
+        self.preds[dst].append(e)
+
+    # ------------------------------------------------------------------
+    def stmt_nodes(self) -> List[Node]:
+        return [n for n in self.nodes.values() if n.stmt is not None]
+
+
+#: a frontier is a list of (node-id, edge-kind) dangling edges awaiting
+#: their destination
+Frontier = List[Tuple[int, str]]
+
+
+def _is_catch_all(handler: ast.ExceptHandler) -> bool:
+    if handler.type is None:
+        return True
+    t = handler.type
+    names = t.elts if isinstance(t, ast.Tuple) else [t]
+    for n in names:
+        base = n.attr if isinstance(n, ast.Attribute) else \
+            (n.id if isinstance(n, ast.Name) else "")
+        if base in _CATCH_ALL:
+            return True
+    return False
+
+
+class _Builder:
+    def __init__(self, func: ast.AST):
+        self.cfg = CFG(func)
+        # stack of (continue-target nid, break-frontier accumulator)
+        self.loops: List[Tuple[int, Frontier]] = []
+
+    # ------------------------------------------------------------------
+    def build(self) -> CFG:
+        exc = [self.cfg.raise_exit.nid]
+        frontier = self.stmts(self.cfg.func.body,
+                              [(self.cfg.entry.nid, NORMAL)], exc)
+        self.connect(frontier, self.cfg.exit.nid)
+        return self.cfg
+
+    def connect(self, frontier: Frontier, dst: int):
+        for nid, kind in frontier:
+            self.cfg._edge(nid, dst, kind)
+
+    def exc_edges(self, nid: int, exc: List[int]):
+        for target in exc:
+            self.cfg._edge(nid, target, EXC)
+
+    # ------------------------------------------------------------------
+    def stmts(self, body: List[ast.stmt], frontier: Frontier,
+              exc: List[int]) -> Frontier:
+        for stmt in body:
+            frontier = self.stmt(stmt, frontier, exc)
+        return frontier
+
+    def stmt(self, stmt: ast.stmt, frontier: Frontier,
+             exc: List[int]) -> Frontier:
+        c = self.cfg
+        if isinstance(stmt, ast.If):
+            branch = c._new("branch", stmt, stmt.test)
+            self.connect(frontier, branch.nid)
+            self.exc_edges(branch.nid, exc)
+            t = self.stmts(stmt.body, [(branch.nid, TRUE)], exc)
+            f = self.stmts(stmt.orelse, [(branch.nid, FALSE)], exc) \
+                if stmt.orelse else [(branch.nid, FALSE)]
+            return t + f
+
+        if isinstance(stmt, ast.While):
+            header = c._new("branch", stmt, stmt.test)
+            self.connect(frontier, header.nid)
+            self.exc_edges(header.nid, exc)
+            breaks: Frontier = []
+            self.loops.append((header.nid, breaks))
+            body = self.stmts(stmt.body, [(header.nid, TRUE)], exc)
+            self.loops.pop()
+            self.connect(body, header.nid)           # loop back edge
+            after: Frontier = [(header.nid, FALSE)]
+            if stmt.orelse:                          # runs on normal exit
+                after = self.stmts(stmt.orelse, after, exc)
+            return after + breaks
+
+        if isinstance(stmt, ast.For):
+            # the header models the iteration step: TRUE = next item
+            # bound, FALSE = iterator exhausted; no test expression
+            header = c._new("branch", stmt, None)
+            self.connect(frontier, header.nid)
+            self.exc_edges(header.nid, exc)
+            breaks = []
+            self.loops.append((header.nid, breaks))
+            body = self.stmts(stmt.body, [(header.nid, TRUE)], exc)
+            self.loops.pop()
+            self.connect(body, header.nid)
+            after = [(header.nid, FALSE)]
+            if stmt.orelse:
+                after = self.stmts(stmt.orelse, after, exc)
+            return after + breaks
+
+        if isinstance(stmt, ast.Try):
+            return self.try_stmt(stmt, frontier, exc)
+
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            enter = c._new("stmt", stmt)
+            self.connect(frontier, enter.nid)
+            self.exc_edges(enter.nid, exc)           # item exprs can raise
+            return self.stmts(stmt.body, [(enter.nid, NORMAL)], exc)
+
+        if isinstance(stmt, ast.Return):
+            node = c._new("stmt", stmt)
+            self.connect(frontier, node.nid)
+            self.exc_edges(node.nid, exc)            # value expr can raise
+            c._edge(node.nid, c.exit.nid, NORMAL)
+            return []
+
+        if isinstance(stmt, ast.Raise):
+            node = c._new("stmt", stmt)
+            self.connect(frontier, node.nid)
+            self.exc_edges(node.nid, exc)            # the ONLY out-edges
+            return []
+
+        if isinstance(stmt, ast.Break):
+            node = c._new("stmt", stmt)
+            self.connect(frontier, node.nid)
+            if self.loops:
+                self.loops[-1][1].append((node.nid, NORMAL))
+            return []
+
+        if isinstance(stmt, ast.Continue):
+            node = c._new("stmt", stmt)
+            self.connect(frontier, node.nid)
+            if self.loops:
+                c._edge(node.nid, self.loops[-1][0], NORMAL)
+            return []
+
+        # plain statement (incl. nested def/class, treated opaquely)
+        node = c._new("stmt", stmt)
+        self.connect(frontier, node.nid)
+        self.exc_edges(node.nid, exc)
+        return [(node.nid, NORMAL)]
+
+    # ------------------------------------------------------------------
+    def try_stmt(self, stmt: ast.Try, frontier: Frontier,
+                 exc: List[int]) -> Frontier:
+        c = self.cfg
+        fin_entry: Optional[Node] = None
+        fin_frontier: Frontier = []
+        # targets an exception escaping THIS try flows to
+        escape = exc
+        if stmt.finalbody:
+            fin_entry = c._new("stmt", stmt)         # anchor for the block
+            escape = [fin_entry.nid]
+
+        handler_entries = [c._new("stmt", h) for h in stmt.handlers]
+        catch_all = any(_is_catch_all(h) for h in stmt.handlers)
+        body_exc = [n.nid for n in handler_entries] \
+            + ([] if (catch_all and stmt.handlers) else escape)
+
+        body_frontier = self.stmts(stmt.body, frontier, body_exc)
+        # orelse runs only after the body completed without exception
+        normal = self.stmts(stmt.orelse, body_frontier, escape) \
+            if stmt.orelse else body_frontier
+        for h, entry in zip(stmt.handlers, handler_entries):
+            normal = normal + self.stmts(h.body, [(entry.nid, NORMAL)],
+                                         escape)
+
+        if fin_entry is None:
+            return normal
+        # finally lowered once: every continuation (normal + escape)
+        # funnels through it, and its exit feeds both the after point
+        # (the returned frontier) and the outer exception targets
+        self.connect(normal, fin_entry.nid)
+        fin_frontier = self.stmts(stmt.finalbody,
+                                  [(fin_entry.nid, NORMAL)], exc)
+        for nid, kind in fin_frontier:
+            for target in exc:
+                c._edge(nid, target, kind)
+        return fin_frontier
+
+
+def build_cfg(func: ast.AST) -> CFG:
+    """Build the CFG of one ``FunctionDef``/``AsyncFunctionDef``."""
+    if not isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        raise TypeError(f"build_cfg wants a function def, got "
+                        f"{type(func).__name__}")
+    return _Builder(func).build()
+
+
+def functions(tree: ast.AST):
+    """Yield every (possibly nested) function def in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node

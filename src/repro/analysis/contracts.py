@@ -11,16 +11,27 @@ checker catches the drift statically:
   * every class whose (textual) bases include ``Backend`` or
     ``MultiBackend`` must give each overridden contract method a first
     parameter named ``model``,
+  * any class overriding EITHER of the per-request residency hooks
+    (``reset_request`` — fault recovery drops the slot, ``release_
+    request`` — the session forgets the request) must override BOTH:
+    a backend tracking residency with only one of the pair leaks
+    phantom slots on whichever path it ignores (exactly the
+    ``SimExecutor`` gap this rule was added to close),
   * nothing in production code may import or reference the retired
     ``Executor`` alias (it resolves to ``Backend`` behind a
-    DeprecationWarning for external callers only).
+    DeprecationWarning for external callers only; the test tree is
+    exempt — deprecation tests must poke the shim).
 """
 from __future__ import annotations
 
 import ast
 from typing import Iterable, List
 
-from .base import Checker, Finding, SourceFile
+from .base import Checker, Finding, SourceFile, is_test_file
+
+#: per-request residency hooks: overriding one without the other leaves
+#: a path (fault reset vs. handle release) that never frees the slot
+RESIDENCY_PAIR = ("reset_request", "release_request")
 
 #: Contract methods whose FIRST parameter after self is the model key.
 MODEL_KEYED = {
@@ -50,7 +61,9 @@ class BackendContractChecker(Checker):
     def check(self, sf: SourceFile) -> Iterable[Finding]:
         findings: List[Finding] = []
         findings.extend(self._check_signatures(sf))
-        findings.extend(self._check_executor_refs(sf))
+        findings.extend(self._check_residency_pair(sf))
+        if not is_test_file(sf.rel):
+            findings.extend(self._check_executor_refs(sf))
         return findings
 
     # ------------------------------------------------------------------
@@ -76,6 +89,27 @@ class BackendContractChecker(Checker):
                         f"is model-keyed (MultiBackend routes on it)")
                     if f is not None:
                         yield f
+
+    def _check_residency_pair(self, sf: SourceFile):
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            defined = {item.name for item in node.body
+                       if isinstance(item, (ast.FunctionDef,
+                                            ast.AsyncFunctionDef))}
+            have = defined & set(RESIDENCY_PAIR)
+            if not have or have == set(RESIDENCY_PAIR):
+                continue
+            missing = (set(RESIDENCY_PAIR) - have).pop()
+            present = have.pop()
+            f = sf.finding(
+                self.name, node,
+                f"{node.name} overrides {present} but not {missing} — "
+                f"a backend tracking per-request residency needs the "
+                f"full reset/release pair, or the path through "
+                f"{missing} strands its slot")
+            if f is not None:
+                yield f
 
     def _check_executor_refs(self, sf: SourceFile):
         for node in ast.walk(sf.tree):

@@ -1,0 +1,120 @@
+"""Worklist fixpoint engine over per-checker abstract lattices.
+
+An :class:`Analysis` supplies the lattice (``initial``/``join``) and the
+semantics (``transfer``/``refine``/``may_raise``); :func:`analyze` runs
+it to fixpoint over a :class:`~repro.analysis.cfg.CFG` and returns the
+in-state of every node — including the synthetic ``exit`` and ``raise``
+nodes, whose in-states are exactly "what can be true when the function
+returns normally" and "what can be true when an exception escapes".
+
+Abstract states are plain dicts (variable -> lattice value, compared
+with ``==``); a variable absent from the dict is bottom. Every checker
+lattice here is finite and ``join`` is monotone, so the worklist
+terminates (loops converge in at most |lattice| passes).
+
+Edge semantics:
+
+  * ``normal`` out of a statement node: ``transfer(state, stmt)`` — the
+    statement completed.
+  * ``exc`` out of any node: the PRE state, i.e. the state *before* the
+    statement ran — an exception means it may not have completed, which
+    is the conservative direction for may-leak analyses. The edge is
+    only propagated when ``may_raise(node)`` says so; analyses declare
+    release/bookkeeping statements non-raising so the canonical
+    pop → guard → append idiom does not flag its own epilogue.
+  * ``true``/``false`` out of a branch node: ``transfer`` then
+    ``refine(state, test, branch)`` — the hook where ``x is None`` /
+    ``x is not None`` guards narrow a maybe-acquired token.
+"""
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Dict, Optional
+
+from .cfg import CFG, EXC, FALSE, TRUE, Node
+
+State = Dict[str, object]
+
+
+class Analysis:
+    """Abstract semantics of one dataflow checker. Subclass and override;
+    the defaults are the identity analysis."""
+
+    def initial(self) -> State:
+        return {}
+
+    def join(self, a: State, b: State) -> State:
+        """Least upper bound of two states (may-analysis union)."""
+        out = dict(a)
+        for k, v in b.items():
+            if k not in out:
+                out[k] = v
+            elif out[k] != v:
+                out[k] = self.join_values(out[k], v)
+        return out
+
+    def join_values(self, a, b):
+        """LUB of two lattice values for one variable."""
+        return a
+
+    def transfer(self, state: State, stmt: ast.AST) -> State:
+        return state
+
+    def refine(self, state: State, test: Optional[ast.AST],
+               branch: bool) -> State:
+        return state
+
+    def may_raise(self, node: Node) -> bool:
+        """Whether ``node``'s exception out-edge is live. Default: a
+        branch test without calls cannot raise (``x is None``, bare
+        names, attribute truthiness); everything else may."""
+        if node.kind == "branch":
+            return _has_call(node.test)
+        if isinstance(node.stmt, ast.Raise):
+            return True                          # structural, always
+        return True
+
+
+def _has_call(expr: Optional[ast.AST]) -> bool:
+    if expr is None:
+        return True                              # for-loop iteration step
+    return any(isinstance(n, ast.Call) for n in ast.walk(expr))
+
+
+def analyze(cfg: CFG, analysis: Analysis) -> Dict[int, State]:
+    """Run ``analysis`` to fixpoint; returns {node-id: in-state}.
+    Unreachable nodes have no entry."""
+    in_states: Dict[int, State] = {cfg.entry.nid: analysis.initial()}
+    worklist = deque([cfg.entry.nid])
+    queued = {cfg.entry.nid}
+    while worklist:
+        nid = worklist.popleft()
+        queued.discard(nid)
+        node = cfg.nodes[nid]
+        in_s = in_states[nid]
+        post = None                              # lazily computed transfer
+        for edge in cfg.succs[nid]:
+            if edge.kind == EXC:
+                if not (isinstance(node.stmt, ast.Raise)
+                        or analysis.may_raise(node)):
+                    continue
+                out = in_s                       # pre-state, see module doc
+            elif edge.kind in (TRUE, FALSE):
+                if post is None:
+                    post = analysis.transfer(in_s, node.stmt) \
+                        if node.stmt is not None else in_s
+                out = analysis.refine(post, node.test, edge.kind == TRUE)
+            else:
+                if post is None:
+                    post = analysis.transfer(in_s, node.stmt) \
+                        if node.stmt is not None else in_s
+                out = post
+            old = in_states.get(edge.dst)
+            new = out if old is None else analysis.join(old, out)
+            if old is None or new != old:
+                in_states[edge.dst] = new
+                if edge.dst not in queued:
+                    worklist.append(edge.dst)
+                    queued.add(edge.dst)
+    return in_states

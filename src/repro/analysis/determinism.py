@@ -1,23 +1,18 @@
-"""Checker 4 — ``determinism``: wall-clock, unseeded RNG, set-order ties.
+"""Checker 4 — ``determinism``: unseeded RNG and set-order ties.
 
 The simulator's clock is VIRTUAL: every latency, deadline, and slack
 value derives from the discrete-event ``session.now``, which is what
-makes traces replayable bit-identically and sim/JAX parity testable. A
-``time.time()`` read, an unseeded RNG draw, or a scheduling tiebreak
-that iterates a ``set`` in hash order inside those modules injects
-nondeterminism no equivalence grid can catch — the run still "passes",
-just differently every time.
+makes traces replayable bit-identically and sim/JAX parity testable. An
+unseeded RNG draw, or a scheduling tiebreak that iterates a ``set`` in
+hash order inside those modules injects nondeterminism no equivalence
+grid can catch — the run still "passes", just differently every time.
 
-Scope: the virtual-time modules (``core/``, ``serving/server.py``,
-``serving/session.py``, sim-path serving modules) plus the audited
-launch tools (``roofline.py`` / ``dryrun.py``), where wall-clock probe
-timing is legitimate but must carry an explicit suppression so new
-wall-clock reads are a conscious decision.
+Scope: the virtual-time modules (``core/``, sim-path serving modules,
+``benchmarks/fig*``) plus the audited launch tools (``roofline.py`` /
+``dryrun.py``).
 
 Rules:
 
-  * wall-clock reads: ``time.time/perf_counter/monotonic/process_time``,
-    ``datetime.now/utcnow/today``,
   * unseeded / global-state RNG: ``np.random.default_rng()`` with no
     seed, module-level ``np.random.<draw>()`` (global RNG), stdlib
     ``random.<draw>()``, ``np.random.seed`` (global-state mutation),
@@ -26,6 +21,12 @@ Rules:
     key maps equal resolve by set iteration order, which varies across
     processes (PYTHONHASHSEED) for str elements. (Key-less min/max/
     sorted over comparable elements is a total order and stays clean.)
+
+Wall-clock reads used to be a third rule family here; they are now the
+``wallclock-taint`` project checker (:mod:`wallclock`), which also
+catches the interprocedural laundering this per-line rule never could —
+a helper in ``launch/`` reading ``perf_counter()`` for a caller in
+``core/``.
 """
 from __future__ import annotations
 
@@ -35,12 +36,6 @@ from typing import Iterable, List
 from .base import (Checker, Finding, SourceFile, dotted_name,
                    is_virtual_time_file)
 
-_WALL_CLOCK = {
-    "time.time", "time.perf_counter", "time.monotonic",
-    "time.process_time", "time.clock",
-    "datetime.now", "datetime.utcnow", "datetime.today",
-    "datetime.datetime.now", "datetime.datetime.utcnow",
-}
 _GLOBAL_RNG_DRAWS = {
     "random", "rand", "randn", "randint", "integers", "choice", "shuffle",
     "permutation", "normal", "uniform", "poisson", "exponential", "seed",
@@ -54,8 +49,8 @@ _ORDER_SENSITIVE = {"min", "max", "sorted"}
 
 class DeterminismChecker(Checker):
     name = "determinism"
-    description = ("wall-clock / unseeded RNG / set-iteration tiebreaks "
-                   "in virtual-time modules")
+    description = ("unseeded RNG / set-iteration tiebreaks in "
+                   "virtual-time modules (wall clock: wallclock-taint)")
 
     def applies_to(self, sf: SourceFile) -> bool:
         return is_virtual_time_file(sf.rel)
@@ -76,9 +71,6 @@ class DeterminismChecker(Checker):
     # ------------------------------------------------------------------
     def _classify(self, call: ast.Call):
         dn = dotted_name(call.func)
-        if dn in _WALL_CLOCK:
-            return (f"wall-clock read {dn}() in a virtual-time module — "
-                    f"sim time must come from the event clock")
         if dn in _STDLIB_RANDOM:
             return (f"{dn}() draws from the global stdlib RNG — use a "
                     f"seeded np.random.default_rng(seed) stream")

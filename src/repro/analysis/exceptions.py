@@ -1,27 +1,23 @@
-"""swallowed-exception: error paths must not eat faults or leak slots.
+"""Checker 6 — ``swallowed-exception``: error paths must not eat faults.
 
 The failure model (serving.session + serving.faults) turns backend
 faults into *accounted* outcomes — retries, terminal FAILED states,
 released KV slots. That only works if no layer underneath silently
-swallows the exception first, and if no acquire-then-raise window can
-strand a slot. Two rule families:
+swallows the exception first. Repo-wide rule:
 
-**A — swallowed exceptions (repo-wide).** A bare ``except:`` (catches
-``KeyboardInterrupt``/``SystemExit`` too) whose handler does not
-re-raise, and any ``except Exception/BaseException`` handler whose
-entire body is ``pass``/``...`` — the canonical fault black hole: a
-``BackendError`` raised under it simply vanishes, the session never
-sees the fault, and the dispatched run's requests hang forever.
+A bare ``except:`` (catches ``KeyboardInterrupt``/``SystemExit`` too)
+whose handler does not re-raise, and any ``except Exception/
+BaseException`` handler whose entire body is ``pass``/``...`` — the
+canonical fault black hole: a ``BackendError`` raised under it simply
+vanishes, the session never sees the fault, and the dispatched run's
+requests hang forever.
 
-**B — slot-leaking try bodies (serving modules).** A ``try`` whose body
-can ACQUIRE per-request device residency (``slot_of`` / ``_touch`` /
-``_grow_arena`` / ``prepare``) but has no ``finally`` and whose
-handlers neither re-raise nor call a RELEASE hook (``release_slot`` /
-``_release_slots`` / ``release_request`` / ``reset_request`` /
-``on_finished``): if the body raises after the acquire, the slot never
-returns to the free pool — exactly the leak class the
-``memory_stats()``-based zero-leak gates exist to catch at runtime;
-this checker catches it at review time.
+This checker used to carry a second, serving-scoped rule family
+(syntactic slot-leaking-``try`` detection). That rule is retired: the
+``slot-leak`` checker (:mod:`slotleak`) now proves the same property —
+and the strictly larger class of leaks NOT framed by a ``try`` — with
+real path-sensitive dataflow over the CFG, so this module is back to
+exactly one job.
 
 Legitimate record-don't-crash handlers (launch-time probes) carry a
 reviewed ``# reprolint: disable=swallowed-exception`` suppression.
@@ -31,19 +27,7 @@ from __future__ import annotations
 import ast
 from typing import Iterable, List
 
-from .base import Checker, Finding, SourceFile, dotted_name, walk_calls
-
-#: calls that take per-request device residency (a KV slot) ...
-ACQUIRE_CALLS = frozenset({"slot_of", "_touch", "_grow_arena", "prepare"})
-#: ... and the hooks that give it back (any one on the handler path
-#: makes the try fault-safe; so does re-raising to a fault-aware caller)
-RELEASE_CALLS = frozenset({"release_slot", "_release_slots",
-                           "release_request", "reset_request",
-                           "on_finished"})
-
-
-def _is_serving_file(rel: str) -> bool:
-    return "repro/serving/" in rel
+from .base import Checker, Finding, SourceFile, dotted_name
 
 
 def _handler_reraises(handler: ast.ExceptHandler) -> bool:
@@ -64,34 +48,20 @@ def _trivial_body(body: List[ast.stmt]) -> bool:
     return True
 
 
-def _call_names(nodes: Iterable[ast.stmt]) -> set:
-    names = set()
-    for stmt in nodes:
-        for call in walk_calls(stmt):
-            dn = dotted_name(call.func)
-            if dn:
-                names.add(dn.rsplit(".", 1)[-1])
-    return names
-
-
 class SwallowedExceptionChecker(Checker):
     name = "swallowed-exception"
     description = ("bare/trivial exception handlers that eat backend "
-                   "faults, and serving try bodies that can strand an "
-                   "acquired KV slot without a finally/handler release")
+                   "faults (slot leaks: see slot-leak)")
 
     def check(self, sf: SourceFile) -> Iterable[Finding]:
         findings: List[Finding] = []
-        serving = _is_serving_file(sf.rel)
         for node in ast.walk(sf.tree):
             if not isinstance(node, ast.Try):
                 continue
             findings.extend(self._check_handlers(sf, node))
-            if serving:
-                findings.extend(self._check_slot_leak(sf, node))
         return [f for f in findings if f is not None]
 
-    # -- rule A ---------------------------------------------------------
+    # ------------------------------------------------------------------
     def _check_handlers(self, sf: SourceFile, node: ast.Try):
         for handler in node.handlers:
             if handler.type is None:
@@ -110,24 +80,3 @@ class SwallowedExceptionChecker(Checker):
                     "'except Exception: pass' is a fault black hole — a "
                     "BackendError dying here leaves its requests hanging "
                     "forever; handle it, record it, or let it propagate")
-
-    # -- rule B ---------------------------------------------------------
-    def _check_slot_leak(self, sf: SourceFile, node: ast.Try):
-        if node.finalbody:
-            return                       # finally runs on every path
-        if not node.handlers:
-            return                       # try/finally already handled
-        acquired = _call_names(node.body) & ACQUIRE_CALLS
-        if not acquired:
-            return
-        for handler in node.handlers:
-            if _handler_reraises(handler):
-                continue
-            if _call_names(handler.body) & RELEASE_CALLS:
-                continue
-            yield sf.finding(
-                self.name, handler,
-                f"try body acquires per-request residency "
-                f"({', '.join(sorted(acquired))}) but this handler "
-                f"neither re-raises nor releases it (no finally either) "
-                f"— an exception after the acquire leaks the KV slot")

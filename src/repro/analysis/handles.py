@@ -1,0 +1,190 @@
+"""Checker 8 — ``handle-lattice``: fate writes must be legal lifecycle
+edges.
+
+PR 7 pinned the handle lifecycle to a monotone-except-retry state
+machine; :mod:`repro.core.lifecycle` is now its single declarative
+table, imported by the runtime (``serving.session`` derives its enum
+and disposition buckets from it, ``core.request`` validates fate writes
+at runtime) AND by this checker — so the code that moves handles and
+the analysis that polices the moves cannot disagree.
+
+Rules (scope: ``serving/session.py`` + ``core/request.py``, the only
+modules that write lifecycle state):
+
+  * a literal fate write ``obj.fate = "x"`` must name a declared fate
+    (``lifecycle.FATES``); ``obj.fate = None`` is a terminal→live
+    backward edge (terminals are absorbing) and is illegal outside
+    ``__init__``,
+  * a **non-literal** fate write is only legal inside a declared fate
+    funnel (``lifecycle.FATE_SETTER_FUNCTIONS`` — the one place that
+    validates dynamically),
+  * the rollback writes encoding the one backward edge
+    (``lifecycle.ROLLBACK_WRITES``: ``t_first_issue = None``,
+    ``idx = 0``, ``_running = False``) are only legal inside the
+    declared retry functions (``lifecycle.RETRY_FUNCTIONS``) or an
+    ``__init__``,
+  * path-sensitively (CFG + fixpoint): two *different* literal fates
+    reaching the same object on one path is a terminal→terminal edge —
+    the absorbing property violated even though each write looks fine
+    in isolation.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
+
+from ..core import lifecycle
+from .base import Checker, Finding, SourceFile
+from .cfg import build_cfg, functions
+from .dataflow import Analysis, analyze
+
+_INIT_FUNCTIONS = frozenset({"__init__"})
+
+
+def _own_stmts(func) -> Iterable[ast.AST]:
+    """Walk ``func``'s own body, NOT descending into nested defs (those
+    are visited as functions in their own right)."""
+    stack = list(ast.iter_child_nodes(func))
+    while stack:
+        n = stack.pop()
+        yield n
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            stack.extend(ast.iter_child_nodes(n))
+
+
+def _fate_write(stmt: ast.AST) -> Optional[Tuple[str, ast.AST]]:
+    """(base-expr-text, value) when ``stmt`` is ``<base>.fate = value``."""
+    if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+        t = stmt.targets[0]
+        if isinstance(t, ast.Attribute) and t.attr == "fate":
+            try:
+                return ast.unparse(t.value), stmt.value
+            except Exception:
+                return "?", stmt.value
+    return None
+
+
+def _rollback_write(stmt: ast.AST) -> Optional[str]:
+    """The attribute name when ``stmt`` is one of the declared rollback
+    writes (attribute assignment of the exact rewind literal)."""
+    if not (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1):
+        return None
+    t = stmt.targets[0]
+    if not (isinstance(t, ast.Attribute)
+            and t.attr in lifecycle.ROLLBACK_WRITES):
+        return None
+    expected = lifecycle.ROLLBACK_WRITES[t.attr]
+    v = stmt.value
+    # repr-compare: False == 0 in Python, but False is not a rewind of idx
+    if isinstance(v, ast.Constant) and repr(v.value) == repr(expected):
+        return t.attr
+    return None
+
+
+class _FateAnalysis(Analysis):
+    """base-expr -> frozenset of literal fates already written on some
+    path; used to detect terminal→terminal edges."""
+
+    def join_values(self, a: FrozenSet[str], b: FrozenSet[str]):
+        return a | b
+
+    def transfer(self, state, stmt):
+        fw = _fate_write(stmt)
+        if fw is None:
+            return state
+        base, value = fw
+        if isinstance(value, ast.Constant) and isinstance(value.value, str):
+            out = dict(state)
+            out[base] = state.get(base, frozenset()) | {value.value}
+            return out
+        return state
+
+
+class HandleLatticeChecker(Checker):
+    name = "handle-lattice"
+    description = ("fate/rollback writes that are not legal edges of "
+                   "the declarative lifecycle table (core.lifecycle)")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return sf.rel.endswith("repro/serving/session.py") \
+            or sf.rel.endswith("repro/core/request.py")
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for func in functions(sf.tree):
+            findings.extend(self._check_writes(sf, func))
+            findings.extend(self._check_absorbing(sf, func))
+        return [f for f in findings if f is not None]
+
+    # -- syntactic, table-driven ---------------------------------------
+    def _check_writes(self, sf: SourceFile, func):
+        for stmt in _own_stmts(func):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            fw = _fate_write(stmt)
+            if fw is not None:
+                base, value = fw
+                if isinstance(value, ast.Constant):
+                    if value.value is None:
+                        if func.name not in _INIT_FUNCTIONS:
+                            yield sf.finding(
+                                self.name, stmt,
+                                f"{base}.fate = None clears a terminal "
+                                f"disposition — terminals are absorbing "
+                                f"(no edge back to a live state)")
+                    elif value.value not in lifecycle.FATES:
+                        yield sf.finding(
+                            self.name, stmt,
+                            f"{base}.fate = {value.value!r} is not a "
+                            f"declared terminal disposition "
+                            f"(lifecycle.FATES = "
+                            f"{', '.join(lifecycle.FATES)})")
+                elif func.name not in lifecycle.FATE_SETTER_FUNCTIONS:
+                    yield sf.finding(
+                        self.name, stmt,
+                        f"non-literal fate write in {func.name}() — "
+                        f"dynamic fates must route through the declared "
+                        f"funnel(s) "
+                        f"{sorted(lifecycle.FATE_SETTER_FUNCTIONS)} "
+                        f"where the lifecycle table validates them")
+                continue
+            attr = _rollback_write(stmt)
+            if attr is not None \
+                    and func.name not in lifecycle.RETRY_FUNCTIONS \
+                    and func.name not in _INIT_FUNCTIONS:
+                rewind = lifecycle.ROLLBACK_WRITES[attr]
+                yield sf.finding(
+                    self.name, stmt,
+                    f"{attr} = {rewind!r} rewinds the handle lattice "
+                    f"(the RUNNING -> QUEUED retry edge) outside the "
+                    f"declared retry function(s) "
+                    f"{sorted(lifecycle.RETRY_FUNCTIONS)} — an illegal "
+                    f"backward edge")
+
+    # -- path-sensitive absorbing rule ---------------------------------
+    def _check_absorbing(self, sf: SourceFile, func):
+        writes = [n for n in _own_stmts(func)
+                  if _fate_write(n) is not None
+                  and isinstance(_fate_write(n)[1], ast.Constant)
+                  and isinstance(_fate_write(n)[1].value, str)]
+        if len(writes) < 2:
+            return                       # absorbing needs two writes
+        cfg = build_cfg(func)
+        states = analyze(cfg, _FateAnalysis())
+        for node in cfg.stmt_nodes():
+            fw = _fate_write(node.stmt)
+            if fw is None:
+                continue
+            base, value = fw
+            if not (isinstance(value, ast.Constant)
+                    and isinstance(value.value, str)):
+                continue
+            prior = states.get(node.nid, {}).get(base, frozenset())
+            others = prior - {value.value}
+            if others:
+                yield sf.finding(
+                    self.name, node.stmt,
+                    f"on some path {base}.fate was already "
+                    f"{'/'.join(sorted(others))!r} before this write of "
+                    f"{value.value!r} — fates are absorbing, a second "
+                    f"different fate is a terminal -> terminal edge")

@@ -2,8 +2,9 @@
 
 Usage (CI runs exactly this)::
 
-    PYTHONPATH=src python -m repro.analysis.lint src \
-        --baseline reprolint.baseline.json
+    PYTHONPATH=src python -m repro.analysis.lint src tests benchmarks \
+        --baseline reprolint.baseline.json \
+        --cache .reprolint-cache.json --format github
 
 Exit status 0 when every finding is covered by the committed baseline,
 1 when any NEW finding exists (print it, fix it, or — exceptionally —
@@ -12,6 +13,21 @@ comment). Baseline entries nothing matches anymore are reported as
 *stale*: the debt was paid, remove the entry (``--write-baseline``
 regenerates the file from the current findings).
 
+Two checker tiers run per invocation:
+
+  * per-file checkers (:data:`ALL_CHECKERS`) see one parsed
+    :class:`SourceFile` at a time; their findings — and the
+    interprocedural *facts* extracted alongside (:mod:`callgraph`) —
+    are cached per content hash when ``--cache`` is given, so unchanged
+    files are never re-parsed,
+  * project checkers (:data:`PROJECT_CHECKERS`) run once over the facts
+    of EVERY linted file (cached or fresh), which is how
+    ``wallclock-taint`` sees cross-file call chains at warm-cache cost.
+
+``--format github`` additionally emits GitHub Actions
+``::error file=...,line=...`` workflow commands for new findings so CI
+annotates the offending lines in the diff view.
+
 The programmatic entry is :func:`run_lint`, used by the checker test
 suite to lint fixture snippets and to assert the repo-wide run matches
 the committed baseline exactly.
@@ -19,19 +35,25 @@ the committed baseline exactly.
 from __future__ import annotations
 
 import argparse
+import hashlib
+import json
 import sys
 from pathlib import Path
-from typing import Iterable, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence
 
 from .asserts import BareAssertChecker
-from .base import (Checker, Finding, LintResult, SourceFile,
-                   assign_occurrences, load_baseline,
+from .base import (Checker, Finding, LintResult, ProjectChecker, SourceFile,
+                   assign_occurrences, load_baseline, rel_path,
                    split_against_baseline, write_baseline)
+from .callgraph import CallGraph, FileFacts, extract_facts
 from .contracts import BackendContractChecker
 from .determinism import DeterminismChecker
 from .exceptions import SwallowedExceptionChecker
+from .handles import HandleLatticeChecker
 from .retrace import RetraceHazardChecker
+from .slotleak import SlotLeakChecker
 from .sync_points import SyncPointChecker
+from .wallclock import WallclockTaintChecker
 
 ALL_CHECKERS: List[Checker] = [
     SyncPointChecker(),
@@ -40,7 +62,18 @@ ALL_CHECKERS: List[Checker] = [
     DeterminismChecker(),
     BackendContractChecker(),
     SwallowedExceptionChecker(),
+    SlotLeakChecker(),
+    HandleLatticeChecker(),
 ]
+
+PROJECT_CHECKERS: List[ProjectChecker] = [
+    WallclockTaintChecker(),
+]
+
+#: bump to invalidate every --cache entry (checker semantics changed)
+CACHE_VERSION = 1
+
+_FINDING_FIELDS = ("checker", "path", "line", "message", "snippet", "file")
 
 
 def collect_files(paths: Iterable) -> List[Path]:
@@ -55,31 +88,105 @@ def collect_files(paths: Iterable) -> List[Path]:
     return files
 
 
+def _content_hash(text: str) -> str:
+    return hashlib.sha1(
+        f"v{CACHE_VERSION}\n{text}".encode()).hexdigest()
+
+
+def _load_cache(path) -> dict:
+    try:
+        doc = json.loads(Path(path).read_text())
+        if doc.get("version") == CACHE_VERSION:
+            return doc.get("files", {})
+    except (OSError, ValueError):
+        pass
+    return {}
+
+
+def _save_cache(path, files: dict) -> None:
+    Path(path).write_text(json.dumps(
+        {"version": CACHE_VERSION, "files": files}) + "\n")
+
+
 def run_lint(paths: Sequence, *, checkers: Optional[Sequence[Checker]] = None,
-             baseline: Optional[List[dict]] = None) -> LintResult:
+             project_checkers: Optional[Sequence[ProjectChecker]] = None,
+             baseline: Optional[List[dict]] = None,
+             cache_path=None) -> LintResult:
     """Lint ``paths`` (files or directories) and split the findings
     against ``baseline`` (a list of baseline entries; None = empty, so
-    every finding is new)."""
+    every finding is new). ``checkers=None`` runs all per-file checkers
+    AND all project checkers; an explicit list runs exactly those
+    per-file checkers and no project pass (fixture-test mode) unless
+    ``project_checkers`` is also given."""
+    default_everything = checkers is None and project_checkers is None
     checkers = list(checkers) if checkers is not None else ALL_CHECKERS
+    project = (list(project_checkers) if project_checkers is not None
+               else (PROJECT_CHECKERS if default_everything else []))
+
+    cache = _load_cache(cache_path) if cache_path else {}
+    cache_out: dict = {}
     findings: List[Finding] = []
+    all_facts: Dict[str, FileFacts] = {}
     for path in collect_files(paths):
         try:
-            sf = SourceFile(path)
+            text = path.read_text()
+        except OSError as e:
+            findings.append(Finding(
+                checker="parse-error", path=str(path), line=1,
+                message=f"file is unreadable: {e}", file=str(path)))
+            continue
+        key = str(path)
+        h = _content_hash(text)
+        entry = cache.get(key)
+        if entry is not None and entry["hash"] == h \
+                and entry["checkers"] == sorted(c.name for c in checkers):
+            findings.extend(Finding(**dict(zip(_FINDING_FIELDS, row)))
+                            for row in entry["findings"])
+            all_facts[entry["rel"]] = FileFacts.from_dict(entry["facts"])
+            cache_out[key] = entry
+            continue
+        try:
+            sf = SourceFile(path, text)
         except SyntaxError as e:
             findings.append(Finding(
                 checker="parse-error", path=str(path),
                 line=e.lineno or 1,
-                message=f"file does not parse: {e.msg}"))
+                message=f"file does not parse: {e.msg}", file=str(path)))
             continue
+        fresh: List[Finding] = []
         for checker in checkers:
             if checker.applies_to(sf):
-                findings.extend(checker.check(sf))
+                fresh.extend(checker.check(sf))
+        facts = extract_facts(sf)
+        all_facts[sf.rel] = facts
+        findings.extend(fresh)
+        cache_out[key] = {
+            "hash": h, "rel": sf.rel,
+            "checkers": sorted(c.name for c in checkers),
+            "findings": [[getattr(f, k) for k in _FINDING_FIELDS]
+                         for f in fresh],
+            "facts": facts.to_dict(),
+        }
+
+    if project:
+        graph = CallGraph(all_facts)
+        real_of = {rel_path(k): k for k in cache_out}
+        for pc in project:
+            for f in pc.check_project(all_facts, graph):
+                if not f.file:
+                    f.file = real_of.get(f.path, f.path)
+                findings.append(f)
+
+    if cache_path:
+        _save_cache(cache_path, cache_out)
     findings = assign_occurrences(findings)
     return split_against_baseline(findings, baseline or [])
 
 
-def _report(res: LintResult, out=sys.stdout) -> None:
-    w = out.write
+def _report(res: LintResult, out=None) -> None:
+    # resolve sys.stdout at call time, not import time — callers (and
+    # pytest's capsys) may have swapped the stream since
+    w = (out or sys.stdout).write
     for f in res.new:
         w(f"NEW      {f}\n")
     for f in res.baselined:
@@ -91,6 +198,29 @@ def _report(res: LintResult, out=sys.stdout) -> None:
     w(f"reprolint: {len(res.new)} new, {len(res.baselined)} baselined, "
       f"{len(res.stale)} stale baseline entr"
       f"{'y' if len(res.stale) == 1 else 'ies'}\n")
+
+
+def _escape_gha(text: str) -> str:
+    """GitHub workflow-command data escaping (the documented set)."""
+    return (text.replace("%", "%25").replace("\r", "%0D")
+            .replace("\n", "%0A"))
+
+
+def _report_github(res: LintResult, out=None) -> None:
+    """GitHub Actions annotations for new findings (plus the human
+    summary on top — annotations only render in the web UI)."""
+    out = out or sys.stdout
+    for f in res.new:
+        where = f.file or f.path
+        out.write(f"::error file={_escape_gha(where)},line={f.line},"
+                  f"title=reprolint {f.checker}::"
+                  f"{_escape_gha(f.message)}\n")
+    for e in res.stale:
+        out.write(f"::error title=reprolint stale baseline::"
+                  f"{_escape_gha(str(e.get('fingerprint')))} "
+                  f"({e.get('checker')} @ {e.get('path')}) matches "
+                  f"nothing — remove the entry\n")
+    _report(res, out)
 
 
 def main(argv: Optional[Sequence[str]] = None) -> int:
@@ -107,12 +237,20 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                     help="write ALL current findings to PATH as the new "
                          "baseline and exit 0 (burn-down bookkeeping — "
                          "review the diff!)")
+    ap.add_argument("--cache", metavar="PATH", default=None,
+                    help="content-hash result cache: unchanged files are "
+                         "not re-parsed (interprocedural facts are "
+                         "cached alongside, so project checkers still "
+                         "see the whole tree)")
+    ap.add_argument("--format", choices=("text", "github"), default="text",
+                    help="'github' adds ::error workflow-command "
+                         "annotations for new findings")
     ap.add_argument("--list-checkers", action="store_true")
     args = ap.parse_args(argv)
 
     if args.list_checkers:
-        for c in ALL_CHECKERS:
-            print(f"{c.name:18s} {c.description}")
+        for c in ALL_CHECKERS + PROJECT_CHECKERS:
+            print(f"{c.name:20s} {c.description}")
         return 0
 
     baseline: List[dict] = []
@@ -123,13 +261,16 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if default.exists():
             baseline = load_baseline(default)
 
-    res = run_lint(args.paths, baseline=baseline)
+    res = run_lint(args.paths, baseline=baseline, cache_path=args.cache)
     if args.write_baseline:
         write_baseline(args.write_baseline, res.findings)
         print(f"wrote {len(res.findings)} finding(s) to "
               f"{args.write_baseline}")
         return 0
-    _report(res)
+    if args.format == "github":
+        _report_github(res)
+    else:
+        _report(res)
     return 0 if res.ok else 1
 
 

@@ -1,0 +1,260 @@
+"""Checker 7 — ``slot-leak``: path-sensitive KV-slot escape analysis.
+
+The PR 7 bug class: a request's arena slot is popped from the free pool,
+then an exception (OOM mid-grow, a fault injected between dispatch and
+epilogue) skips the release path and the slot is stranded — the pool
+shrinks by one forever, and only the runtime ``memory_stats()`` zero-leak
+gates notice, long after review. The old syntactic rule (swallowed-
+exception rule B) could only pattern-match ``try`` bodies; this checker
+supersedes it with real dataflow over the :mod:`cfg` graphs: any path —
+normal return OR escaping exception — on which an acquired slot leaves
+the function neither released nor handed to a tracked owner is reported.
+
+Abstract semantics (per function, lattice SAFE < MAYBE < ACQUIRED):
+
+  * **acquire** — ``x = <pool>.popleft()`` / ``<pool>.pop()`` where the
+    receiver names the free pool (``free_slots``) puts ``x`` in
+    ACQUIRED; ``x = <owners>.pop(key, default)`` on a slot-owner map
+    (receiver naming ``_slot``) puts ``x`` in MAYBE (the key may have
+    been absent) — an ``x is (not) None`` guard refines MAYBE to SAFE /
+    ACQUIRED on the respective branches, which is exactly the
+    ``_release_slots`` idiom.
+  * **release** — appending/extending the free pool with ``x``, or
+    passing ``x`` to any call (a release hook like ``release_slot`` /
+    ``_release_slots`` / ``on_finished``, or any callee — ownership
+    escapes to it), moves ``x`` to SAFE.
+  * **own** — storing ``x`` into an attribute/subscript (``self._slot
+    [rid] = x``) or returning it transfers ownership out of the
+    function: SAFE.
+  * Release statements and plain ownership stores are treated as
+    **non-raising** (their exception edges are dead): a free-pool
+    ``append`` or a dict store raising would otherwise make the
+    canonical acquire→own and pop→guard→append idioms flag their own
+    epilogues.
+
+Reported at the acquire site (stable fingerprint), naming the escaping
+exit(s). Scope: ``repro/serving/`` — the only tree that owns device
+residency.
+"""
+from __future__ import annotations
+
+import ast
+from types import SimpleNamespace
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .base import Checker, Finding, SourceFile
+from .cfg import build_cfg, functions
+from .dataflow import Analysis, analyze
+
+#: receiver-name fragments identifying the free pool / the owner map
+POOL_MARK = "free_slots"
+OWNER_MARK = "_slot"
+
+#: callee leaf names that give residency back (their call statements are
+#: additionally treated as non-raising — they ARE the cleanup path)
+RELEASE_CALLS = frozenset({"release_slot", "_release_slots",
+                           "release_request", "reset_request",
+                           "on_finished"})
+
+ACQ, MAYBE = "acquired", "maybe"
+
+
+def _recv_text(call: ast.Call) -> str:
+    if isinstance(call.func, ast.Attribute):
+        try:
+            return ast.unparse(call.func.value)
+        except Exception:
+            return ""
+    return ""
+
+
+def _classify_acquire(value: ast.AST) -> Optional[str]:
+    """ACQ/MAYBE/None for the RHS of an assignment."""
+    if not (isinstance(value, ast.Call)
+            and isinstance(value.func, ast.Attribute)):
+        return None
+    attr, recv = value.func.attr, _recv_text(value)
+    if POOL_MARK in recv and attr in ("popleft", "pop"):
+        return ACQ
+    if OWNER_MARK in recv and attr == "pop" and value.args:
+        return MAYBE if len(value.args) >= 2 else ACQ
+    return None
+
+
+def _is_release_stmt(stmt: ast.AST) -> bool:
+    """Free-pool append/extend or a call to a release hook."""
+    for call in ast.walk(stmt):
+        if not isinstance(call, ast.Call):
+            continue
+        if isinstance(call.func, ast.Attribute):
+            if call.func.attr in ("append", "appendleft", "extend") \
+                    and POOL_MARK in _recv_text(call):
+                return True
+            if call.func.attr in RELEASE_CALLS:
+                return True
+        elif isinstance(call.func, ast.Name) \
+                and call.func.id in RELEASE_CALLS:
+            return True
+    return False
+
+
+def _is_simple(expr: ast.AST) -> bool:
+    if isinstance(expr, (ast.Constant, ast.Name)):
+        return True
+    if isinstance(expr, (ast.Tuple, ast.List)):
+        return all(_is_simple(e) for e in expr.elts)
+    return False
+
+
+def _is_owner_store(stmt: ast.AST) -> bool:
+    """``obj.attr = x`` / ``obj[...] = x`` with a simple RHS: ownership
+    moves into a container that outlives the function."""
+    if not isinstance(stmt, ast.Assign) or not stmt.targets:
+        return False
+    return all(isinstance(t, (ast.Attribute, ast.Subscript))
+               for t in stmt.targets) and _is_simple(stmt.value)
+
+
+def _none_test(test: Optional[ast.AST]):
+    """('x', True) for ``x is None``, ('x', False) for ``x is not None``,
+    else None."""
+    if (isinstance(test, ast.Compare) and len(test.ops) == 1
+            and isinstance(test.left, ast.Name)
+            and isinstance(test.comparators[0], ast.Constant)
+            and test.comparators[0].value is None):
+        if isinstance(test.ops[0], ast.Is):
+            return test.left.id, True
+        if isinstance(test.ops[0], ast.IsNot):
+            return test.left.id, False
+    return None
+
+
+class SlotAnalysis(Analysis):
+    """var -> (ACQ|MAYBE, acquire-line); absent = SAFE."""
+
+    def join_values(self, a: Tuple[str, int], b: Tuple[str, int]):
+        # may-leak: ACQ wins over MAYBE; keep the acquiring side's line
+        if a[0] == ACQ and b[0] != ACQ:
+            return a
+        if b[0] == ACQ and a[0] != ACQ:
+            return b
+        return min(a, b, key=lambda v: v[1])
+
+    # ------------------------------------------------------------------
+    def transfer(self, state, stmt):
+        out = dict(state)
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 \
+                and isinstance(stmt.targets[0], ast.Name):
+            x = stmt.targets[0].id
+            tag = _classify_acquire(stmt.value)
+            if tag is not None:
+                out[x] = (tag, stmt.lineno)
+                return out
+            if isinstance(stmt.value, ast.Name) \
+                    and stmt.value.id in out:       # alias: move semantics
+                out[x] = out.pop(stmt.value.id)
+                return out
+            out.pop(x, None)                        # strong update: killed
+            self._escape_calls(stmt, out)
+            return out
+        if isinstance(stmt, ast.Return):
+            if stmt.value is not None:
+                for n in ast.walk(stmt.value):
+                    if isinstance(n, ast.Name):
+                        out.pop(n.id, None)         # caller takes ownership
+            return out
+        if isinstance(stmt, ast.Delete):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    out.pop(t.id, None)
+            return out
+        if _is_owner_store(stmt):
+            for n in ast.walk(stmt.value):
+                if isinstance(n, ast.Name):
+                    out.pop(n.id, None)
+            return out
+        self._escape_calls(stmt, out)
+        return out
+
+    @staticmethod
+    def _escape_calls(stmt, out: Dict):
+        """A tracked var passed to ANY call escapes to the callee
+        (release hooks included — this is what makes them releases)."""
+        for call in ast.walk(stmt):
+            if not isinstance(call, ast.Call):
+                continue
+            args = list(call.args) + [kw.value for kw in call.keywords]
+            for a in args:
+                for n in ast.walk(a):
+                    if isinstance(n, ast.Name):
+                        out.pop(n.id, None)
+
+    # ------------------------------------------------------------------
+    def refine(self, state, test, branch: bool):
+        nt = _none_test(test)
+        if nt is None:
+            return state
+        var, is_none_branch = nt
+        hit = state.get(var)
+        if hit is None or hit[0] != MAYBE:
+            return state
+        out = dict(state)
+        if branch == is_none_branch:
+            out.pop(var)                    # it's None: nothing acquired
+        else:
+            out[var] = (ACQ, hit[1])        # definitely holding a slot
+        return out
+
+    # ------------------------------------------------------------------
+    def may_raise(self, node) -> bool:
+        stmt = node.stmt
+        if node.kind == "branch":
+            return super().may_raise(node)
+        if stmt is None:
+            return True
+        if _is_release_stmt(stmt) or _is_owner_store(stmt):
+            return False
+        if isinstance(stmt, ast.Assign) and _is_simple(stmt.value) \
+                and all(isinstance(t, ast.Name) for t in stmt.targets):
+            return False
+        if isinstance(stmt, ast.Return):
+            return stmt.value is not None and any(
+                isinstance(n, ast.Call) for n in ast.walk(stmt.value))
+        return True
+
+
+class SlotLeakChecker(Checker):
+    name = "slot-leak"
+    description = ("CFG paths (incl. exception edges) on which an "
+                   "acquired KV slot escapes neither released nor "
+                   "owned (supersedes the syntactic rule for serving)")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return "repro/serving/" in sf.rel
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        for func in functions(sf.tree):
+            findings.extend(self._check_func(sf, func))
+        return findings
+
+    def _check_func(self, sf: SourceFile, func):
+        cfg = build_cfg(func)
+        states = analyze(cfg, SlotAnalysis())
+        # (var, line) -> exits it escapes through
+        leaks: Dict[Tuple[str, int], List[str]] = {}
+        for exit_node, how in ((cfg.exit, "a normal return"),
+                               (cfg.raise_exit, "an escaping exception")):
+            for var, (tag, line) in states.get(exit_node.nid, {}).items():
+                leaks.setdefault((var, line), []).append(how)
+        for (var, line), hows in sorted(leaks.items(),
+                                        key=lambda kv: kv[0][1]):
+            f = sf.finding(
+                self.name, SimpleNamespace(lineno=line),
+                f"KV slot held in {var!r} can leave {func.name}() via "
+                f"{' and via '.join(hows)} without being released to "
+                f"the free pool or stored to a slot owner — the arena "
+                f"strands one slot on that path")
+            if f is not None:
+                yield f
+        return

@@ -1,0 +1,118 @@
+"""Checker 9 — ``wallclock-taint``: interprocedural wall-time taint.
+
+The determinism checker used to match wall-clock reads per line, per
+module — which a one-line helper defeats: put ``time.perf_counter()`` in
+``launch/`` and call it from ``core/`` and no rule fires, yet the sim's
+virtual clock is now polluted and no replay is bit-identical. This
+checker closes the laundering hole with call-graph taint propagation
+(the intraprocedural wall-clock rule is retired from ``determinism``).
+
+  * **sources** — ``time.time/perf_counter/monotonic/...``,
+    ``datetime.now/utcnow/today`` reads anywhere in the scanned tree.
+    A read carrying a ``# reprolint: disable=wallclock-taint``
+    suppression is an *audited boundary*: it neither reports nor taints
+    its function (this is how ``launch/roofline.py``'s probe timings
+    stay legal).
+  * **propagation** — a function is tainted if it reads a source or
+    calls a tainted function (resolved over the import neighborhood;
+    see :mod:`callgraph`). Backend-contract method names are
+    polymorphic **barriers**: ``backend.execute_run(...)`` is the
+    sanctioned wall-time boundary (the session clock advances by the
+    returned latency — virtual under the simulator, measured under the
+    JAX engine), so taint never crosses them. Suppressed call sites
+    don't propagate either.
+  * **sinks** — inside virtual-time modules (``core/``, the sim-path
+    serving modules, ``benchmarks/fig*``): any direct source read, and
+    any call that reaches a tainted function. Reported at the read /
+    call site with the witness chain down to the clock read.
+"""
+from __future__ import annotations
+
+from typing import Dict, Iterable, List, Tuple
+
+from .base import Finding, ProjectChecker, is_virtual_time_file
+from .callgraph import BARRIER_METHODS as _BARRIERS
+from .callgraph import CallGraph, FileFacts
+
+_Key = Tuple[str, str]                   # (rel path, qualname)
+
+
+class WallclockTaintChecker(ProjectChecker):
+    name = "wallclock-taint"
+    description = ("wall-clock reads reaching virtual-time modules, "
+                   "directly or laundered through the call graph")
+
+    def check_project(self, facts: Dict[str, FileFacts],
+                      graph: CallGraph) -> Iterable[Finding]:
+        tainted = self._propagate(facts, graph)
+        findings: List[Finding] = []
+        for rel, ff in sorted(facts.items()):
+            if not is_virtual_time_file(rel):
+                continue
+            for fn in ff.functions.values():
+                for read in fn.clock_reads:
+                    if read["suppressed"]:
+                        continue
+                    findings.append(Finding(
+                        checker=self.name, path=rel, line=read["line"],
+                        message=(f"wall-clock read {read['dotted']}() in "
+                                 f"a virtual-time module — sim time must "
+                                 f"come from the event clock"),
+                        snippet=read["snippet"]))
+                findings.extend(
+                    self._tainted_calls(rel, fn, graph, tainted))
+        return findings
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _propagate(facts: Dict[str, FileFacts],
+                   graph: CallGraph) -> Dict[_Key, str]:
+        """Fixpoint: (rel, qualname) -> witness chain text."""
+        tainted: Dict[_Key, str] = {}
+        for rel, ff in facts.items():
+            for q, fn in ff.functions.items():
+                for read in fn.clock_reads:
+                    if not read["suppressed"]:
+                        tainted[(rel, q)] = (f"{q} reads "
+                                             f"{read['dotted']}() at "
+                                             f"{rel}:{read['line']}")
+                        break
+        changed = True
+        while changed:
+            changed = False
+            for rel, ff in facts.items():
+                for q, fn in ff.functions.items():
+                    if (rel, q) in tainted:
+                        continue
+                    for call in fn.calls:
+                        if call["suppressed"] or call["name"] in _BARRIERS:
+                            continue
+                        hit = next(
+                            (t for t in graph.resolve(rel, call)
+                             if t in tainted), None)
+                        if hit is not None:
+                            tainted[(rel, q)] = (f"{q} calls "
+                                                 f"{call['name']}() -> "
+                                                 + tainted[hit])
+                            changed = True
+                            break
+        return tainted
+
+    @staticmethod
+    def _tainted_calls(rel: str, fn, graph: CallGraph,
+                       tainted: Dict[_Key, str]):
+        for call in fn.calls:
+            if call["suppressed"] or call["name"] in _BARRIERS:
+                continue
+            hit = next((t for t in graph.resolve(rel, call)
+                        if t in tainted), None)
+            if hit is None:
+                continue
+            yield Finding(
+                checker="wallclock-taint", path=rel, line=call["line"],
+                message=(f"call to {call['name']}() launders wall time "
+                         f"into a virtual-time module "
+                         f"({tainted[hit]}) — route the value through "
+                         f"the event clock or audit the read with a "
+                         f"wallclock-taint suppression at the source"),
+                snippet=call["snippet"])

@@ -15,6 +15,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import List, Optional, Sequence, Tuple
 
+from . import lifecycle
+
 _rid_counter = itertools.count()
 
 
@@ -52,11 +54,14 @@ class Request:
     # ServingSession.submit; None falls back to the workload's own name
     # for per-model reporting)
     model: Optional[str] = None
-    # terminal out-of-band disposition (None = normal lifecycle):
-    # "cancelled" (caller), "expired" (deadline provably blown mid-flight),
-    # "failed" (backend fault, retries exhausted), "shed" (load shedding).
-    # A fated request is dead to the scheduler: SubBatch live-filtering
-    # drops it exactly like a finished one, but it never gets a t_finish.
+    # terminal out-of-band disposition (None = normal lifecycle): one of
+    # core.lifecycle.FATES — "cancelled" (caller), "expired" (deadline
+    # provably blown mid-flight), "failed" (backend fault, retries
+    # exhausted), "shed" (load shedding). A fated request is dead to the
+    # scheduler: SubBatch live-filtering drops it exactly like a finished
+    # one, but it never gets a t_finish. Writes are validated against the
+    # lifecycle table (see __setattr__): only declared fates, and a fate
+    # is absorbing — it can never be overwritten with a different one.
     fate: Optional[str] = None
     retries: int = 0                    # fault-retry attempts so far
     t_first_issue: Optional[float] = None
@@ -68,6 +73,24 @@ class Request:
     decode_len: int = 0
     prefix_len: int = 0                 # node count before the decode cycles
     cycle_len: int = 0                  # nodes per decode cycle (0 = static)
+
+    def __setattr__(self, name, value):
+        # fate writes are lifecycle edges: enforce the declarative table
+        # (core.lifecycle) at runtime — the handle-lattice static checker
+        # polices the same table at review time
+        if name == "fate" and value is not None:
+            if value not in lifecycle.FATES:
+                raise ValueError(
+                    f"request {self.__dict__.get('rid', '?')}: fate "
+                    f"{value!r} is not a declared terminal disposition "
+                    f"(lifecycle.FATES={lifecycle.FATES})")
+            cur = self.__dict__.get("fate")
+            if cur is not None and cur != value:
+                raise RuntimeError(
+                    f"request {self.__dict__.get('rid', '?')}: fate is "
+                    f"absorbing — cannot move {cur!r} -> {value!r} "
+                    f"(terminal states have no out-edges)")
+        super().__setattr__(name, value)
 
     @property
     def done(self) -> bool:

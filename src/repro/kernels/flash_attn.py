@@ -80,7 +80,11 @@ def flash_attention(q, k, v, *, window: Optional[int] = None,
     T = k.shape[1]
     block_q = min(block_q, S)
     block_k = min(block_k, T)
-    assert S % block_q == 0 and T % block_k == 0, (S, T, block_q, block_k)
+    if S % block_q != 0 or T % block_k != 0:
+        raise ValueError(
+            f"flash_attention needs block-aligned sequence lengths: "
+            f"S={S} %% block_q={block_q} and T={T} %% block_k={block_k} "
+            f"must both be 0 — pad the sequence or pass matching blocks")
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     scale = 1.0 / math.sqrt(D)

@@ -104,9 +104,16 @@ def ragged_decode_attention(q, k, v, lengths, *, slots=None,
     """
     B, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
-    assert H % KV == 0, (H, KV)
+    if H % KV != 0:
+        raise ValueError(
+            f"ragged_decode_attention: query heads H={H} must be a "
+            f"multiple of kv heads KV={KV} (grouped-query repeat factor)")
     block_t = min(block_t, T)
-    assert T % block_t == 0, (T, block_t)
+    if T % block_t != 0:
+        raise ValueError(
+            f"ragged_decode_attention: kv length T={T} must be a "
+            f"multiple of block_t={block_t} — pad the arena length or "
+            f"pass a divisor block")
     if slots is None:
         slots = jnp.arange(B, dtype=jnp.int32)
     if interpret is None:

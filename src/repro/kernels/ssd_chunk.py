@@ -72,7 +72,10 @@ def ssd_chunk_intra(x, dt, A, B_ssm, C_ssm, *, chunk: int,
     """
     Bb, S, nh, hd = x.shape
     N = B_ssm.shape[-1]
-    assert S % chunk == 0, (S, chunk)
+    if S % chunk != 0:
+        raise ValueError(
+            f"ssd_chunk_scan: sequence length S={S} must be a multiple "
+            f"of chunk={chunk} — pad the sequence or shrink the chunk")
     nc = S // chunk
     if interpret is None:
         interpret = jax.default_backend() == "cpu"

@@ -81,14 +81,14 @@ def probe_costs(arch: str, shape: str, *, multi_pod: bool = False,
     base = len(cfg.hybrid.block_pattern) if cfg.hybrid is not None else 1
     # wall-clock times the roofline PROBE itself (reported as probe_s);
     # roofline cost estimates come from compiled HLO analysis, not timing
-    t0 = time.perf_counter()  # reprolint: disable=determinism
+    t0 = time.perf_counter()  # reprolint: disable=wallclock-taint
     c1 = _probe(arch, shape, mesh, base, extra_flags=extra_flags,
                 fsdp_override=fsdp_override, rules_overrides=rules_overrides,
                 **kw)
     c2 = _probe(arch, shape, mesh, 2 * base, extra_flags=extra_flags,
                 fsdp_override=fsdp_override, rules_overrides=rules_overrides,
                 **kw)
-    dt = time.perf_counter() - t0  # reprolint: disable=determinism
+    dt = time.perf_counter() - t0  # reprolint: disable=wallclock-taint
 
     units = cfg.num_layers / base
     out = {"arch": arch, "shape": shape,

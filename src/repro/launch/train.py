@@ -58,7 +58,11 @@ def main():
     print(f"loss {first:.4f} -> {last:.4f} "
           f"({(first - last) / first * 100:.1f}% reduction) "
           f"in {log.wall[-1]:.1f}s")
-    assert last < first, "training did not reduce the loss"
+    if not last < first:
+        # smoke gate: survives python -O, exits nonzero for the harness
+        raise SystemExit(
+            f"training smoke FAILED: loss did not decrease "
+            f"({first:.4f} -> {last:.4f} over {args.steps} steps)")
 
 
 if __name__ == "__main__":

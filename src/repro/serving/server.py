@@ -108,6 +108,15 @@ class SimExecutor(Backend):
         if live:
             live.pop(req.rid, None)
 
+    def release_request(self, model, req):
+        """Forget the request entirely (``ServingSession.release``): the
+        reset/release pair the Backend contract expects must BOTH exist on
+        any backend that tracks per-request residency — releasing a
+        terminal request whose residency was never dropped (e.g. a handle
+        released without a drain) would otherwise leave a phantom slot
+        inflating the thrash factor forever. Idempotent, like reset."""
+        self.reset_request(model, req)
+
     def memory_stats(self, model=None):
         from .backend import MemoryStats
         n_live = sum(len(per) for per in self._live.values())

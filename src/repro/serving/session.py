@@ -105,6 +105,7 @@ import numpy as np
 from dataclasses import dataclass
 from collections import deque
 
+from ..core import lifecycle
 from ..core.arbiter import Arbiter, LeastSlackArbiter
 from ..core.policies import Policy
 from ..core.request import Request
@@ -115,26 +116,17 @@ from .traffic import Trace
 
 DEFAULT_MODEL = "default"
 
+#: Handle lifecycle states, DERIVED from the declarative state machine in
+#: :mod:`repro.core.lifecycle` (the same table the ``handle-lattice``
+#: static checker enforces): QUEUED / ADMITTED / RUNNING / DONE /
+#: REJECTED / CANCELLED / EXPIRED / FAILED / SHED, with the legal edges
+#: (monotone-except-retry) in ``lifecycle.EDGES``.
+HandleState = Enum("HandleState",
+                   {name.upper(): name for name in lifecycle.STATES})
 
-class HandleState(Enum):
-    QUEUED = "queued"
-    ADMITTED = "admitted"
-    RUNNING = "running"
-    DONE = "done"
-    REJECTED = "rejected"
-    CANCELLED = "cancelled"     # caller cancelled mid-flight
-    EXPIRED = "expired"         # deadline provably blown; evicted
-    FAILED = "failed"           # backend fault, retry budget exhausted
-    SHED = "shed"               # dropped by graceful load shedding
-
-
-#: request.fate value -> terminal HandleState
-_FATE_STATE = {
-    "cancelled": HandleState.CANCELLED,
-    "expired": HandleState.EXPIRED,
-    "failed": HandleState.FAILED,
-    "shed": HandleState.SHED,
-}
+#: request.fate value -> terminal HandleState (one entry per declared
+#: lifecycle fate — the table, not this module, says what fates exist)
+_FATE_STATE = {fate: HandleState(fate) for fate in lifecycle.FATES}
 
 
 @dataclass(frozen=True)
@@ -220,9 +212,7 @@ class RequestHandle:
             return HandleState.ADMITTED
         return HandleState.QUEUED
 
-    _TERMINAL = frozenset((HandleState.DONE, HandleState.REJECTED,
-                           HandleState.CANCELLED, HandleState.EXPIRED,
-                           HandleState.FAILED, HandleState.SHED))
+    _TERMINAL = frozenset(HandleState(s) for s in lifecycle.TERMINAL)
 
     @property
     def done(self) -> bool:
@@ -360,11 +350,10 @@ class ServingSession:
         self.handles: Dict[int, RequestHandle] = {}
         self._finished: Dict[int, Request] = {}   # rid-keyed: O(1) release
         self._rejected: Dict[int, Request] = {}
-        # terminal failure/degradation dispositions, keyed like _finished
-        self._cancelled: Dict[int, Request] = {}
-        self._expired: Dict[int, Request] = {}
-        self._failed: Dict[int, Request] = {}
-        self._shed: Dict[int, Request] = {}
+        # terminal failure/degradation dispositions, keyed like _finished:
+        # one bucket per fate the lifecycle table declares
+        self._disposed: Dict[str, Dict[int, Request]] = {
+            fate: {} for fate in lifecycle.FATES}
         self.retried = 0                 # fault-retry requeue events
         self.brownouts = 0               # brownout activations
         self._brownout_active = False
@@ -632,8 +621,7 @@ class ServingSession:
         # a slot (e.g. cancelled while future-queued)
         self.backend.on_finished(entry.name, [req])
         entry.policy.request_finished([req])
-        {"cancelled": self._cancelled, "expired": self._expired,
-         "failed": self._failed, "shed": self._shed}[fate][req.rid] = req
+        self._disposed[fate][req.rid] = req
         if fate != "cancelled":      # caller choice is not a QoS outcome
             self._note_outcome(entry, ok=False)
         return True
@@ -915,8 +903,7 @@ class ServingSession:
         while self.step():
             sig = (self.now, self.log.runs_executed, self.log.faults,
                    self.retried, self.outstanding, len(self._finished),
-                   len(self._cancelled), len(self._expired),
-                   len(self._failed), len(self._shed))
+                   *(len(d) for d in self._disposed.values()))
             if sig == last_sig:
                 stalls += 1
                 if stalls >= stall_limit:
@@ -955,10 +942,8 @@ class ServingSession:
         self.handles.pop(req.rid, None)
         self._finished.pop(req.rid, None)
         self._rejected.pop(req.rid, None)
-        self._cancelled.pop(req.rid, None)
-        self._expired.pop(req.rid, None)
-        self._failed.pop(req.rid, None)
-        self._shed.pop(req.rid, None)
+        for bucket in self._disposed.values():
+            bucket.pop(req.rid, None)
         self.backend.release_request(handle.model, req)
 
     # ------------------------------------------------------------------
@@ -977,19 +962,19 @@ class ServingSession:
 
     @property
     def cancelled(self) -> List[Request]:
-        return list(self._cancelled.values())
+        return list(self._disposed["cancelled"].values())
 
     @property
     def expired(self) -> List[Request]:
-        return list(self._expired.values())
+        return list(self._disposed["expired"].values())
 
     @property
     def failed(self) -> List[Request]:
-        return list(self._failed.values())
+        return list(self._disposed["failed"].values())
 
     @property
     def shed(self) -> List[Request]:
-        return list(self._shed.values())
+        return list(self._disposed["shed"].values())
 
     def stats(self) -> ServeStats:
         duration = self.duration if self.duration is not None else self.now
@@ -1004,10 +989,10 @@ class ServingSession:
                           finished=list(self._finished.values()),
                           rejected=len(self._rejected),
                           rejected_requests=list(self._rejected.values()),
-                          cancelled_requests=list(self._cancelled.values()),
-                          expired_requests=list(self._expired.values()),
-                          failed_requests=list(self._failed.values()),
-                          shed_requests=list(self._shed.values()),
+                          cancelled_requests=self.cancelled,
+                          expired_requests=self.expired,
+                          failed_requests=self.failed,
+                          shed_requests=self.shed,
                           retried=self.retried,
                           classes=dict(self._classes),
                           models={e.name: e.policy.name for e in entries})

@@ -1,0 +1,568 @@
+"""Dataflow framework suite: CFG lowering, the worklist engine, and the
+three path-sensitive checkers (slot-leak, handle-lattice,
+wallclock-taint) against seeded violations and their clean twins.
+
+Fixture files live under ``tmp_path/repro/...`` (or ``tmp_path/tests``,
+``tmp_path/benchmarks``) because checker scoping keys on the
+repo-relative suffix after the last path marker — same convention as
+``test_reprolint.py``.
+"""
+import ast
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.cfg import (EXC, FALSE, NORMAL, TRUE, build_cfg,
+                                functions)
+from repro.analysis.dataflow import Analysis, analyze
+from repro.analysis.lint import ALL_CHECKERS, PROJECT_CHECKERS, run_lint
+from repro.core import lifecycle
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _func(src: str, name: str = None) -> ast.FunctionDef:
+    tree = ast.parse(src)
+    for f in functions(tree):
+        if name is None or f.name == name:
+            return f
+    raise AssertionError(f"no function {name!r} in fixture")
+
+
+def _write(tmp_path: Path, rel: str, text: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return p
+
+
+def _lint(tmp_path, rel, text, checker):
+    p = _write(tmp_path, rel, text)
+    return run_lint([p], checkers=[c for c in ALL_CHECKERS
+                                   if c.name == checker])
+
+
+def _lint_project(paths):
+    """Full project-checker run (wallclock-taint) over ``paths``."""
+    return run_lint(paths, checkers=[], project_checkers=PROJECT_CHECKERS)
+
+
+# ---------------------------------------------------------------------------
+# CFG construction
+# ---------------------------------------------------------------------------
+
+def _edge_kinds(cfg):
+    return {(e.src, e.dst, e.kind)
+            for edges in cfg.succs.values() for e in edges}
+
+
+def test_cfg_straight_line_reaches_exit():
+    cfg = build_cfg(_func("def f(x):\n    y = x + 1\n    return y\n"))
+    # entry -> assign -> return -> exit, and exc edges to the raise exit
+    kinds = _edge_kinds(cfg)
+    assert any(k == NORMAL and d == cfg.exit.nid for _, d, k in kinds)
+    assert any(k == EXC and d == cfg.raise_exit.nid for _, d, k in kinds)
+
+
+def test_cfg_if_has_true_false_edges_carrying_the_test():
+    cfg = build_cfg(_func(
+        "def f(x):\n"
+        "    if x is None:\n"
+        "        return 0\n"
+        "    return 1\n"))
+    branches = [n for n in cfg.nodes.values() if n.kind == "branch"]
+    assert len(branches) == 1
+    assert isinstance(branches[0].test, ast.Compare)
+    out = {e.kind for e in cfg.succs[branches[0].nid]}
+    assert TRUE in out and FALSE in out
+
+
+def test_cfg_try_except_routes_body_exceptions_to_handler():
+    cfg = build_cfg(_func(
+        "def f(x):\n"
+        "    try:\n"
+        "        y = g(x)\n"
+        "    except ValueError:\n"
+        "        y = None\n"
+        "    return y\n"))
+    handler = [n for n in cfg.nodes.values()
+               if isinstance(n.stmt, ast.ExceptHandler)]
+    assert len(handler) == 1
+    # the try-body statement has an exc edge INTO the handler entry
+    assert any(e.kind == EXC and e.dst == handler[0].nid
+               for edges in cfg.succs.values() for e in edges)
+    # typed handler: the body keeps an escape edge to the raise exit too
+    assert any(e.kind == EXC and e.dst == cfg.raise_exit.nid
+               for edges in cfg.succs.values() for e in edges)
+
+
+def test_cfg_catch_all_handler_stops_escape():
+    cfg = build_cfg(_func(
+        "def f(x):\n"
+        "    try:\n"
+        "        y = g(x)\n"
+        "    except Exception:\n"
+        "        y = None\n"
+        "    return y\n"))
+    body = [n for n in cfg.nodes.values()
+            if n.stmt is not None and n.stmt.__class__ is ast.Assign
+            and isinstance(n.stmt.value, ast.Call)]
+    assert body, "fixture lost its try-body assign"
+    for n in body:
+        assert not any(e.kind == EXC and e.dst == cfg.raise_exit.nid
+                       for e in cfg.succs[n.nid]), \
+            "catch-all handler must absorb try-body exceptions"
+
+
+def test_cfg_finally_covers_normal_and_exceptional_paths():
+    cfg = build_cfg(_func(
+        "def f(x):\n"
+        "    try:\n"
+        "        y = g(x)\n"
+        "    finally:\n"
+        "        release(x)\n"
+        "    return y\n"))
+    fin = [n for n in cfg.nodes.values()
+           if n.stmt is not None and isinstance(n.stmt, ast.Expr)
+           and isinstance(n.stmt.value, ast.Call)
+           and getattr(n.stmt.value.func, "id", "") == "release"]
+    assert len(fin) == 1
+    # the finally body sits downstream of the try body AND feeds both
+    # the after point (-> return -> exit) and the raise exit
+    dsts = {(e.dst, e.kind) for e in cfg.succs[fin[0].nid]}
+    assert any(d == cfg.raise_exit.nid for d, _ in dsts)
+    assert any(d != cfg.raise_exit.nid and k == NORMAL for d, k in dsts)
+
+
+def test_cfg_while_loop_has_back_edge_and_break_exit():
+    cfg = build_cfg(_func(
+        "def f(q):\n"
+        "    while q:\n"
+        "        v = q.pop()\n"
+        "        if v < 0:\n"
+        "            break\n"
+        "    return q\n"))
+    headers = [n for n in cfg.nodes.values()
+               if n.kind == "branch" and isinstance(n.stmt, ast.While)]
+    assert len(headers) == 1
+    h = headers[0].nid
+    assert any(e.dst == h for edges in cfg.succs.values()
+               for e in edges if e.src != h), "no loop back edge"
+    breaks = [n for n in cfg.nodes.values()
+              if isinstance(n.stmt, ast.Break)]
+    assert len(breaks) == 1
+    ret = [n for n in cfg.nodes.values() if isinstance(n.stmt, ast.Return)]
+    assert any(e.dst == ret[0].nid for e in cfg.succs[breaks[0].nid])
+
+
+def test_cfg_with_block_keeps_exception_edges():
+    cfg = build_cfg(_func(
+        "def f(x):\n"
+        "    with lock(x):\n"
+        "        y = g(x)\n"
+        "    return y\n"))
+    # __exit__ suppression is not modeled: body exceptions escape
+    assert any(e.kind == EXC and e.dst == cfg.raise_exit.nid
+               for edges in cfg.succs.values() for e in edges)
+
+
+def test_cfg_rejects_non_function():
+    with pytest.raises(TypeError):
+        build_cfg(ast.parse("x = 1").body[0])
+
+
+# ---------------------------------------------------------------------------
+# the worklist engine
+# ---------------------------------------------------------------------------
+
+class _ReachingTags(Analysis):
+    """var -> frozenset of assigned constant tags (classic reaching
+    definitions, small enough to eyeball)."""
+
+    def join_values(self, a, b):
+        return a | b
+
+    def transfer(self, state, stmt):
+        if isinstance(stmt, ast.Assign) \
+                and isinstance(stmt.targets[0], ast.Name) \
+                and isinstance(stmt.value, ast.Constant):
+            out = dict(state)
+            out[stmt.targets[0].id] = frozenset({stmt.value.value})
+            return out
+        return state
+
+
+def test_fixpoint_joins_loop_states_and_terminates():
+    cfg = build_cfg(_func(
+        "def f(n):\n"
+        "    x = 'a'\n"
+        "    while n:\n"
+        "        x = 'b'\n"
+        "    return x\n"))
+    states = analyze(cfg, _ReachingTags())
+    # at the function exit both definitions reach (the loop may run 0+ times)
+    assert states[cfg.exit.nid]["x"] == frozenset({"a", "b"})
+
+
+def test_fixpoint_early_return_keeps_states_separate():
+    cfg = build_cfg(_func(
+        "def f(c):\n"
+        "    x = 'a'\n"
+        "    if c:\n"
+        "        return x\n"
+        "    x = 'b'\n"
+        "    return x\n"))
+    states = analyze(cfg, _ReachingTags())
+    assert states[cfg.exit.nid]["x"] == frozenset({"a", "b"})
+    rets = [n for n in cfg.nodes.values() if isinstance(n.stmt, ast.Return)]
+    # the early return only ever sees the first definition
+    early = min(rets, key=lambda n: n.stmt.lineno)
+    assert states[early.nid]["x"] == frozenset({"a"})
+
+
+def test_exc_edges_carry_pre_state():
+    cfg = build_cfg(_func(
+        "def f():\n"
+        "    x = 'a'\n"
+        "    y = g()\n"
+        "    x = 'b'\n"
+        "    return x\n"))
+    states = analyze(cfg, _ReachingTags())
+    # g() may raise before x was rebound: the raise exit still sees 'a'
+    assert "a" in states[cfg.raise_exit.nid]["x"]
+    assert states[cfg.exit.nid]["x"] == frozenset({"b"})
+
+
+# ---------------------------------------------------------------------------
+# slot-leak
+# ---------------------------------------------------------------------------
+
+STRANDED_SLOT = """
+class Engine:
+    def dispatch(self, model, req):
+        slot = self.free_slots.popleft()
+        run = self._build(model, req)        # raises -> slot stranded!
+        self._slot[req.rid] = slot
+        return run
+"""
+
+SAFE_FINALLY = """
+class Engine:
+    def dispatch(self, model, req):
+        slot = self.free_slots.popleft()
+        try:
+            run = self._build(model, req)
+        finally:
+            self.free_slots.append(slot)
+        return run
+
+    def dispatch2(self, model, req):
+        slot = self.free_slots.popleft()
+        try:
+            run = self._build(model, req)
+        except Exception:
+            self.free_slots.append(slot)
+            raise
+        self._slot[req.rid] = slot
+        return run
+"""
+
+LEAKY_TYPED_HANDLER = """
+class Engine:
+    def dispatch(self, model, req):
+        slot = self.free_slots.popleft()
+        try:
+            run = self._build(model, req)
+        except RuntimeError:
+            self.free_slots.append(slot)
+            raise
+        self._slot[req.rid] = slot
+        return run
+"""
+
+SAFE_OWN_FIRST = """
+class Engine:
+    def dispatch(self, model, req):
+        slot = self.free_slots.popleft()
+        self._slot[req.rid] = slot           # owned before anything raises
+        return self._build(model, req)
+"""
+
+GUARDED_MAYBE = """
+class Engine:
+    def _release(self, rid):
+        slot = self._slot.pop(rid, None)
+        if slot is None:
+            return
+        self.free_slots.append(slot)
+"""
+
+UNGUARDED_POOL_POP = """
+class Engine:
+    def steal(self):
+        slot = self.free_slots.pop()
+        self._audit(slot.id)                 # attribute access can raise...
+        raise RuntimeError("stolen")         # ...and so does this
+"""
+
+
+def test_slot_leak_flags_acquire_then_raising_call(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", STRANDED_SLOT,
+                "slot-leak")
+    assert [f.checker for f in res.new] == ["slot-leak"]
+    f = res.new[0]
+    assert "escaping exception" in f.message
+    assert "'slot'" in f.message
+    # reported at the ACQUIRE site, where the fingerprint is stable
+    assert "popleft" in f.snippet
+
+
+def test_slot_leak_quiet_when_exception_path_releases(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", SAFE_FINALLY,
+                "slot-leak")
+    assert res.new == []
+
+
+def test_slot_leak_typed_handler_leaves_an_escape_path(tmp_path):
+    # `except RuntimeError` may not match: other exception types still
+    # strand the slot — the path-sensitivity the syntactic rule lacked
+    res = _lint(tmp_path, "repro/serving/custom.py", LEAKY_TYPED_HANDLER,
+                "slot-leak")
+    assert len(res.new) == 1
+    assert "escaping exception" in res.new[0].message
+
+
+def test_slot_leak_quiet_when_owned_before_raise(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", SAFE_OWN_FIRST,
+                "slot-leak")
+    assert res.new == []
+
+
+def test_slot_leak_none_guard_narrows_maybe(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", GUARDED_MAYBE,
+                "slot-leak")
+    assert res.new == []
+
+
+def test_slot_leak_flags_definitely_acquired_on_raise_path(tmp_path):
+    res = _lint(tmp_path, "repro/serving/custom.py", UNGUARDED_POOL_POP,
+                "slot-leak")
+    assert len(res.new) == 1
+    assert "escaping exception" in res.new[0].message
+
+
+def test_slot_leak_scoped_to_serving(tmp_path):
+    res = _lint(tmp_path, "repro/launch/custom.py", STRANDED_SLOT,
+                "slot-leak")
+    assert res.new == []
+
+
+def test_slot_leak_real_serving_stack_is_clean():
+    res = run_lint([REPO / "src" / "repro" / "serving"],
+                   checkers=[c for c in ALL_CHECKERS
+                             if c.name == "slot-leak"])
+    assert res.new == [], "\n".join(str(f) for f in res.new)
+
+
+# ---------------------------------------------------------------------------
+# handle-lattice
+# ---------------------------------------------------------------------------
+
+def _handle_lint(tmp_path, body, rel="repro/serving/session.py"):
+    return _lint(tmp_path, rel, body, "handle-lattice")
+
+
+def test_lifecycle_table_is_self_validating():
+    # the runtime depends on these invariants; the table checks itself
+    assert set(lifecycle.FATES) <= lifecycle.TERMINAL
+    assert lifecycle.RETRY_EDGE in lifecycle.EDGES
+    for src, dst in lifecycle.EDGES:
+        assert src not in lifecycle.TERMINAL
+
+
+@pytest.mark.parametrize("fate", lifecycle.FATES)
+def test_every_declared_fate_literal_is_legal(tmp_path, fate):
+    res = _handle_lint(tmp_path,
+                       f"def _expire(req):\n"
+                       f"    req.fate = {fate!r}\n")
+    assert res.new == []
+
+
+def test_unknown_fate_literal_is_flagged(tmp_path):
+    res = _handle_lint(tmp_path,
+                       "def _expire(req):\n"
+                       "    req.fate = 'vanished'\n")
+    assert [f.checker for f in res.new] == ["handle-lattice"]
+    assert "not a declared terminal disposition" in res.new[0].message
+
+
+def test_fate_none_illegal_outside_init(tmp_path):
+    res = _handle_lint(tmp_path,
+                       "def resurrect(req):\n"
+                       "    req.fate = None\n")
+    assert len(res.new) == 1
+    assert "absorbing" in res.new[0].message
+    res2 = _handle_lint(tmp_path / "b",
+                        "class Request:\n"
+                        "    def __init__(self):\n"
+                        "        self.fate = None\n")
+    assert res2.new == []
+
+
+def test_dynamic_fate_only_in_declared_funnel(tmp_path):
+    body = ("def {name}(req, fate):\n"
+            "    req.fate = fate\n")
+    funnel = sorted(lifecycle.FATE_SETTER_FUNCTIONS)[0]
+    assert _handle_lint(tmp_path / "a",
+                        body.format(name=funnel)).new == []
+    res = _handle_lint(tmp_path / "b", body.format(name="set_fate"))
+    assert len(res.new) == 1
+    assert "funnel" in res.new[0].message
+
+
+def test_rollback_writes_only_in_retry_functions(tmp_path):
+    retry = sorted(lifecycle.RETRY_FUNCTIONS)[0]
+    body = ("def {name}(self, req):\n"
+            "    req.t_first_issue = None\n"
+            "    req.idx = 0\n"
+            "    req._running = False\n")
+    assert _handle_lint(tmp_path / "a",
+                        body.format(name=retry)).new == []
+    res = _handle_lint(tmp_path / "b", body.format(name="reset"))
+    assert len(res.new) == 3
+    assert all("backward edge" in f.message for f in res.new)
+
+
+def test_rollback_literal_compared_by_repr_not_equality(tmp_path):
+    # idx = False would pass a == comparison (False == 0); it must not
+    # count as the declared rewind — but it must not crash either
+    res = _handle_lint(tmp_path,
+                       "def reset(self, req):\n"
+                       "    req.idx = False\n")
+    assert res.new == []
+
+
+def test_absorbing_second_fate_on_same_path_flagged(tmp_path):
+    res = _handle_lint(tmp_path,
+                       "def sweep(self, req):\n"
+                       "    req.fate = 'expired'\n"
+                       "    self._log(req)\n"
+                       "    req.fate = 'cancelled'\n")
+    assert len(res.new) == 1
+    assert "terminal -> terminal" in res.new[0].message
+
+
+def test_absorbing_fates_on_disjoint_paths_are_fine(tmp_path):
+    res = _handle_lint(tmp_path,
+                       "def sweep(self, req, timed_out):\n"
+                       "    if timed_out:\n"
+                       "        req.fate = 'expired'\n"
+                       "    else:\n"
+                       "        req.fate = 'cancelled'\n")
+    assert res.new == []
+
+
+def test_handle_lattice_scoped_to_lifecycle_modules(tmp_path):
+    res = _lint(tmp_path, "repro/serving/server.py",
+                "def f(req):\n    req.fate = 'vanished'\n",
+                "handle-lattice")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# wallclock-taint
+# ---------------------------------------------------------------------------
+
+LAUNDER_HELPER = """
+import time
+
+
+def stamp():
+    return time.perf_counter()
+"""
+
+LAUNDER_SINK = """
+from repro.launch.helper import stamp
+
+
+def schedule(queue):
+    return stamp()
+"""
+
+AUDITED_HELPER = """
+import time
+
+
+def stamp():
+    return time.perf_counter()  # reprolint: disable=wallclock-taint
+"""
+
+BARRIER_SINK = """
+def advance(self, backend, model, sb, run):
+    lat, toks = backend.execute_run(model, sb, run)
+    return lat
+"""
+
+
+def test_taint_crosses_files_through_the_call_graph(tmp_path):
+    helper = _write(tmp_path, "src/repro/launch/helper.py", LAUNDER_HELPER)
+    sink = _write(tmp_path, "src/repro/core/sched.py", LAUNDER_SINK)
+    res = _lint_project([helper, sink])
+    assert [f.checker for f in res.new] == ["wallclock-taint"]
+    f = res.new[0]
+    assert f.path == "repro/core/sched.py"
+    assert "launders wall time" in f.message
+    assert "perf_counter" in f.message          # the witness chain
+
+
+def test_suppressed_read_is_an_audited_boundary(tmp_path):
+    helper = _write(tmp_path, "src/repro/launch/helper.py", AUDITED_HELPER)
+    sink = _write(tmp_path, "src/repro/core/sched.py", LAUNDER_SINK)
+    res = _lint_project([helper, sink])
+    assert res.new == []
+
+
+def test_direct_read_in_virtual_time_module_flagged(tmp_path):
+    sink = _write(tmp_path, "src/repro/core/clocky.py",
+                  "import time\n\n\ndef now():\n    return time.time()\n")
+    res = _lint_project([sink])
+    assert len(res.new) == 1
+    assert "virtual-time module" in res.new[0].message
+
+
+def test_backend_contract_calls_are_barriers(tmp_path):
+    helper = _write(tmp_path, "src/repro/serving/jax_engine2.py",
+                    "import time\n\n\n"
+                    "class E:\n"
+                    "    def execute_run(self, model, sb, run):\n"
+                    "        t = time.perf_counter()\n"
+                    "        return t, None\n")
+    sink = _write(tmp_path, "src/repro/serving/session2.py", BARRIER_SINK)
+    res = _lint_project([helper, sink])
+    # the engine file is not virtual-time scope, the session call is a
+    # barrier: no finding on either side
+    assert res.new == []
+
+
+def test_unrelated_same_name_function_does_not_taint(tmp_path):
+    # a benchmark's run() reads the clock; an unimported module's run()
+    # must not inherit the taint just by sharing the name
+    bench = _write(tmp_path, "benchmarks/somebench.py",
+                   "import time\n\n\ndef run():\n"
+                   "    return time.perf_counter()\n")
+    core = _write(tmp_path, "src/repro/core/other.py",
+                  "def drive(policy):\n    return policy.run()\n")
+    res = _lint_project([bench, core])
+    assert res.new == []
+
+
+def test_tests_are_callers_never_callees(tmp_path):
+    # a test helper that reads the clock shares a production name; the
+    # production caller must not be tainted through it
+    t = _write(tmp_path, "tests/test_helper.py",
+               "import time\n\n\ndef advance():\n"
+               "    return time.perf_counter()\n")
+    core = _write(tmp_path, "src/repro/core/other.py",
+                  "def drive(sess):\n    return sess.advance()\n")
+    res = _lint_project([t, core])
+    assert res.new == []
