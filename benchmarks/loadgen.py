@@ -1,0 +1,458 @@
+"""Open-loop async load generator for the serving gateway.
+
+Drives a live gateway (``python -m repro.launch.gateway``) with a
+seeded Poisson or bursty (two-state MMPP) arrival process — open loop:
+arrival times are drawn up front and honored regardless of response
+latency, so an overloaded server cannot slow the offered load down
+(the classic closed-loop coordination-omission trap). Each arrival is
+one ``POST /v1/generate`` exchange over a fresh connection; SSE events
+are consumed as they stream and the terminal ``done``/``error`` event
+supplies the session-clock latency/TTFT the SLA numbers are judged on
+(wall figures are recorded alongside).
+
+Reports p50/p95/p99 latency, TTFT, per-tier attainment, and error/shed
+rates to ``BENCH_gateway.json``.
+
+Two modes:
+
+  * **live** — aim at an already-running gateway (``--host``/``--port``).
+  * **spawn** — launch one gateway subprocess per policy from a command
+    template (``--spawn "... --policy {policy} --port {port} ..."``,
+    ``--policies lazyb,graphb``), wait on ``/readyz``, replay the SAME
+    seeded arrival sequence against each, SIGTERM it, and gate on a
+    clean drain (exit 0). This produces the lazyb-vs-graphb comparison
+    artifact CI uploads.
+
+Example (sim backend, 50x compression, overload mixture)::
+
+    python benchmarks/loadgen.py --rate 400 --duration 4 \
+        --tiers gold:0.05:0.3,bulk:0.5:0.7 \
+        --spawn "python -m repro.launch.gateway --policy {policy} \
+                 --port {port} --time-scale 50 --mem-slots 48 \
+                 --max-queue 256 --sla-tiers gold:0.05,bulk:0.5 \
+                 --assert-no-leak --quiet" \
+        --policies lazyb,graphb --json-out BENCH_gateway.json
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import shlex
+import signal
+import subprocess
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# arrival processes (seeded; identical across compared policies)
+# ---------------------------------------------------------------------------
+
+def poisson_arrivals(rate: float, duration: float,
+                     rng: np.random.Generator) -> List[float]:
+    out, t = [], 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t >= duration:
+            return out
+        out.append(t)
+
+
+def bursty_arrivals(rate: float, duration: float,
+                    rng: np.random.Generator) -> List[float]:
+    """Two-state MMPP: alternate lo (0.3x) / hi (2x) phases so the mean
+    offered load stays near ``rate`` while bursts stress the queue."""
+    out, t, hi = [], 0.0, False
+    period = duration / 6.0
+    while t < duration:
+        phase_rate = rate * (2.0 if hi else 0.3)
+        end = min(t + period, duration)
+        tt = t
+        while True:
+            tt += rng.exponential(1.0 / phase_rate)
+            if tt >= end:
+                break
+            out.append(tt)
+        t, hi = end, not hi
+    return out
+
+
+def parse_tiers(spec: Optional[str]) -> List[Tuple[str, float, float]]:
+    """``name:deadline_s:weight[,...]`` -> [(name, deadline, weight)]."""
+    if not spec:
+        return [("default", float("nan"), 1.0)]
+    tiers = []
+    for part in spec.split(","):
+        name, deadline, weight = part.strip().split(":")
+        tiers.append((name, float(deadline), float(weight)))
+    total = sum(w for _, _, w in tiers)
+    return [(n, d, w / total) for n, d, w in tiers]
+
+
+def parse_models(spec: Optional[str]) -> List[Tuple[str, float]]:
+    if not spec:
+        return []
+    pairs = []
+    for part in spec.split(","):
+        name, _, share = part.strip().rpartition(":")
+        pairs.append((name, float(share)))
+    total = sum(s for _, s in pairs)
+    return [(n, s / total) for n, s in pairs]
+
+
+# ---------------------------------------------------------------------------
+# one HTTP exchange over raw asyncio streams
+# ---------------------------------------------------------------------------
+
+async def _read_headers(reader) -> Tuple[int, Dict[str, str]]:
+    status_line = await reader.readline()
+    parts = status_line.decode("latin-1").split(" ", 2)
+    status = int(parts[1])
+    headers: Dict[str, str] = {}
+    while True:
+        line = await reader.readline()
+        if line in (b"\r\n", b"\n", b""):
+            break
+        name, _, value = line.decode("latin-1").partition(":")
+        headers[name.strip().lower()] = value.strip()
+    return status, headers
+
+
+async def do_request(host: str, port: int, path: str, body: dict,
+                     t0: float) -> dict:
+    """One exchange; returns the per-request record."""
+    loop = asyncio.get_running_loop()
+    result = {"status": 0, "fate": None, "tokens": 0,
+              "latency_s": None, "ttft_s": None,
+              "wall_ms": None, "ttfb_wall_ms": None}
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        payload = json.dumps(body).encode("utf-8")
+        head = (f"POST {path} HTTP/1.1\r\nhost: {host}\r\n"
+                f"content-type: application/json\r\n"
+                f"content-length: {len(payload)}\r\n"
+                f"connection: close\r\n\r\n")
+        writer.write(head.encode("latin-1") + payload)
+        await writer.drain()
+        status, headers = await _read_headers(reader)
+        result["status"] = status
+        result["ttfb_wall_ms"] = (loop.time() - t0) * 1e3
+        if headers.get("retry-after"):
+            result["retry_after"] = float(headers["retry-after"])
+        if headers.get("content-type", "").startswith("text/event-stream"):
+            async for event, data in _sse_events(reader):
+                if event == "token":
+                    result["tokens"] += 1
+                elif event in ("done", "error"):
+                    result["fate"] = data.get("fate", event)
+                    result["latency_s"] = data.get("latency_s")
+                    result["ttft_s"] = data.get("ttft_s")
+                    if event == "error":
+                        result["status"] = data.get("status", 500)
+        else:
+            length = int(headers.get("content-length", "0"))
+            raw = await reader.readexactly(length) if length else b""
+            if raw:
+                data = json.loads(raw.decode("utf-8"))
+                result["fate"] = data.get("error", data.get("fate"))
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except ConnectionError:
+            pass
+    result["wall_ms"] = (loop.time() - t0) * 1e3
+    return result
+
+
+async def _sse_events(reader):
+    event, data_lines = None, []
+    while True:
+        line = await reader.readline()
+        if not line:
+            return
+        text = line.decode("utf-8").rstrip("\r\n")
+        if not text:
+            if event is not None or data_lines:
+                payload = {}
+                if data_lines:
+                    try:
+                        payload = json.loads("\n".join(data_lines))
+                    except ValueError:
+                        payload = {"raw": "\n".join(data_lines)}
+                yield event or "message", payload
+            event, data_lines = None, []
+            continue
+        if text.startswith("event:"):
+            event = text[len("event:"):].strip()
+        elif text.startswith("data:"):
+            data_lines.append(text[len("data:"):].strip())
+
+
+async def fetch(host: str, port: int, path: str) -> Tuple[int, bytes]:
+    reader, writer = await asyncio.open_connection(host, port)
+    try:
+        writer.write((f"GET {path} HTTP/1.1\r\nhost: {host}\r\n"
+                      f"connection: close\r\n\r\n").encode("latin-1"))
+        await writer.drain()
+        status, headers = await _read_headers(reader)
+        body = await reader.read()
+        return status, body
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except ConnectionError:
+            pass
+
+
+# ---------------------------------------------------------------------------
+# one load run
+# ---------------------------------------------------------------------------
+
+async def run_load(args, host: str, port: int) -> dict:
+    rng = np.random.default_rng(args.seed)
+    arrivals = (bursty_arrivals if args.bursty else poisson_arrivals)(
+        args.rate, args.duration, rng)
+    tiers = parse_tiers(args.tiers)
+    models = parse_models(args.models)
+    tier_idx = rng.choice(len(tiers), size=len(arrivals),
+                          p=[w for _, _, w in tiers])
+    model_idx = (rng.choice(len(models), size=len(arrivals),
+                            p=[s for _, s in models])
+                 if models else None)
+    loop = asyncio.get_running_loop()
+    t_start = loop.time()
+    records: List[Optional[dict]] = [None] * len(arrivals)
+    metrics_scrape: Dict[str, List[str]] = {}
+
+    async def one(i: int, at: float) -> None:
+        await asyncio.sleep(max(0.0, (t_start + at) - loop.time()))
+        name, _, _ = tiers[tier_idx[i]]
+        body = {"sla_class": name} if name != "default" else {}
+        if model_idx is not None:
+            body["model"] = models[model_idx[i]][0]
+        t0 = loop.time()
+        try:
+            records[i] = await asyncio.wait_for(
+                do_request(host, port, "/v1/generate", body, t0),
+                timeout=args.client_timeout)
+        except (ConnectionError, asyncio.TimeoutError, OSError) as exc:
+            records[i] = {"status": -1, "fate": type(exc).__name__,
+                          "tokens": 0, "latency_s": None, "ttft_s": None,
+                          "wall_ms": (loop.time() - t0) * 1e3,
+                          "ttfb_wall_ms": None}
+        records[i]["tier"] = name
+
+    async def scrape() -> None:
+        # mid-run /metrics snapshot: proves live per-model attainment,
+        # queue depth and arena residency are exposed under load
+        await asyncio.sleep(args.duration * 0.7)
+        try:
+            _, text = await fetch(host, port, "/metrics")
+        except (ConnectionError, OSError):
+            return
+        wanted = ("gateway_attainment", "gateway_queue_depth",
+                  "gateway_arena_", "gateway_inflight")
+        for line in text.decode("utf-8").splitlines():
+            if line.startswith(wanted):
+                key = line.split("{")[0].split(" ")[0]
+                metrics_scrape.setdefault(key, []).append(line)
+
+    tasks = [asyncio.create_task(one(i, at))
+             for i, at in enumerate(arrivals)]
+    if args.scrape_metrics:
+        tasks.append(asyncio.create_task(scrape()))
+    await asyncio.gather(*tasks)
+    report = summarize([r for r in records if r is not None], tiers, args)
+    if metrics_scrape:
+        report["metrics_scrape"] = metrics_scrape
+    return report
+
+
+def _pcts(xs: List[float]) -> dict:
+    if not xs:
+        return {"mean": None, "p50": None, "p95": None, "p99": None}
+    arr = np.asarray(xs)
+    return {"mean": round(float(arr.mean()), 4),
+            "p50": round(float(np.percentile(arr, 50)), 4),
+            "p95": round(float(np.percentile(arr, 95)), 4),
+            "p99": round(float(np.percentile(arr, 99)), 4)}
+
+
+def summarize(records: List[dict],
+              tiers: List[Tuple[str, float, float]], args) -> dict:
+    by_status: Dict[str, int] = {}
+    by_fate: Dict[str, int] = {}
+    for r in records:
+        by_status[str(r["status"])] = by_status.get(str(r["status"]), 0) + 1
+        if r["fate"]:
+            by_fate[r["fate"]] = by_fate.get(r["fate"], 0) + 1
+    done = [r for r in records if r["fate"] == "done"]
+    lat = [r["latency_s"] * 1e3 for r in done
+           if r["latency_s"] is not None]
+    ttft = [r["ttft_s"] * 1e3 for r in done if r["ttft_s"] is not None]
+    # per-tier attainment over every SUBMITTED request of the tier
+    # (errors/sheds are misses), matching ServeStats' accounting
+    attainment = {}
+    for name, deadline, _ in tiers:
+        if np.isnan(deadline):
+            continue
+        mine = [r for r in records if r.get("tier") == name]
+        if mine:
+            ok = sum(1 for r in mine
+                     if r["fate"] == "done" and r["latency_s"] is not None
+                     and r["latency_s"] <= deadline)
+            attainment[name] = round(ok / len(mine), 4)
+    return {
+        "submitted": len(records),
+        "completed": len(done),
+        "statuses": dict(sorted(by_status.items())),
+        "fates": dict(sorted(by_fate.items())),
+        "backpressure_429": by_status.get("429", 0),
+        "shed_503": by_status.get("503", 0),
+        "latency_ms": _pcts(lat),
+        "ttft_ms": _pcts(ttft),
+        "wall_ms": _pcts([r["wall_ms"] for r in records
+                          if r["wall_ms"] is not None]),
+        "tokens_streamed": sum(r["tokens"] for r in records),
+        "attainment": attainment,
+    }
+
+
+# ---------------------------------------------------------------------------
+# spawn mode
+# ---------------------------------------------------------------------------
+
+async def wait_ready(host: str, port: int, timeout: float = 30.0) -> bool:
+    loop = asyncio.get_running_loop()
+    deadline = loop.time() + timeout
+    while loop.time() < deadline:
+        try:
+            status, _ = await fetch(host, port, "/readyz")
+            if status == 200:
+                return True
+        except (ConnectionError, OSError):
+            pass
+        await asyncio.sleep(0.05)
+    return False
+
+
+async def run_spawned(args, policy: str, port: int) -> dict:
+    cmd = shlex.split(args.spawn.format(policy=policy, port=port))
+    proc = subprocess.Popen(cmd)
+    try:
+        if not await wait_ready(args.host, port):
+            proc.send_signal(signal.SIGTERM)
+            proc.wait(timeout=20)
+            return {"error": f"gateway for {policy} never became ready"}
+        report = await run_load(args, args.host, port)
+    except BaseException:
+        proc.kill()
+        proc.wait(timeout=20)
+        raise
+    proc.send_signal(signal.SIGTERM)
+    try:
+        code = proc.wait(timeout=60)
+    except subprocess.TimeoutExpired:
+        proc.kill()
+        code = proc.wait(timeout=20)
+    report["gateway_exit"] = code
+    report["clean_drain"] = code == 0
+    return report
+
+
+# ---------------------------------------------------------------------------
+
+async def amain(args) -> int:
+    doc = {
+        "invocation": {"argv": list(sys.argv), "seed": args.seed},
+        "config": {"rate": args.rate, "duration": args.duration,
+                   "bursty": args.bursty, "tiers": args.tiers,
+                   "models": args.models,
+                   "client_timeout": args.client_timeout},
+        "runs": {},
+    }
+    failed = False
+    if args.spawn:
+        policies = [p.strip() for p in args.policies.split(",")]
+        for i, policy in enumerate(policies):
+            port = args.port + i
+            print(f"[loadgen] spawning {policy} gateway on :{port}",
+                  file=sys.stderr)
+            report = await run_spawned(args, policy, port)
+            doc["runs"][policy] = report
+            if report.get("error") or not report.get("clean_drain"):
+                failed = True
+        tight = min(parse_tiers(args.tiers), key=lambda t: t[1])
+        if not np.isnan(tight[1]) and len(doc["runs"]) > 1:
+            doc["comparison"] = {
+                "tight_tier": tight[0],
+                "attainment": {p: r.get("attainment", {}).get(tight[0])
+                               for p, r in doc["runs"].items()}}
+    else:
+        doc["runs"]["live"] = await run_load(args, args.host, args.port)
+    for name, report in doc["runs"].items():
+        if "error" in report:
+            print(f"[loadgen] {name}: {report['error']}", file=sys.stderr)
+            continue
+        print(f"[loadgen] {name}: submitted {report['submitted']}  "
+              f"completed {report['completed']}  "
+              f"429s {report['backpressure_429']}  "
+              f"p99 {report['latency_ms']['p99']}ms  "
+              f"attainment {report['attainment']}", file=sys.stderr)
+        if args.assert_completions and (report["completed"]
+                                        < args.assert_completions):
+            print(f"[loadgen] GATE: {name} completed "
+                  f"{report['completed']} < {args.assert_completions}",
+                  file=sys.stderr)
+            failed = True
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(doc, f, indent=2)
+        print(f"[loadgen] wrote {args.json_out}", file=sys.stderr)
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="gateway port (spawn mode: first port; each "
+                         "additional policy gets port+1, +2, ...)")
+    ap.add_argument("--rate", type=float, default=50.0,
+                    help="offered load in requests per WALL second")
+    ap.add_argument("--duration", type=float, default=2.0,
+                    help="wall seconds of offered load")
+    ap.add_argument("--bursty", action="store_true",
+                    help="two-state MMPP bursts instead of Poisson")
+    ap.add_argument("--tiers", default=None,
+                    help='"name:deadline_s:weight[,...]" — tier mix and '
+                         "the deadlines attainment is judged against "
+                         "(session clock)")
+    ap.add_argument("--models", default=None,
+                    help='"name:share[,...]" model mix (omit for the '
+                         "gateway's single registered model)")
+    ap.add_argument("--client-timeout", type=float, default=30.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--spawn", default=None,
+                    help="gateway command template with {policy} and "
+                         "{port} placeholders; loadgen manages the "
+                         "process per --policies entry")
+    ap.add_argument("--policies", default="lazyb",
+                    help="comma list of policies for spawn mode")
+    ap.add_argument("--scrape-metrics", action="store_true",
+                    help="snapshot /metrics mid-run into the artifact")
+    ap.add_argument("--assert-completions", type=int, default=None,
+                    help="gate: exit 1 when a run completes fewer "
+                         "requests than this")
+    ap.add_argument("--json-out", default="BENCH_gateway.json")
+    args = ap.parse_args(argv)
+    return asyncio.run(amain(args))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -245,6 +245,31 @@ VIRTUAL_TIME_SUFFIXES = (
 )
 
 
+#: Audited wall-clock boundaries: modules whose *job* is to touch the
+#: wall clock, reviewed as a unit rather than via per-line suppressions.
+#: The serving gateway is the canonical case — it paces the virtual-time
+#: session against real time (``SessionDriver``: ``target = (loop.time()
+#: - t0) * time_scale``), serves SSE to real sockets, and enforces
+#: wall-clock request timeouts. Per-line ``# reprolint:`` pragmas on
+#: every ``loop.time()`` there would be pure noise and would train
+#: readers to ignore suppressions; declaring the prefix keeps the audit
+#: meaningful where it matters (the sim/replay path stays strict: a
+#: clock read in ``serving/session.py`` et al. still fires, and taint
+#: still propagates out of any NON-audited module into virtual-time
+#: code). Adding a prefix here is a reviewed audit decision — the
+#: boundary module must keep wall time out of SLA/latency arithmetic,
+#: as ``gateway/bridge.py``'s module docstring spells out.
+WALLCLOCK_AUDITED_PREFIXES = (
+    "repro/serving/gateway/",
+)
+
+
+def is_wallclock_audited(rel: str) -> bool:
+    """True when ``rel`` lies inside a declared, audited wall-clock
+    boundary (see :data:`WALLCLOCK_AUDITED_PREFIXES`)."""
+    return rel.startswith(WALLCLOCK_AUDITED_PREFIXES)
+
+
 def is_virtual_time_file(rel: str) -> bool:
     if "repro/core/" in rel:
         return True

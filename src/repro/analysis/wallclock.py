@@ -12,7 +12,10 @@ checker closes the laundering hole with call-graph taint propagation
     A read carrying a ``# reprolint: disable=wallclock-taint``
     suppression is an *audited boundary*: it neither reports nor taints
     its function (this is how ``launch/roofline.py``'s probe timings
-    stay legal).
+    stay legal). Whole modules whose job is wall time — the serving
+    gateway — are declared in
+    :data:`~repro.analysis.base.WALLCLOCK_AUDITED_PREFIXES` and audited
+    as a unit, with the same no-report/no-taint semantics.
   * **propagation** — a function is tainted if it reads a source or
     calls a tainted function (resolved over the import neighborhood;
     see :mod:`callgraph`). Backend-contract method names are
@@ -30,7 +33,8 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List, Tuple
 
-from .base import Finding, ProjectChecker, is_virtual_time_file
+from .base import (Finding, ProjectChecker, is_virtual_time_file,
+                   is_wallclock_audited)
 from .callgraph import BARRIER_METHODS as _BARRIERS
 from .callgraph import CallGraph, FileFacts
 
@@ -70,6 +74,12 @@ class WallclockTaintChecker(ProjectChecker):
         """Fixpoint: (rel, qualname) -> witness chain text."""
         tainted: Dict[_Key, str] = {}
         for rel, ff in facts.items():
+            if is_wallclock_audited(rel):
+                # a declared wall-clock boundary (the serving gateway):
+                # its reads are audited as a unit, so they neither
+                # report nor seed taint — exactly like a per-line
+                # suppression, minus the line noise
+                continue
             for q, fn in ff.functions.items():
                 for read in fn.clock_reads:
                     if not read["suppressed"]:

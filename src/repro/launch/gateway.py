@@ -1,0 +1,233 @@
+"""Serve a live HTTP/SSE gateway over a ServingSession.
+
+Network front-end counterpart to :mod:`repro.launch.serve` (trace
+replay): builds the same engine/policy/session stack from the same
+flags, then serves it at ``POST /v1/generate`` with SSE token
+streaming, ``GET /metrics`` Prometheus exposition, health/readiness
+probes, bounded-ingress 429 backpressure, and graceful SIGTERM drain.
+
+Examples::
+
+    # sim backend at 50x wall compression, two tiers, bounded ingress
+    python -m repro.launch.gateway --policy lazyb --time-scale 50 \
+        --sla-tiers gold:0.05,bulk:0.5 --mem-slots 64 --max-queue 256
+
+    # reduced JAX engine on CPU, real wall-clock run latencies
+    python -m repro.launch.gateway --engine jax --arch llama3.2-1b \
+        --time-scale 1 --port 8080
+
+    curl -N localhost:8080/v1/generate -d \
+        '{"model": "transformer", "sla_class": "gold"}'
+
+Exit status: 0 after a clean drain; 1 when ``--assert-no-leak`` finds
+resident KV slots after drain (the CI smoke gate).
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import json
+import sys
+
+import numpy as np
+
+from ..core.arbiter import LeastSlackArbiter, RoundRobinArbiter
+from ..serving.backend import MultiBackend
+from ..serving.gateway import GatewayApp
+from ..serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
+from ..serving.server import SimExecutor
+from ..serving.session import ServingSession
+from ..serving.workload import get_workload
+from .serve import (_jax_engine, _session_kwargs, _split_mem_slots,
+                    _wrap_faults, build_policy, parse_mem_shares,
+                    parse_models, parse_shed_priorities, parse_tiers)
+
+
+def build_session(args) -> ServingSession:
+    """The serve.py session stack, minus the trace: sim or JAX engine,
+    single- or multi-model, same policy/memory/fault/shedding knobs."""
+    perf = NPUPerfModel(PAPER_NPU if args.hw == "paper" else TPU_V5E)
+    if args.models:
+        shares = parse_models(args.models)
+        mem_shares = parse_mem_shares(args.mem_shares)
+        if args.engine == "jax":
+            caps = _split_mem_slots(args.mem_slots, shares, mem_shares)
+            pairs = {name: _jax_engine(name, args, caps.get(name))
+                     for name, _ in shares}
+            workloads = {name: wl for name, (_, wl) in pairs.items()}
+            backend = MultiBackend({name: eng
+                                    for name, (eng, _) in pairs.items()})
+            arb_shares = None
+        else:
+            workloads = {name: get_workload(name) for name, _ in shares}
+            backend = SimExecutor(perf, max_slots=args.mem_slots)
+            arb_shares = mem_shares
+        arbiter = (RoundRobinArbiter(mem_shares=arb_shares)
+                   if args.arbiter == "rr"
+                   else LeastSlackArbiter(sla_default=args.sla,
+                                          mem_shares=arb_shares))
+        session = ServingSession(backend=_wrap_faults(backend, args),
+                                 arbiter=arbiter, seed=args.seed,
+                                 **_session_kwargs(args))
+        prios = parse_shed_priorities(args.shed_priorities)
+        for name, _ in shares:
+            wl = workloads[name]
+            session.register(name, wl,
+                             policy=build_policy(args.policy, wl, perf,
+                                                 args.sla, args.max_batch,
+                                                 args.window),
+                             shed_priority=prios.get(name, 0))
+        return session
+    if args.engine == "jax":
+        backend, wl = _jax_engine(args.arch, args, args.mem_slots)
+    else:
+        wl = get_workload(args.arch)
+        backend = SimExecutor(perf, max_slots=args.mem_slots)
+    policy = build_policy(args.policy, wl, perf, args.sla, args.max_batch,
+                          args.window)
+    session = ServingSession(backend=_wrap_faults(backend, args),
+                             seed=args.seed, **_session_kwargs(args))
+    session.register(wl.name, wl, policy=policy)
+    return session
+
+
+def build_app(args, session=None) -> GatewayApp:
+    deadlines = {}
+    if args.sla_tiers:
+        deadlines = {cls.name: cls.deadline
+                     for cls in parse_tiers(args.sla_tiers)}
+    return GatewayApp(
+        session if session is not None else build_session(args),
+        host=args.host, port=args.port, time_scale=args.time_scale,
+        tick=args.tick_ms / 1e3, request_timeout=args.request_timeout,
+        max_inflight=args.max_inflight,
+        metrics_log_interval=args.metrics_log_interval,
+        default_sla=args.sla, deadline_by_class=deadlines,
+        seed=args.seed, drain_grace=args.drain_grace,
+        log_enabled=not args.quiet)
+
+
+def dump_json(path: str, app: GatewayApp, args) -> None:
+    """Drained-run artifact: exact invocation, session stats, gateway
+    counters — reproducible from the JSON alone."""
+
+    def clean(obj):
+        if isinstance(obj, dict):
+            return {k: clean(v) for k, v in obj.items()}
+        if isinstance(obj, float) and np.isnan(obj):
+            return None
+        return obj
+
+    stats = app.drained_stats
+    mem = app.session.backend.memory_stats()
+    doc = {
+        "invocation": {"argv": list(sys.argv), "seed": args.seed},
+        "args": {"engine": args.engine, "policy": args.policy,
+                 "models": args.models, "arch": args.arch,
+                 "sla": args.sla, "sla_tiers": args.sla_tiers,
+                 "time_scale": args.time_scale,
+                 "mem_slots": args.mem_slots,
+                 "max_queue": args.max_queue,
+                 "max_inflight": args.max_inflight,
+                 "fault_spec": args.fault_spec, "seed": args.seed},
+        "summary": clean(stats.summary(sla=args.sla)),
+        "per_class": clean(stats.per_class(args.sla)),
+        "per_model": clean(stats.per_model(args.sla)),
+        "gateway": clean(app.metrics.snapshot()),
+        "memory": {"slots_live": mem.slots_live,
+                   "slots_total": mem.slots_total,
+                   "max_slots": mem.max_slots},
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8080,
+                    help="listen port (0 = ephemeral, printed in the "
+                         "ready log record)")
+    ap.add_argument("--time-scale", type=float, default=1.0,
+                    help="session-clock seconds per wall second (sim "
+                         "backend: >1 compresses wall time; jax: keep 1)")
+    ap.add_argument("--tick-ms", type=float, default=2.0,
+                    help="pump interval in wall ms")
+    ap.add_argument("--request-timeout", type=float, default=None,
+                    help="per-request wall-clock budget in seconds; "
+                         "expiry cancels the handle and reports 408")
+    ap.add_argument("--max-inflight", type=int, default=None,
+                    help="gateway in-flight soft bound; beyond it new "
+                         "work gets 429 + Retry-After (protected-"
+                         "priority requests keep headroom)")
+    ap.add_argument("--metrics-log-interval", type=float, default=None,
+                    help="emit a periodic metrics log record every N "
+                         "wall seconds")
+    ap.add_argument("--drain-grace", type=float, default=5.0,
+                    help="max wall seconds to wait for handlers to "
+                         "flush after drain")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress JSON access/lifecycle logs")
+    ap.add_argument("--json-out", default=None,
+                    help="write the drained-run artifact to this file")
+    ap.add_argument("--assert-no-leak", action="store_true",
+                    help="exit 1 when KV slots remain resident after "
+                         "drain (CI smoke gate)")
+    # session stack (mirrors launch/serve.py)
+    ap.add_argument("--arch", default="transformer")
+    ap.add_argument("--models", default=None,
+                    help='multi-tenant mixture "name:share[,...]"')
+    ap.add_argument("--arbiter", default="least-slack",
+                    choices=["rr", "least-slack"])
+    ap.add_argument("--policy", default="lazyb",
+                    choices=["serial", "graphb", "cellular", "lazyb",
+                             "oracle"])
+    ap.add_argument("--engine", default="sim", choices=["sim", "jax"])
+    ap.add_argument("--sla", type=float, default=None,
+                    help="global SLA target in seconds (default: 0.1 "
+                         "sim, 60 jax)")
+    ap.add_argument("--sla-tiers", default=None,
+                    help='SLA classes requests may ask for, e.g. '
+                         '"gold:0.05,bulk:0.5"')
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--window", type=float, default=0.025)
+    ap.add_argument("--mem-slots", type=int, default=None)
+    ap.add_argument("--mem-shares", default=None)
+    ap.add_argument("--fault-spec", default=None)
+    ap.add_argument("--fault-seed", type=int, default=None)
+    ap.add_argument("--max-retries", type=int, default=None)
+    ap.add_argument("--cancel-expired", action="store_true")
+    ap.add_argument("--max-queue", type=int, default=None)
+    ap.add_argument("--shed", action="store_true")
+    ap.add_argument("--shed-priorities", default=None)
+    ap.add_argument("--hw", default="paper", choices=["paper", "v5e"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.sla is None:
+        args.sla = 60.0 if args.engine == "jax" else 0.1
+
+    app = build_app(args)
+    asyncio.run(app.run())
+
+    stats = app.drained_stats
+    summary = stats.summary(sla=args.sla)
+    print(f"gateway drained: completed {summary['completed']}  "
+          f"viol {summary.get('sla_violation_rate', float('nan')) * 100:.1f}%"
+          f"  429s {int(app.metrics.backpressure.total())}",
+          file=sys.stderr)
+    if args.json_out:
+        dump_json(args.json_out, app, args)
+    if args.assert_no_leak:
+        mem = app.session.backend.memory_stats()
+        if mem.slots_live != 0:
+            print(f"LEAK: {mem.slots_live} KV slot(s) resident after "
+                  f"drain", file=sys.stderr)
+            return 1
+        print("no leaked KV slots (slots_live=0 after drain)",
+              file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

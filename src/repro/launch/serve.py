@@ -54,6 +54,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import sys
 
 import numpy as np
 
@@ -327,6 +328,9 @@ def dump_json(path: str, stats, log, args, session=None):
         return obj
 
     doc = {
+        # exact reproduction recipe: re-running `python <argv...>` with
+        # this seed regenerates the artifact bit-for-bit (sim backend)
+        "invocation": {"argv": list(sys.argv), "seed": args.seed},
         "args": {"engine": args.engine, "policy": args.policy,
                  "rate": args.rate, "duration": args.duration,
                  "sla": args.sla, "models": args.models,

@@ -234,6 +234,7 @@ class ServeStats:
                 "sla_violation_rate": viol,
                 "sla_attainment": (_NAN if np.isnan(viol) else 1.0 - viol),
                 "p50_ms": self.percentile(50, name) * 1e3,
+                "p95_ms": self.percentile(95, name) * 1e3,
                 "p99_ms": self.percentile(99, name) * 1e3,
                 "ttft_ms": self.ttft(name) * 1e3,
                 "tpot_ms": self.tpot(name) * 1e3,
@@ -267,6 +268,7 @@ class ServeStats:
                 "sla_attainment": att,
                 "sla_violation_rate": (_NAN if np.isnan(att) else 1.0 - att),
                 "p50_ms": _percentile(reqs, 50) * 1e3,
+                "p95_ms": _percentile(reqs, 95) * 1e3,
                 "p99_ms": _percentile(reqs, 99) * 1e3,
                 "ttft_ms": _mean([r.t_first_token - r.arrival for r in reqs
                                   if r.t_first_token is not None]) * 1e3,
@@ -287,6 +289,7 @@ class ServeStats:
             "p25_ms": self.percentile(25) * 1e3,
             "p50_ms": self.percentile(50) * 1e3,
             "p75_ms": self.percentile(75) * 1e3,
+            "p95_ms": self.percentile(95) * 1e3,
             "p99_ms": self.percentile(99) * 1e3,
             "throughput_rps": self.throughput,
         }

@@ -366,6 +366,12 @@ class ServingSession:
         self._arrivals: list = []        # heap of (t, rid, seq, req, entry)
         self._seq = itertools.count()
         self._classes: Dict[str, Optional[float]] = {}
+        # observer hook, fired after each executed run (and after fault
+        # handling): on_run_boundary(session, model_name, done_requests).
+        # The serving gateway wires its metrics registry here so queue
+        # depth / arena residency / run counters are sampled at every
+        # scheduling boundary without polling.
+        self.on_run_boundary: Optional[Callable] = None
         if policy is not None:
             self.register(DEFAULT_MODEL, policy=policy)
 
@@ -827,6 +833,8 @@ class ServingSession:
             if self.retry is None:
                 raise       # no retry policy armed: pre-failure-model
             self._on_fault(entry, sb, reqs, err)
+            if self.on_run_boundary is not None:
+                self.on_run_boundary(self, entry.name, [])
             return True
         self.log.nodes_executed += len(run)
         self.log.runs_executed += 1
@@ -854,6 +862,8 @@ class ServingSession:
             dl = self._rel_deadline(r, entry)
             self._note_outcome(entry,
                                ok=(dl is None or r.latency() <= dl + 1e-12))
+        if self.on_run_boundary is not None:
+            self.on_run_boundary(self, entry.name, done_now)
         return True
 
     def _observe(self, entry: ModelEntry, req: Request):

@@ -522,6 +522,49 @@ def test_suppressed_read_is_an_audited_boundary(tmp_path):
     assert res.new == []
 
 
+GATEWAY_CLOCK = """
+import time
+
+
+def pace():
+    return time.perf_counter()
+"""
+
+
+def test_gateway_is_an_audited_wallclock_boundary(tmp_path):
+    # serving/gateway/ is declared in WALLCLOCK_AUDITED_PREFIXES: an
+    # UNSUPPRESSED clock read there neither reports nor seeds taint
+    gw = _write(tmp_path, "src/repro/serving/gateway/pacer.py",
+                GATEWAY_CLOCK)
+    res = _lint_project([gw])
+    assert res.new == []
+
+
+def test_sim_path_module_still_fires_beside_audited_gateway(tmp_path):
+    # the audit scope must not relax the sim path: the same unsuppressed
+    # read in a virtual-time serving module fires even when an audited
+    # gateway file sits in the same run
+    gw = _write(tmp_path, "src/repro/serving/gateway/pacer.py",
+                GATEWAY_CLOCK)
+    sim = _write(tmp_path, "src/repro/serving/session.py",
+                 "import time\n\n\ndef now():\n    return time.time()\n")
+    res = _lint_project([gw, sim])
+    assert [f.path for f in res.new] == ["repro/serving/session.py"]
+    assert "virtual-time module" in res.new[0].message
+
+
+def test_audited_gateway_read_does_not_taint_callers(tmp_path):
+    # the whole-module audit has suppression semantics: a virtual-time
+    # caller of a gateway clock-reading function inherits no taint
+    gw = _write(tmp_path, "src/repro/serving/gateway/pacer.py",
+                GATEWAY_CLOCK)
+    sink = _write(tmp_path, "src/repro/core/sched.py",
+                  "from repro.serving.gateway.pacer import pace\n\n\n"
+                  "def schedule(queue):\n    return pace()\n")
+    res = _lint_project([gw, sink])
+    assert res.new == []
+
+
 def test_direct_read_in_virtual_time_module_flagged(tmp_path):
     sink = _write(tmp_path, "src/repro/core/clocky.py",
                   "import time\n\n\ndef now():\n    return time.time()\n")

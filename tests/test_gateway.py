@@ -1,0 +1,518 @@
+"""Serving gateway suite: metrics primitives, fate mapping, live
+HTTP/SSE exchanges over the sim backend (virtual time bridged to wall
+pacing), backpressure/timeout middleware, SIGTERM drain through the
+launcher, and cancellation-under-streaming on the real JAX engine
+(client disconnect -> handle.cancel() -> zero slot leak, survivors
+bit-exact)."""
+import argparse
+import asyncio
+import dataclasses
+import json
+import math
+import os
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent
+                       / "benchmarks"))
+import loadgen
+
+import repro.launch.gateway as launch_gateway
+from repro.configs import get_config
+from repro.core import lifecycle
+from repro.core.policies import LazyBatching
+from repro.core.slack import SlackPredictor
+from repro.serving.gateway import (DEFAULT_BUCKETS, FATE_STATUS,
+                                   Backpressure, GatewayApp,
+                                   MetricsRegistry, status_for_state)
+from repro.serving.gateway.prom import Histogram, Rolling
+from repro.serving.npu_model import NPUPerfModel, PAPER_NPU, TPU_V5E
+from repro.serving.session import HandleState, ServingSession
+from repro.serving.workload import LengthDist, from_model_config
+
+REPO = Path(__file__).resolve().parents[1]
+HOST = "127.0.0.1"
+
+
+def _args(**over):
+    """A launch/gateway.py argument namespace with test defaults."""
+    ns = argparse.Namespace(
+        host=HOST, port=0, time_scale=200.0, tick_ms=1.0,
+        request_timeout=None, max_inflight=None,
+        metrics_log_interval=None, drain_grace=5.0, quiet=True,
+        json_out=None, assert_no_leak=False, arch="transformer",
+        models=None, arbiter="least-slack", policy="lazyb", engine="sim",
+        sla=0.1, sla_tiers="gold:0.05,bulk:0.5", max_batch=64,
+        window=0.025, mem_slots=48, mem_shares=None, fault_spec=None,
+        fault_seed=None, max_retries=None, cancel_expired=False,
+        max_queue=None, shed=False, shed_priorities=None, hw="paper",
+        seed=0)
+    for key, value in over.items():
+        setattr(ns, key, value)
+    return ns
+
+
+async def _post(port, body, timeout=30.0):
+    loop = asyncio.get_running_loop()
+    return await asyncio.wait_for(
+        loadgen.do_request(HOST, port, "/v1/generate", body, loop.time()),
+        timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# prom primitives
+# ---------------------------------------------------------------------------
+
+def test_registry_exposition_format():
+    reg = MetricsRegistry()
+    c = reg.counter("t_total", "help text", ("model",))
+    g = reg.gauge("t_depth", "queue depth")
+    c.inc(model="a")
+    c.inc(2, model='we"ird\n')
+    g.set(3)
+    text = reg.expose()
+    assert "# HELP t_total help text" in text
+    assert "# TYPE t_total counter" in text
+    assert 't_total{model="a"} 1' in text
+    assert 't_total{model="we\\"ird\\n"} 2' in text      # label escaping
+    assert "t_depth 3" in text
+    with pytest.raises(ValueError):
+        c.inc(-1, model="a")                             # counters only go up
+    with pytest.raises(ValueError):
+        c.inc(model="a", wrong="b")                      # undeclared label
+    with pytest.raises(ValueError):
+        reg.counter("t_total", "duplicate")
+
+
+def test_counter_set_total_is_idempotent_and_monotone():
+    reg = MetricsRegistry()
+    c = reg.counter("runs_total", "h")
+    c.set_total(5)
+    c.set_total(5)                 # re-sampling the same value: no double count
+    assert c.value() == 5
+    c.set_total(3)                 # upstream can never go backwards
+    assert c.value() == 5
+    c.set_total(9)
+    assert c.value() == 9
+
+
+def test_histogram_cumulative_buckets():
+    h = Histogram("lat", "h", buckets=(0.01, 0.1, 1.0))
+    for v in (0.005, 0.05, 0.5, 5.0):
+        h.observe(v)
+    rows = {f"{suffix}{labels}": val for suffix, labels, val in h.samples()}
+    assert rows['_bucket{le="0.01"}'] == 1
+    assert rows['_bucket{le="0.1"}'] == 2                # cumulative
+    assert rows['_bucket{le="1"}'] == 3
+    assert rows['_bucket{le="+Inf"}'] == 4
+    assert rows["_count"] == 4
+    assert abs(rows["_sum"] - 5.555) < 1e-9
+    with pytest.raises(ValueError):
+        Histogram("bad", "h", buckets=())
+
+
+def test_rolling_window_mean_recovers():
+    r = Rolling("att", "h", window=4)
+    for v in (0, 0, 0, 0):
+        r.observe(v)
+    assert r.value() == 0.0
+    for v in (1, 1, 1, 1):                    # overload clears: window slides
+        r.observe(v)
+    assert r.value() == 1.0
+    assert math.isnan(Rolling("empty", "h").value())
+
+
+def test_fate_status_covers_every_lifecycle_fate():
+    # a new terminal fate in the lifecycle table must pick an HTTP status
+    # (terminal = every state except the three in-service ones)
+    terminal = set(lifecycle.STATES) - {"queued", "admitted", "running"}
+    assert set(FATE_STATUS) == terminal
+    assert status_for_state(HandleState.DONE) == 200
+    assert status_for_state(HandleState.SHED) == 503
+
+
+def test_serve_stats_gain_p95():
+    args = _args()
+    session = launch_gateway.build_session(args)
+    rng = np.random.default_rng(0)
+    wl = session.registry["transformer"].workload
+    for i in range(40):
+        session.submit(wl.sample_request(rng, i * 0.002))
+    stats = session.drain()
+    s = stats.summary(sla=0.1)
+    assert s["p50_ms"] <= s["p95_ms"] <= s["p99_ms"]
+    for row in stats.per_class(0.1).values():
+        assert "p95_ms" in row
+    for row in stats.per_model(0.1).values():
+        assert "p95_ms" in row
+
+
+# ---------------------------------------------------------------------------
+# live gateway over the sim backend
+# ---------------------------------------------------------------------------
+
+def test_e2e_sim_streaming_metrics_and_drain():
+    async def scenario():
+        app = launch_gateway.build_app(_args())
+        await app.start()
+        results = await asyncio.gather(*[
+            _post(app.port, {"model": "transformer",
+                             "sla_class": "gold" if i % 2 else "bulk"})
+            for i in range(12)])
+        status, metrics = await loadgen.fetch(HOST, app.port, "/metrics")
+        status_h, _ = await loadgen.fetch(HOST, app.port, "/healthz")
+        status_r, _ = await loadgen.fetch(HOST, app.port, "/readyz")
+        stats = await app.drain()
+        return app, results, status, metrics.decode(), status_h, status_r, stats
+
+    app, results, mstatus, metrics, hstatus, rstatus, stats = (
+        asyncio.run(scenario()))
+    assert hstatus == 200 and rstatus == 200
+    for r in results:
+        assert r["status"] == 200 and r["fate"] == "done"
+        assert r["tokens"] > 0
+        assert r["latency_s"] is not None and r["ttft_s"] is not None
+        assert r["ttft_s"] <= r["latency_s"]
+    assert len(stats.finished) == 12
+    # /metrics exposes the acceptance families with live values
+    assert mstatus == 200
+    assert 'gateway_attainment{model="transformer",sla_class=' in metrics
+    assert 'gateway_queue_depth{model="transformer"}' in metrics
+    assert "gateway_arena_slots_total 48" in metrics
+    assert "gateway_requests_total" in metrics
+    assert "gateway_request_latency_seconds_bucket" in metrics
+    # zero leaked slots after drain
+    assert app.session.backend.memory_stats().slots_live == 0
+    # structured access log: one http record per exchange, each with an id
+    http_recs = [r for r in app.access_log.records if r["event"] == "http"]
+    assert len(http_recs) == 12
+    assert all(r["id"] and r["status"] == 200 and r["fate"] == "done"
+               for r in http_recs)
+    assert app.access_log.records[0]["event"] == "ready"
+    assert app.access_log.records[-1]["event"] == "drain"
+
+
+def test_bad_requests_get_400_and_unknown_route_404():
+    async def scenario():
+        app = launch_gateway.build_app(_args())
+        await app.start()
+        unknown_model = await _post(app.port, {"model": "nope"})
+        bad_tier = await _post(app.port, {"model": "transformer",
+                                          "sla_class": "platinum"})
+        s404, _ = await loadgen.fetch(HOST, app.port, "/nope")
+        s405, _ = await loadgen.fetch(HOST, app.port, "/v1/generate")
+        await app.drain()
+        return unknown_model, bad_tier, s404, s405
+
+    unknown_model, bad_tier, s404, s405 = asyncio.run(scenario())
+    assert unknown_model["status"] == 400
+    assert bad_tier["status"] == 400
+    assert s404 == 404
+    assert s405 == 405
+
+
+def test_rejected_at_admission_maps_to_422():
+    async def scenario():
+        args = _args()
+        session = launch_gateway.build_session(args)
+        session.reject_infeasible = True
+        app = GatewayApp(session, port=0, time_scale=200.0, tick=0.001,
+                         default_sla=0.1,
+                         deadline_by_class={"impossible": 1e-9},
+                         log_enabled=False)
+        await app.start()
+        r = await _post(app.port, {"model": "transformer",
+                                   "sla_class": "impossible"})
+        ok = await _post(app.port, {"model": "transformer"})
+        await app.drain()
+        return r, ok
+
+    r, ok = asyncio.run(scenario())
+    assert r["status"] == 422 and r["fate"] == "rejected"
+    assert ok["status"] == 200 and ok["fate"] == "done"
+
+
+def test_backpressure_429_with_retry_after_when_queue_full():
+    async def scenario():
+        # admission is memory-gated: with a single KV slot the first
+        # (long) request is admitted and holds the slot for ~1s of wall
+        # time at this scale, the second parks in the policy queue, and
+        # max_queue=1 saturates the ingress budget — the gateway
+        # refuses the third at the door.  time_scale is small but NOT
+        # frozen: a dispatched run advances the session clock past the
+        # wall target by its own latency, and the pump must be able to
+        # catch up before the second arrival can enter the queue.
+        app = launch_gateway.build_app(
+            _args(time_scale=0.01, max_queue=1, mem_slots=1))
+        await app.start()
+        body = {"model": "transformer", "prompt_len": 32,
+                "decode_len": 256}
+        pending = [asyncio.create_task(_post(app.port, dict(body)))]
+        await asyncio.sleep(0.3)             # admitted + first run done
+        pending.append(asyncio.create_task(_post(app.port, dict(body))))
+        await asyncio.sleep(0.3)             # parked in the policy queue
+        third = await _post(app.port, dict(body))
+        await app.drain()                    # fast-forwards: 1 & 2 complete
+        return await asyncio.gather(*pending), third, app
+
+    pending, third, app = asyncio.run(scenario())
+    assert third["status"] == 429
+    assert third["retry_after"] > 0
+    assert all(r["status"] == 200 and r["fate"] == "done" for r in pending)
+    assert app.metrics.backpressure.total() == 1
+    assert app.session.backend.memory_stats().slots_live == 0
+
+
+def test_request_timeout_408_cancels_and_frees():
+    async def scenario():
+        app = launch_gateway.build_app(
+            _args(time_scale=1e-9, request_timeout=0.25))
+        await app.start()
+        r = await _post(app.port, {"model": "transformer"})
+        handles = list(app.session.handles.values())
+        stats = await app.drain()
+        return r, handles, stats, app
+
+    r, handles, stats, app = asyncio.run(scenario())
+    assert r["status"] == 408
+    assert len(handles) == 1
+    assert handles[0].state is HandleState.CANCELLED
+    assert len(stats.cancelled_requests) == 1
+    assert not stats.finished
+    assert app.session.backend.memory_stats().slots_live == 0
+
+
+def test_inflight_bound_respects_protected_headroom():
+    class StubRegistry:
+        @staticmethod
+        def entries():
+            return []
+
+    class StubSession:
+        registry = StubRegistry()
+        max_queue = None
+        memory_aware = False
+
+    class StubDriver:
+        session = StubSession()
+        inflight = 4
+
+        @staticmethod
+        def protected_priority():
+            return 1
+
+        @staticmethod
+        def completion_rate():
+            return 10.0
+
+        @staticmethod
+        def mem_room(model):
+            return None
+
+    bp = Backpressure(StubDriver(), max_inflight=4, headroom=2)
+    # bulk (below protected priority): refused at the soft bound, with a
+    # backlog/throughput Retry-After hint
+    hint = bp.check("m", shed_priority=0)
+    assert hint is not None and abs(hint - 4 / 10.0) < 1e-9
+    # protected tier rides the headroom past the soft bound
+    assert bp.check("m", shed_priority=1) is None
+    StubDriver.inflight = 6                  # headroom exhausted too
+    assert bp.check("m", shed_priority=1) is not None
+
+
+def test_draining_gateway_refuses_new_work_503():
+    async def scenario():
+        app = launch_gateway.build_app(_args())
+        await app.start()
+        port = app.port
+        await app.drain()
+        # the listener is closed after drain; readyz flipped before that
+        try:
+            r = await _post(port, {"model": "transformer"}, timeout=2.0)
+            return r["status"]
+        except (ConnectionError, OSError, asyncio.TimeoutError):
+            return "refused"
+
+    assert asyncio.run(scenario()) in ("refused", 503)
+
+
+# ---------------------------------------------------------------------------
+# launcher subprocess: SIGTERM drain, exit code, artifact
+# ---------------------------------------------------------------------------
+
+def test_launcher_sigterm_drains_cleanly(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    json_out = tmp_path / "gw.json"
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro.launch.gateway", "--port", "0",
+         "--time-scale", "200", "--sla-tiers", "gold:0.05,bulk:0.5",
+         "--mem-slots", "32", "--assert-no-leak",
+         "--json-out", str(json_out)],
+        env=env, stderr=subprocess.PIPE, text=True)
+    try:
+        port = None
+        deadline = time.monotonic() + 30
+        while time.monotonic() < deadline:
+            line = proc.stderr.readline()
+            if not line:
+                break
+            try:
+                record = json.loads(line)
+            except ValueError:
+                continue
+            if record.get("event") == "ready":
+                port = record["port"]
+                break
+        assert port is not None, "gateway never logged ready"
+
+        async def drive():
+            return await asyncio.gather(*[
+                _post(port, {"sla_class": "gold" if i % 2 else "bulk"})
+                for i in range(6)])
+
+        results = asyncio.run(drive())
+        assert all(r["status"] == 200 for r in results)
+        proc.send_signal(signal.SIGTERM)
+        code = proc.wait(timeout=30)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+    assert code == 0                      # clean drain + no leaked slots
+    doc = json.loads(json_out.read_text())
+    assert doc["summary"]["completed"] == 6
+    assert doc["memory"]["slots_live"] == 0
+    assert "gateway" in " ".join(doc["invocation"]["argv"])
+    assert doc["invocation"]["seed"] == 0
+    assert "p95_ms" in doc["summary"]
+
+
+# ---------------------------------------------------------------------------
+# cancellation under streaming (real JAX engine)
+# ---------------------------------------------------------------------------
+
+class _SlowRuns:
+    """Wall-delay every run: the tiny engine decodes a whole request
+    inside one pump tick, so a client abort could never beat the final
+    run boundary — the delay opens a real window between boundaries for
+    the disconnect -> cancel path to land deterministically."""
+
+    def __init__(self, inner, delay_s=0.05):
+        self._inner, self._delay = inner, delay_s
+
+    def execute_run(self, model, sb, node_ids):
+        time.sleep(self._delay)
+        return self._inner.execute_run(model, sb, node_ids)
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+
+def _jax_app():
+    from repro.serving.engine import JaxEngine
+
+    cfg = dataclasses.replace(get_config("llama3.2-1b").reduced(),
+                              d_model=64, d_ff=128, vocab_size=128,
+                              num_prefix_embeddings=0)
+    wl = from_model_config(cfg, prompt_dist=LengthDist((6,), (1.0,)),
+                           decode_dist=LengthDist((8,), (1.0,)))
+    engine = JaxEngine(cfg, max_len=32, n_slots=4)
+    pred = SlackPredictor.build([wl], NPUPerfModel(TPU_V5E), 60.0)
+    session = ServingSession(backend=_SlowRuns(engine), seed=9)
+    session.register(wl.name, wl,
+                     policy=LazyBatching(pred, max_batch=4))
+    return GatewayApp(session, port=0, time_scale=1.0, tick=0.002,
+                      default_sla=60.0, log_enabled=False), engine
+
+
+async def _stream_one(port, i, disconnect_after=None, decode_len=8):
+    """One raw SSE exchange; abort the connection after
+    ``disconnect_after`` token events when set."""
+    reader, writer = await asyncio.open_connection(HOST, port)
+    body = json.dumps({"prompt_len": 6,
+                       "decode_len": decode_len}).encode()
+    writer.write((f"POST /v1/generate HTTP/1.1\r\nhost: {HOST}\r\n"
+                  f"content-type: application/json\r\n"
+                  f"content-length: {len(body)}\r\n"
+                  f"connection: close\r\n\r\n").encode() + body)
+    await writer.drain()
+    await loadgen._read_headers(reader)
+    tokens, fate = [], None
+    async for event, data in loadgen._sse_events(reader):
+        if event == "token":
+            tokens.append(data["token"])
+            if disconnect_after is not None and len(tokens) >= disconnect_after:
+                writer.transport.abort()     # vanish mid-stream
+                return tokens, "aborted"
+        elif event in ("done", "error"):
+            fate = data.get("fate", event)
+    writer.close()
+    return tokens, fate
+
+
+async def _jax_scenario(disconnect_idx):
+    app, engine = _jax_app()
+    await app.start()
+    results = [None] * 4
+    tasks = []
+    for i in range(4):
+        submitted = len(app.session.handles)
+
+        async def one(i=i):
+            # stream 1 decodes much longer than the rest (in the control
+            # run too): disconnect detection needs a failed SSE write —
+            # at least one run boundary after the abort — so the victim
+            # must have plenty of decode left when the cancel lands
+            results[i] = await _stream_one(
+                app.port, i,
+                disconnect_after=1 if i == disconnect_idx else None,
+                decode_len=20 if i == 1 else 8)
+
+        tasks.append(asyncio.create_task(one()))
+        # serialize SUBMISSION order (prompt RNG draws happen at submit)
+        # without serializing the streams themselves
+        deadline = asyncio.get_running_loop().time() + 30
+        while (len(app.session.handles) == submitted
+               and asyncio.get_running_loop().time() < deadline):
+            await asyncio.sleep(0.005)
+    await asyncio.gather(*tasks)
+    if disconnect_idx is not None:
+        # the disconnect must reach CANCELLED (slot freed) before drain
+        deadline = asyncio.get_running_loop().time() + 30
+        handle = list(app.session.handles.values())[disconnect_idx]
+        while (not handle.done
+               and asyncio.get_running_loop().time() < deadline):
+            await asyncio.sleep(0.005)
+    stats = await app.drain()
+    return results, stats, app, engine
+
+
+def test_jax_client_disconnect_cancels_and_survivors_bit_exact():
+    results, stats, app, engine = asyncio.run(_jax_scenario(1))
+    ref_results, ref_stats, _, ref_engine = asyncio.run(_jax_scenario(None))
+
+    handles = list(app.session.handles.values())
+    assert handles[1].state is HandleState.CANCELLED
+    assert len(stats.cancelled_requests) == 1
+    assert len(stats.finished) == 3
+    assert len(ref_stats.finished) == 4
+    # zero-leak: the aborted stream's slot came back to the pool
+    assert engine.slots_in_use == 0
+    assert app.session.backend.memory_stats().slots_live == 0
+    # surviving streams are BIT-EXACT vs the no-disconnect control run
+    for i in (0, 2, 3):
+        tokens, fate = results[i]
+        ref_tokens, ref_fate = ref_results[i]
+        assert fate == "done" and ref_fate == "done"
+        assert len(tokens) == 8
+        assert tokens == ref_tokens
+    # the aborted stream saw its first token before vanishing
+    assert results[1][1] == "aborted" and len(results[1][0]) >= 1
+    assert results[1][0] == ref_results[1][0][:len(results[1][0])]
