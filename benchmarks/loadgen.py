@@ -228,6 +228,7 @@ async def run_load(args, host: str, port: int) -> dict:
     t_start = loop.time()
     records: List[Optional[dict]] = [None] * len(arrivals)
     metrics_scrape: Dict[str, List[str]] = {}
+    loop_scrape: Dict[str, float] = {}       # parsed gateway_loop_* values
 
     async def one(i: int, at: float) -> None:
         await asyncio.sleep(max(0.0, (t_start + at) - loop.time()))
@@ -256,11 +257,17 @@ async def run_load(args, host: str, port: int) -> dict:
         except (ConnectionError, OSError):
             return
         wanted = ("gateway_attainment", "gateway_queue_depth",
-                  "gateway_arena_", "gateway_inflight")
+                  "gateway_arena_", "gateway_inflight",
+                  "gateway_loop_")
         for line in text.decode("utf-8").splitlines():
             if line.startswith(wanted):
                 key = line.split("{")[0].split(" ")[0]
                 metrics_scrape.setdefault(key, []).append(line)
+                if key.startswith("gateway_loop_"):
+                    try:
+                        loop_scrape[key] = float(line.rsplit(" ", 1)[1])
+                    except (ValueError, IndexError):
+                        pass
 
     tasks = [asyncio.create_task(one(i, at))
              for i, at in enumerate(arrivals)]
@@ -270,6 +277,17 @@ async def run_load(args, host: str, port: int) -> dict:
     report = summarize([r for r in records if r is not None], tiers, args)
     if metrics_scrape:
         report["metrics_scrape"] = metrics_scrape
+    if loop_scrape:
+        # event-loop health from the gateway's stall watchdog: the CI
+        # gate reads max-stall/stalls, the artifact keeps lag p99 too
+        report["loop"] = {
+            "max_stall_s": loop_scrape.get(
+                "gateway_loop_max_stall_seconds"),
+            "lag_p99_s": loop_scrape.get(
+                "gateway_loop_lag_p99_seconds"),
+            "stalls": loop_scrape.get("gateway_loop_stalls_total"),
+            "ticks": loop_scrape.get("gateway_loop_ticks_total"),
+        }
     return report
 
 
@@ -404,6 +422,13 @@ async def amain(args) -> int:
               f"429s {report['backpressure_429']}  "
               f"p99 {report['latency_ms']['p99']}ms  "
               f"attainment {report['attainment']}", file=sys.stderr)
+        loop_h = report.get("loop")
+        if loop_h and loop_h.get("max_stall_s") is not None:
+            print(f"[loadgen] {name}: loop max stall "
+                  f"{loop_h['max_stall_s'] * 1e3:.1f}ms  "
+                  f"lag p99 {(loop_h['lag_p99_s'] or 0) * 1e3:.1f}ms  "
+                  f"stalls {int(loop_h['stalls'] or 0)}",
+                  file=sys.stderr)
         if args.assert_completions and (report["completed"]
                                         < args.assert_completions):
             print(f"[loadgen] GATE: {name} completed "

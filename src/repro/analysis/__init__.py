@@ -6,10 +6,12 @@ unseeded RNG in virtual-time paths, bounded retraces via pow2 bucketing,
 no ``assert``-guarded runtime invariants (they vanish under ``python
 -O``), and the model-keyed Backend contract. This package makes them
 *enforced*: a lint pass (``python -m repro.analysis.lint src tests
-benchmarks``) with nine repo-specific checkers — six line-level AST
-matchers plus three that run real dataflow (per-function CFGs with
-exception edges, a worklist fixpoint engine, and an import-resolved
-call graph; :mod:`cfg`, :mod:`dataflow`, :mod:`callgraph`) — reported
+benchmarks``) with twelve repo-specific checkers — six line-level AST
+matchers plus six that run real dataflow (per-function CFGs with
+exception edges and explicit ``await`` yield-point nodes, a
+suspension-aware worklist fixpoint engine, and an import-resolved
+call graph carrying per-function effect summaries; :mod:`cfg`,
+:mod:`dataflow`, :mod:`callgraph`) — reported
 against a committed baseline (new findings fail CI; the baseline is
 empty and must stay so), plus cheap runtime sanitizer counters in the
 JAX engine (``Backend.sanitizer_stats()``) that let a test assert "N
@@ -41,10 +43,28 @@ Checkers (see each module's docstring for the precise rules):
     (``handles``, :mod:`repro.core.lifecycle`),
   * ``wallclock-taint``  — interprocedural taint: wall-clock reads
     reaching virtual-time modules through the call graph, however many
-    helpers they are laundered through (``wallclock``).
+    helpers they are laundered through (``wallclock``),
+  * ``await-atomicity``  — suspension-aware CFG analysis: shared state
+    (``self.*`` / globals) read before and written after an ``await``
+    with no ``asyncio.Lock`` held and no single-writer ownership
+    annotation — another task can interleave in the window and the
+    update is torn (``asyncrace``),
+  * ``blocking-in-async`` — interprocedural loop-stall taint: sync
+    blocking primitives (``session.run_until``/``step``/``drain``,
+    ``time.sleep``, ``subprocess``, nested event loops) reachable from
+    an ``async def`` through the call graph; the audited SessionDriver
+    bridge seeds carry suppressions, so every transitive caller is
+    sanctioned at once (``asyncrace``),
+  * ``task-leak``        — dropped ``create_task``/``ensure_future``
+    handles, coroutines called but never awaited, and ``except
+    CancelledError`` handlers that swallow the cancellation outside
+    the cancel-and-reap idiom (``asyncrace``).
 
 Suppress a legitimate finding with a trailing (or preceding-line)
-comment: ``# reprolint: disable=<checker>[,<checker>]``.
+comment: ``# reprolint: disable=<checker>[,<checker>]``. Declare a
+shared attribute single-writer (pump-task-only, so ``await-atomicity``
+spans on it are sanctioned file-wide) with ``# reprolint:
+owner=<task>`` on its initialising assignment.
 """
 # NOTE: .lint is deliberately NOT imported here — ``python -m
 # repro.analysis.lint`` would otherwise import it twice (runpy warning).

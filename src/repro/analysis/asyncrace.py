@@ -1,0 +1,626 @@
+"""Checkers 10-12 — async-aware dataflow for the serving gateway.
+
+The PR 9 gateway is a single-threaded asyncio application, which kills
+data races between *instructions* but not between *awaits*: every yield
+point is a window where another task may run, so shared gateway state
+(backpressure counters, the SessionDriver backlog, metrics windows) can
+be torn across a suspension, the event loop can be stalled by a sync
+``session.run_until``, and a dropped task handle leaks work past drain.
+Three checkers close those holes on top of the yield-point CFGs
+(:mod:`cfg`), the suspension-aware fixpoint engine (:mod:`dataflow`)
+and the per-function effect summaries (:mod:`callgraph`):
+
+``await-atomicity`` (per-file, CFG lattice)
+    Read-check-write of shared mutable state — ``self.*`` attributes
+    and ``global``-declared names — spanning a yield point inside an
+    ``async def``. The classic lost update::
+
+        v = self.completed          # read
+        await something()           # other tasks run HERE
+        self.completed = v + 1      # write of a stale value
+
+    A span is sanctioned two ways: **lock-set** — the yield point sits
+    inside a ``with``/``async with`` whose context manager names a lock
+    (``async with self._lock:``), so same-lock tasks cannot interleave
+    — or **single-writer ownership** — the attribute is declared
+    pump-task-only with the annotation vocabulary::
+
+        self.completed = 0          # reprolint: owner=pump
+
+    ``# reprolint: owner=<task>`` on an attribute's initialising
+    assignment declares every write of that attribute file-wide to be
+    the named task's alone (reviewed, like a suppression — the comment
+    must say WHY single-writer holds). Findings report at the write
+    with the full witness span (read line, await line, write line).
+
+``blocking-in-async`` (project-wide, witness chains)
+    Sync calls that stall the event loop — ``session.run_until`` /
+    ``.step`` / ``.drain``, ``time.sleep``, ``subprocess.*``,
+    ``loop.run_until_complete`` — reachable from an ``async def``
+    through any chain of sync calls (or awaited async calls: awaiting a
+    coroutine that blocks inside still stalls the loop). Propagation
+    mirrors ``wallclock-taint``: blocking primitives seed taint, taint
+    flows up the call graph (Backend-contract names stay barriers, a
+    call to an UN-awaited async def spawns nothing and propagates
+    nothing), and findings at the async frontier carry the witness
+    chain down to the primitive. The sanctioned SessionDriver bridge
+    sites (the pump tick's bounded ``run_until`` catch-up and the drain
+    fast-forward) carry audited ``# reprolint:
+    disable=blocking-in-async`` suppressions at the seed, so every
+    caller of the audited bridge is sanctioned transitively.
+
+``task-leak`` (per-file, syntactic + use analysis)
+    Fire-and-forget asyncio: a ``create_task``/``ensure_future`` result
+    dropped on the floor (bare expression statement) or bound to a name
+    that is never used again — nothing awaits, cancels, tracks or
+    reaps it, so drain cannot find it and its exceptions vanish; a
+    coroutine function called but never awaited (the call builds a
+    coroutine object and discards it — the body never runs); and
+    ``except (asyncio.)CancelledError`` that swallows without a
+    ``raise``, which strands ``drain()``'s cancellation sweep. The one
+    sanctioned swallow is the *reap* idiom — a function that itself
+    ``.cancel()``-ed the task may absorb the resulting
+    ``CancelledError`` when awaiting it out.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from types import SimpleNamespace
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from .base import (Checker, Finding, ProjectChecker, SourceFile,
+                   dotted_name, is_benchmark_file, is_test_file)
+from .callgraph import BARRIER_METHODS as _BARRIERS
+from .callgraph import CallGraph, FileFacts
+from .cfg import build_cfg, contains_await
+from .dataflow import Analysis, analyze
+
+#: ``# reprolint: owner=<task>`` — single-writer ownership annotation.
+_OWNER_RE = re.compile(r"#\s*reprolint:\s*owner=([\w-]+)")
+_SELF_ATTR_RE = re.compile(r"self\.(\w+)")
+
+READ, STALE = "read", "stale"
+
+
+def _in_scope(rel: str) -> bool:
+    """Production sources only: tests drive event loops synchronously
+    on purpose, and benchmarks (the load generator's spawn harness)
+    block on subprocesses by design."""
+    return "repro/" in rel and not is_test_file(rel) \
+        and not is_benchmark_file(rel)
+
+
+# ---------------------------------------------------------------------------
+# shared-state access extraction
+# ---------------------------------------------------------------------------
+
+def owner_annotations(sf: SourceFile) -> Dict[str, str]:
+    """attr name -> owning task, from ``self.X = ...  # reprolint:
+    owner=<task>`` lines anywhere in the file."""
+    owners: Dict[str, str] = {}
+    for line in sf.lines:
+        m = _OWNER_RE.search(line)
+        if m is None:
+            continue
+        attr = _SELF_ATTR_RE.search(line)
+        if attr is not None:
+            owners[attr.group(1)] = m.group(1)
+    return owners
+
+
+def _global_names(func: ast.AST) -> Set[str]:
+    names: Set[str] = set()
+    for node in ast.walk(func):
+        if isinstance(node, ast.Global):
+            names.update(node.names)
+    return names
+
+
+def _own_parts(stmt: ast.AST) -> List[ast.AST]:
+    """The AST fragments that execute AT ``stmt``'s own CFG node. CFG
+    branch/anchor nodes carry the whole compound statement in ``stmt``
+    (``If``, ``While``, ``Try``, ...) but only the header runs there —
+    the body has its own nodes, so walking it here would double-count."""
+    if isinstance(stmt, (ast.If, ast.While)):
+        return [stmt.test]
+    if isinstance(stmt, (ast.For, ast.AsyncFor)):
+        return [stmt.target, stmt.iter]
+    if isinstance(stmt, (ast.With, ast.AsyncWith)):
+        parts: List[ast.AST] = []
+        for item in stmt.items:
+            parts.append(item.context_expr)
+            if item.optional_vars is not None:
+                parts.append(item.optional_vars)
+        return parts
+    if isinstance(stmt, (ast.Try, ast.ExceptHandler, ast.FunctionDef,
+                         ast.AsyncFunctionDef, ast.ClassDef)):
+        return []
+    return [stmt]
+
+
+def _accesses(stmt: ast.AST, globals_: Set[str]
+              ) -> Tuple[Set[str], Set[str]]:
+    """(reads, writes) of shared keys at one CFG node. Keys are
+    ``self.<attr>`` dotted paths and ``global``-declared bare names."""
+    reads: Set[str] = set()
+    writes: Set[str] = set()
+    for part in _own_parts(stmt):
+        for node in ast.walk(part):
+            if isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                key = f"self.{node.attr}"
+                if isinstance(node.ctx, ast.Load):
+                    reads.add(key)
+                else:
+                    writes.add(key)
+            elif isinstance(node, ast.Subscript) \
+                    and not isinstance(node.ctx, ast.Load) \
+                    and isinstance(node.value, ast.Attribute) \
+                    and isinstance(node.value.value, ast.Name) \
+                    and node.value.value.id == "self":
+                writes.add(f"self.{node.value.attr}")
+            elif isinstance(node, ast.Name) and node.id in globals_:
+                (reads if isinstance(node.ctx, ast.Load)
+                 else writes).add(node.id)
+    # an AugAssign target parses as Store only; it reads too
+    if isinstance(stmt, ast.AugAssign):
+        t = stmt.target
+        if isinstance(t, ast.Attribute) \
+                and isinstance(t.value, ast.Name) \
+                and t.value.id == "self":
+            reads.add(f"self.{t.attr}")
+        elif isinstance(t, ast.Name) and t.id in globals_:
+            reads.add(t.id)
+    return reads, writes
+
+
+def _lock_ranges(func: ast.AST) -> List[Tuple[int, int]]:
+    """Line spans of ``with``/``async with`` blocks whose context
+    manager names a lock (heuristic: the item expression mentions
+    "lock" / "sem", case-insensitive — ``self._lock``,
+    ``asyncio.Lock()``, a semaphore)."""
+    spans: List[Tuple[int, int]] = []
+    for node in ast.walk(func):
+        if not isinstance(node, (ast.With, ast.AsyncWith)):
+            continue
+        for item in node.items:
+            try:
+                text = ast.unparse(item.context_expr).lower()
+            except Exception:
+                continue
+            if "lock" in text or "sem" in text:
+                spans.append((node.lineno,
+                              node.end_lineno or node.lineno))
+                break
+    return spans
+
+
+# ---------------------------------------------------------------------------
+# checker 10 — await-atomicity
+# ---------------------------------------------------------------------------
+
+class AtomicityAnalysis(Analysis):
+    """key -> (READ, read-line) | (STALE, read-line, yield-line);
+    absent = untracked. A read marks the key live; a yield point turns
+    live reads stale (unless it sits inside a lock region); a write
+    clears the key — checked against stale-ness in the post-pass."""
+
+    def __init__(self, globals_: Set[str],
+                 lock_spans: List[Tuple[int, int]]):
+        self.globals_ = globals_
+        self.lock_spans = lock_spans
+
+    def join_values(self, a, b):
+        # may-analysis: a possibly-stale read wins over a fresh one
+        if a[0] == STALE and b[0] != STALE:
+            return a
+        if b[0] == STALE and a[0] != STALE:
+            return b
+        return min(a, b)
+
+    def transfer(self, state, stmt):
+        reads, writes = _accesses(stmt, self.globals_)
+        out = dict(state)
+        for key in writes:
+            out.pop(key, None)          # the write resolves the span
+        for key in reads:
+            out[key] = (READ, stmt.lineno)
+        return out
+
+    def suspend(self, state, node):
+        line = getattr(node.stmt, "lineno", 0)
+        if any(lo <= line <= hi for lo, hi in self.lock_spans):
+            return state                # suspended holding the lock
+        out = {}
+        for key, v in state.items():
+            out[key] = (STALE, v[1], line) if v[0] == READ else v
+        return out
+
+
+class AwaitAtomicityChecker(Checker):
+    name = "await-atomicity"
+    description = ("read-check-write of shared state (self.* / globals) "
+                   "spanning an await with no lock held and no "
+                   "single-writer owner annotation")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return _in_scope(sf.rel)
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        owners = owner_annotations(sf)
+        findings: List[Finding] = []
+        for func in ast.walk(sf.tree):
+            if isinstance(func, ast.AsyncFunctionDef):
+                findings.extend(self._check_func(sf, func, owners))
+        return findings
+
+    def _sanctioned(self, key: str, owners: Dict[str, str]) -> bool:
+        return key.startswith("self.") and key[len("self."):] in owners
+
+    def _check_func(self, sf: SourceFile, func, owners):
+        globals_ = _global_names(func)
+        lock_spans = _lock_ranges(func)
+        analysis = AtomicityAnalysis(globals_, lock_spans)
+        cfg = build_cfg(func)
+        states = analyze(cfg, analysis)
+        seen: Set[Tuple[str, int]] = set()
+        for node in cfg.nodes.values():
+            if node.kind not in ("stmt", "branch") or node.stmt is None:
+                continue
+            in_s = states.get(node.nid)
+            if in_s is None:
+                continue
+            reads, writes = _accesses(node.stmt, globals_)
+            stmt_awaits = any(contains_await(p)
+                              for p in _own_parts(node.stmt))
+            for key in sorted(writes):
+                if self._sanctioned(key, owners):
+                    continue
+                line = node.stmt.lineno
+                hit = in_s.get(key)
+                span = None
+                if hit is not None and hit[0] == STALE:
+                    span = (hit[1], hit[2])
+                elif stmt_awaits and key in reads:
+                    # read and write of the same key inside ONE
+                    # statement that suspends mid-flight (self.x +=
+                    # await f()) — torn without any yield node between
+                    span = (line, line)
+                if span is None or (key, line) in seen:
+                    continue
+                seen.add((key, line))
+                f = sf.finding(
+                    self.name, SimpleNamespace(lineno=line),
+                    f"write of {key} uses state read at line {span[0]} "
+                    f"across an await at line {span[1]} — another task "
+                    f"can interleave there and the update is torn; "
+                    f"hold an asyncio.Lock across the span, re-read "
+                    f"after the await, or declare single-writer "
+                    f"ownership with '# reprolint: owner=<task>' on "
+                    f"the field's initialiser")
+                if f is not None:
+                    yield f
+        return
+
+
+# ---------------------------------------------------------------------------
+# checker 11 — blocking-in-async (project-wide)
+# ---------------------------------------------------------------------------
+
+#: exact dotted blocking primitives
+BLOCKING_DOTTED = frozenset({"time.sleep", "asyncio.run"})
+#: dotted-prefix blocking primitives (the whole subprocess surface)
+BLOCKING_PREFIXES = ("subprocess.",)
+#: leaf names that block regardless of receiver
+BLOCKING_LEAVES = frozenset({"run_until_complete"})
+#: leaf names that block when called ON a serving session (the
+#: session-clock executors: they run scheduler work synchronously)
+SESSION_BLOCKING_LEAVES = frozenset({"run_until", "step", "drain"})
+
+_Key = Tuple[str, str]                   # (rel path, qualname)
+
+
+def _blocking_primitive(call: dict) -> Optional[str]:
+    """Human label when ``call`` is a sync blocking primitive (an
+    awaited call is a coroutine by construction, not a primitive)."""
+    if call.get("awaited"):
+        return None
+    dn = call["dotted"]
+    if dn in BLOCKING_DOTTED or dn.startswith(BLOCKING_PREFIXES):
+        return dn
+    name = call["name"]
+    if name in BLOCKING_LEAVES:
+        return dn
+    if name in SESSION_BLOCKING_LEAVES:
+        recv = dn[:-(len(name) + 1)] if "." in dn else ""
+        if "session" in recv:
+            return dn
+    return None
+
+
+def _call_suppressed(call: dict) -> bool:
+    return bool(call.get("suppressed_blocking"))
+
+
+class BlockingInAsyncChecker(ProjectChecker):
+    name = "blocking-in-async"
+    description = ("sync blocking calls (session.run_until/step/drain, "
+                   "time.sleep, subprocess, nested event loops) "
+                   "reachable from an async def — the event loop stalls "
+                   "for their full duration")
+
+    def check_project(self, facts: Dict[str, FileFacts],
+                      graph: CallGraph) -> Iterable[Finding]:
+        blocked = self._propagate(facts, graph)
+        findings: List[Finding] = []
+        for rel, ff in sorted(facts.items()):
+            if not _in_scope(rel):
+                continue
+            for fn in ff.functions.values():
+                if not fn.is_async:
+                    continue
+                findings.extend(
+                    self._frontier_calls(rel, fn, facts, graph, blocked))
+        return findings
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _edge_carries(call: dict, callee_fn) -> bool:
+        """Whether loop-blocking taint flows through this call edge: a
+        sync callee runs inline; an async callee only runs if awaited
+        (an un-awaited coroutine call is a task-leak, not a stall)."""
+        return (not callee_fn.is_async) or bool(call.get("awaited"))
+
+    def _propagate(self, facts: Dict[str, FileFacts],
+                   graph: CallGraph) -> Dict[_Key, str]:
+        """Fixpoint: (rel, qualname) -> witness chain text."""
+        blocked: Dict[_Key, str] = {}
+        for rel, ff in facts.items():
+            for q, fn in ff.functions.items():
+                for call in fn.calls:
+                    if _call_suppressed(call):
+                        continue
+                    prim = _blocking_primitive(call)
+                    if prim is not None:
+                        blocked[(rel, q)] = (
+                            f"{q} calls blocking {prim}() at "
+                            f"{rel}:{call['line']}")
+                        break
+        changed = True
+        while changed:
+            changed = False
+            for rel, ff in facts.items():
+                for q, fn in ff.functions.items():
+                    if (rel, q) in blocked:
+                        continue
+                    for call in fn.calls:
+                        if _call_suppressed(call) \
+                                or call["name"] in _BARRIERS:
+                            continue
+                        hit = None
+                        for t in graph.resolve(rel, call):
+                            if t in blocked and self._edge_carries(
+                                    call, facts[t[0]].functions[t[1]]):
+                                hit = t
+                                break
+                        if hit is not None:
+                            blocked[(rel, q)] = (f"{q} calls "
+                                                 f"{call['name']}() -> "
+                                                 + blocked[hit])
+                            changed = True
+                            break
+        return blocked
+
+    def _frontier_calls(self, rel: str, fn, facts, graph: CallGraph,
+                        blocked: Dict[_Key, str]):
+        for call in fn.calls:
+            if _call_suppressed(call) or call["name"] in _BARRIERS:
+                continue
+            prim = _blocking_primitive(call)
+            if prim is not None:
+                yield Finding(
+                    checker=self.name, path=rel, line=call["line"],
+                    message=(f"blocking call {prim}() on the event loop "
+                             f"inside async def {fn.name} — every task "
+                             f"stalls for its full duration; await an "
+                             f"async equivalent, move it off-loop, or "
+                             f"audit the site with a blocking-in-async "
+                             f"suppression (the SessionDriver bridge is "
+                             f"the one sanctioned place)"),
+                    snippet=call["snippet"])
+                continue
+            hit = None
+            for t in graph.resolve(rel, call):
+                if t in blocked and self._edge_carries(
+                        call, facts[t[0]].functions[t[1]]):
+                    hit = t
+                    break
+            if hit is not None:
+                yield Finding(
+                    checker=self.name, path=rel, line=call["line"],
+                    message=(f"call to {call['name']}() inside async "
+                             f"def {fn.name} reaches a blocking "
+                             f"primitive ({blocked[hit]}) — the event "
+                             f"loop stalls for its full duration; make "
+                             f"the chain async or audit the seed with "
+                             f"a blocking-in-async suppression"),
+                    snippet=call["snippet"])
+
+
+# ---------------------------------------------------------------------------
+# checker 12 — task-leak
+# ---------------------------------------------------------------------------
+
+SPAWN_LEAVES = frozenset({"create_task", "ensure_future"})
+
+
+def _leaf(call: ast.Call) -> str:
+    dn = dotted_name(call.func)
+    return dn.rsplit(".", 1)[-1] if dn else ""
+
+
+def _mentions_cancelled(type_expr: Optional[ast.AST]) -> bool:
+    if type_expr is None:
+        return False
+    names = type_expr.elts if isinstance(type_expr, ast.Tuple) \
+        else [type_expr]
+    for n in names:
+        leaf = n.attr if isinstance(n, ast.Attribute) else \
+            (n.id if isinstance(n, ast.Name) else "")
+        if leaf == "CancelledError":
+            return True
+    return False
+
+
+class TaskLeakChecker(Checker):
+    name = "task-leak"
+    description = ("create_task/ensure_future results dropped or never "
+                   "used, coroutines called but never awaited, and "
+                   "except CancelledError handlers that swallow without "
+                   "re-raising")
+
+    def applies_to(self, sf: SourceFile) -> bool:
+        return _in_scope(sf.rel)
+
+    def check(self, sf: SourceFile) -> Iterable[Finding]:
+        findings: List[Finding] = []
+        # a bare call `foo()` can only drop a coroutine when foo is a
+        # free async def; `self.foo()` only when foo is an async method
+        # of the ENCLOSING class with no same-named sync sibling —
+        # `self.driver.start()` (another object's sync start) is not
+        # this class's `async def start`
+        free_coros = {n.name for n in ast.walk(sf.tree)
+                      if isinstance(n, ast.AsyncFunctionDef)
+                      and not self._is_method(sf, n)}
+        for cls in ast.walk(sf.tree):
+            if isinstance(cls, ast.ClassDef):
+                amethods = {n.name for n in cls.body
+                            if isinstance(n, ast.AsyncFunctionDef)}
+                smethods = {n.name for n in cls.body
+                            if isinstance(n, ast.FunctionDef)}
+                for func in cls.body:
+                    if isinstance(func, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        findings.extend(self._check_func(
+                            sf, func, free_coros,
+                            self_coros=amethods - smethods))
+        in_class = {id(f) for cls in ast.walk(sf.tree)
+                    if isinstance(cls, ast.ClassDef)
+                    for f in cls.body}
+        for func in ast.walk(sf.tree):
+            if isinstance(func, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(func) not in in_class:
+                findings.extend(self._check_func(sf, func, free_coros,
+                                                 self_coros=set()))
+        findings.extend(self._check_cancelled(sf))
+        return findings
+
+    @staticmethod
+    def _is_method(sf: SourceFile, func: ast.AST) -> bool:
+        return any(isinstance(cls, ast.ClassDef) and func in cls.body
+                   for cls in ast.walk(sf.tree))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _shallow_walk(func):
+        """Walk ``func``'s own statements, not nested defs' (they get
+        their own visit — descending would double-report)."""
+        stack = list(ast.iter_child_nodes(func))
+        while stack:
+            node = stack.pop()
+            yield node
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                stack.extend(ast.iter_child_nodes(node))
+
+    def _check_func(self, sf: SourceFile, func, free_coros: Set[str],
+                    self_coros: Set[str]):
+        # loads use the FULL walk: a closure referencing the handle
+        # from a nested def is a legitimate use
+        loads = [n.id for n in ast.walk(func)
+                 if isinstance(n, ast.Name)
+                 and isinstance(n.ctx, ast.Load)]
+        for stmt in self._shallow_walk(func):
+            if isinstance(stmt, ast.Expr) \
+                    and isinstance(stmt.value, ast.Call):
+                call = stmt.value
+                leaf = _leaf(call)
+                if leaf in SPAWN_LEAVES:
+                    f = sf.finding(
+                        self.name, call,
+                        f"{leaf}() result dropped — nothing awaits, "
+                        f"cancels or reaps the task, so drain cannot "
+                        f"find it and its exceptions vanish; keep the "
+                        f"handle (a tracking set, an attribute, a "
+                        f"done-callback) and reap it on shutdown")
+                    if f is not None:
+                        yield f
+                else:
+                    dn = dotted_name(call.func)
+                    dropped = (dn == leaf and leaf in free_coros) or \
+                        (dn == f"self.{leaf}" and leaf in self_coros)
+                    if dropped:
+                        f = sf.finding(
+                            self.name, call,
+                            f"coroutine {leaf}() is called but never "
+                            f"awaited — the call builds a coroutine "
+                            f"object and discards it; the body never "
+                            f"runs (await it, or hand it to "
+                            f"create_task and keep the handle)")
+                        if f is not None:
+                            yield f
+            elif isinstance(stmt, ast.Assign) \
+                    and len(stmt.targets) == 1 \
+                    and isinstance(stmt.targets[0], ast.Name) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and _leaf(stmt.value) in SPAWN_LEAVES:
+                var = stmt.targets[0].id
+                if var not in loads:
+                    f = sf.finding(
+                        self.name, stmt.value,
+                        f"task handle {var!r} from "
+                        f"{_leaf(stmt.value)}() is never used — the "
+                        f"task is spawned fire-and-forget; await it, "
+                        f"cancel it, or add it to a tracking set that "
+                        f"drain reaps")
+                    if f is not None:
+                        yield f
+
+    # ------------------------------------------------------------------
+    def _check_cancelled(self, sf: SourceFile):
+        # the reap idiom is sanctioned per enclosing function: a
+        # function that itself .cancel()s a task may swallow the
+        # CancelledError it awaits out of it
+        cancellers: Set[int] = set()
+        for func in ast.walk(sf.tree):
+            if not isinstance(func, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if any(isinstance(c, ast.Call)
+                   and isinstance(c.func, ast.Attribute)
+                   and c.func.attr == "cancel"
+                   for c in ast.walk(func)):
+                for node in ast.walk(func):
+                    if isinstance(node, ast.ExceptHandler):
+                        cancellers.add(id(node))
+        for handler in ast.walk(sf.tree):
+            if not isinstance(handler, ast.ExceptHandler):
+                continue
+            if not _mentions_cancelled(handler.type):
+                continue
+            if id(handler) in cancellers:
+                continue
+            if any(isinstance(n, ast.Raise)
+                   for n in ast.walk(handler)):
+                continue
+            f = sf.finding(
+                self.name, handler,
+                "except CancelledError swallows the cancellation — "
+                "drain's sweep strands here waiting on a task that "
+                "ate its own cancel; re-raise after cleanup (only the "
+                "code that called .cancel() may absorb it while "
+                "reaping)")
+            if f is not None:
+                yield f

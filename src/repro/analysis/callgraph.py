@@ -51,31 +51,58 @@ WALL_CLOCK = frozenset({
 #: is an audited boundary: it neither reports nor taints)
 CHECKER = "wallclock-taint"
 
+#: checker name whose suppressions gate blocking-call facts the same
+#: way (an audited blocking site — the SessionDriver bridge — neither
+#: reports nor propagates loop-blocking taint)
+BLOCKING_CHECKER = "blocking-in-async"
+
 
 class FuncFacts:
-    """One function's interprocedural surface."""
+    """One function's interprocedural surface: who it calls, which
+    clocks it reads, and its *effect summary* — whether it is async,
+    whether it may suspend (contains an await / ``async for`` /
+    ``async with`` of its own), and which shared attributes
+    (``self.*``) it may read or write. The effect summary is what the
+    async-aware checkers (:mod:`asyncrace`) reason over without
+    re-parsing cached files."""
 
-    __slots__ = ("qualname", "name", "lineno", "calls", "clock_reads")
+    __slots__ = ("qualname", "name", "lineno", "calls", "clock_reads",
+                 "is_async", "suspends", "self_reads", "self_writes")
 
-    def __init__(self, qualname: str, name: str, lineno: int):
+    def __init__(self, qualname: str, name: str, lineno: int,
+                 is_async: bool = False):
         self.qualname = qualname
         self.name = name                 # bare (last) name
         self.lineno = lineno
-        # [{'name', 'dotted', 'line', 'snippet', 'suppressed'}]
+        self.is_async = is_async
+        self.suspends = False            # own await / async-for / -with
+        # [{'name', 'dotted', 'line', 'snippet', 'suppressed',
+        #   'awaited'}] — 'awaited' = the call is the direct operand of
+        # an ``await`` (it cannot block the loop as a sync call would)
         self.calls: List[dict] = []
         # [{'dotted', 'line', 'snippet', 'suppressed'}]
         self.clock_reads: List[dict] = []
+        # attr name -> first line it is read / written ({'attr','line'})
+        self.self_reads: List[dict] = []
+        self.self_writes: List[dict] = []
 
     def to_dict(self) -> dict:
         return {"qualname": self.qualname, "name": self.name,
                 "lineno": self.lineno, "calls": self.calls,
-                "clock_reads": self.clock_reads}
+                "clock_reads": self.clock_reads,
+                "is_async": self.is_async, "suspends": self.suspends,
+                "self_reads": self.self_reads,
+                "self_writes": self.self_writes}
 
     @classmethod
     def from_dict(cls, d: dict) -> "FuncFacts":
-        f = cls(d["qualname"], d["name"], d["lineno"])
+        f = cls(d["qualname"], d["name"], d["lineno"],
+                d.get("is_async", False))
         f.calls = d["calls"]
         f.clock_reads = d["clock_reads"]
+        f.suspends = d.get("suspends", False)
+        f.self_reads = d.get("self_reads", [])
+        f.self_writes = d.get("self_writes", [])
         return f
 
 
@@ -136,6 +163,15 @@ def _record_imports(sf: SourceFile, facts: FileFacts) -> None:
                     else alias.name
 
 
+def _note_attr(entries: List[dict], attr: str, line: int) -> None:
+    """Record the FIRST line each attribute is touched (summary, not a
+    site list — the per-file checkers see exact sites anyway)."""
+    for e in entries:
+        if e["attr"] == attr:
+            return
+    entries.append({"attr": attr, "line": line})
+
+
 def extract_facts(sf: SourceFile) -> FileFacts:
     facts = FileFacts(sf.rel)
     _record_imports(sf, facts)
@@ -145,7 +181,8 @@ def extract_facts(sf: SourceFile) -> FileFacts:
         for node in body:
             if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
                 q = ".".join(qual + [node.name])
-                sub = FuncFacts(q, node.name, node.lineno)
+                sub = FuncFacts(q, node.name, node.lineno,
+                                isinstance(node, ast.AsyncFunctionDef))
                 facts.functions[q] = sub
                 visit(node.body, qual + [node.name], sub)
             elif isinstance(node, ast.ClassDef):
@@ -157,6 +194,27 @@ def extract_facts(sf: SourceFile) -> FileFacts:
         if fn is None:
             fn = facts.functions.setdefault(
                 "<module>", FuncFacts("<module>", "<module>", 1))
+        awaited_calls = set()
+        for node in ast.walk(stmt):
+            if isinstance(node, (ast.Await, ast.AsyncFor, ast.AsyncWith)):
+                fn.suspends = True
+                if isinstance(node, ast.Await) \
+                        and isinstance(node.value, ast.Call):
+                    awaited_calls.add(id(node.value))
+            elif isinstance(node, ast.Attribute) \
+                    and isinstance(node.value, ast.Name) \
+                    and node.value.id == "self":
+                if isinstance(node.ctx, ast.Load):
+                    _note_attr(fn.self_reads, node.attr, node.lineno)
+                else:                    # Store / Del / AugStore
+                    _note_attr(fn.self_writes, node.attr, node.lineno)
+            elif isinstance(node, ast.Subscript) \
+                    and not isinstance(node.ctx, ast.Load) \
+                    and isinstance(node.value, ast.Attribute) \
+                    and isinstance(node.value.value, ast.Name) \
+                    and node.value.value.id == "self":
+                # self.x[k] = v / del self.x[k]: a WRITE of self.x
+                _note_attr(fn.self_writes, node.value.attr, node.lineno)
         for call in ast.walk(stmt):
             if not isinstance(call, ast.Call):
                 continue
@@ -174,7 +232,10 @@ def extract_facts(sf: SourceFile) -> FileFacts:
                 fn.calls.append(
                     {"name": dn.rsplit(".", 1)[-1], "dotted": dn,
                      "line": line, "snippet": sf.line_at(line),
-                     "suppressed": suppressed})
+                     "suppressed": suppressed,
+                     "suppressed_blocking": sf.suppressed(
+                         BLOCKING_CHECKER, line),
+                     "awaited": id(call) in awaited_calls})
 
     visit(sf.tree.body, [], None)
     return facts

@@ -7,7 +7,7 @@ is a property of *paths*, so the path-sensitive checkers
 
 Graph shape
 -----------
-One :class:`CFG` per ``def``. Nodes are single AST statements plus four
+One :class:`CFG` per ``def``. Nodes are single AST statements plus five
 synthetic kinds:
 
   * ``entry``  — function entry,
@@ -17,7 +17,17 @@ synthetic kinds:
   * ``branch`` — the test of an ``if``/``while`` (or the iteration step
     of a ``for``), with ``true``/``false`` out-edges carrying the test
     expression so analyses can refine state per branch (``is None`` /
-    ``is not None`` narrowing).
+    ``is not None`` narrowing),
+  * ``yield``  — an explicit YIELD POINT: the event loop may run other
+    tasks here. Emitted after any statement containing an ``await``
+    expression, at every ``async for`` iteration step (``__anext__`` is
+    awaited per item), and at ``async with`` enter/exit (``__aenter__``
+    / ``__aexit__`` are awaited). ``stmt`` is the originating statement
+    (line reporting); the dataflow engine routes these nodes through
+    ``Analysis.suspend`` instead of ``transfer`` so lattices can
+    invalidate or check state across the suspension. Yield nodes keep
+    live exception edges — an ``await`` is exactly where
+    ``CancelledError`` is delivered.
 
 Every statement or branch node gets an ``exc`` out-edge to its current
 exception targets: the enclosing ``try``'s handler entries, the
@@ -66,7 +76,7 @@ class Node:
     def __init__(self, nid: int, kind: str, stmt: Optional[ast.AST] = None,
                  test: Optional[ast.AST] = None):
         self.nid = nid
-        self.kind = kind            # entry | exit | raise | stmt | branch
+        self.kind = kind    # entry | exit | raise | stmt | branch | yield
         self.stmt = stmt            # the AST statement (None on synthetic)
         self.test = test            # branch nodes: the test expression
 
@@ -126,6 +136,19 @@ class CFG:
 Frontier = List[Tuple[int, str]]
 
 
+def contains_await(node: ast.AST) -> bool:
+    """Whether ``node`` holds an ``await`` expression OUTSIDE any nested
+    function (a nested ``async def``'s awaits suspend the nested
+    coroutine, not this one; ``await`` cannot appear in a lambda)."""
+    for child in ast.iter_child_nodes(node):
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                              ast.Lambda)):
+            continue
+        if isinstance(child, ast.Await) or contains_await(child):
+            return True
+    return False
+
+
 def _is_catch_all(handler: ast.ExceptHandler) -> bool:
     if handler.type is None:
         return True
@@ -161,6 +184,15 @@ class _Builder:
         for target in exc:
             self.cfg._edge(nid, target, EXC)
 
+    def yield_point(self, stmt: ast.AST, frontier: Frontier,
+                    exc: List[int]) -> Frontier:
+        """Insert an explicit suspension node: the event loop may run
+        other tasks between the in-edges and the out-edge."""
+        node = self.cfg._new("yield", stmt)
+        self.connect(frontier, node.nid)
+        self.exc_edges(node.nid, exc)        # CancelledError delivery
+        return [(node.nid, NORMAL)]
+
     # ------------------------------------------------------------------
     def stmts(self, body: List[ast.stmt], frontier: Frontier,
               exc: List[int]) -> Frontier:
@@ -172,6 +204,8 @@ class _Builder:
              exc: List[int]) -> Frontier:
         c = self.cfg
         if isinstance(stmt, ast.If):
+            if contains_await(stmt.test):            # `if await x():`
+                frontier = self.yield_point(stmt, frontier, exc)
             branch = c._new("branch", stmt, stmt.test)
             self.connect(frontier, branch.nid)
             self.exc_edges(branch.nid, exc)
@@ -181,30 +215,45 @@ class _Builder:
             return t + f
 
         if isinstance(stmt, ast.While):
+            # an awaiting test suspends at EVERY evaluation, so the
+            # yield node is the loop re-entry point (back edges too)
+            loop_entry: Optional[int] = None
+            if contains_await(stmt.test):
+                frontier = self.yield_point(stmt, frontier, exc)
+                loop_entry = frontier[0][0]
             header = c._new("branch", stmt, stmt.test)
             self.connect(frontier, header.nid)
             self.exc_edges(header.nid, exc)
+            back = header.nid if loop_entry is None else loop_entry
             breaks: Frontier = []
-            self.loops.append((header.nid, breaks))
+            self.loops.append((back, breaks))
             body = self.stmts(stmt.body, [(header.nid, TRUE)], exc)
             self.loops.pop()
-            self.connect(body, header.nid)           # loop back edge
+            self.connect(body, back)                 # loop back edge
             after: Frontier = [(header.nid, FALSE)]
             if stmt.orelse:                          # runs on normal exit
                 after = self.stmts(stmt.orelse, after, exc)
             return after + breaks
 
-        if isinstance(stmt, ast.For):
+        if isinstance(stmt, (ast.For, ast.AsyncFor)):
             # the header models the iteration step: TRUE = next item
-            # bound, FALSE = iterator exhausted; no test expression
+            # bound, FALSE = iterator exhausted; no test expression.
+            # ``async for`` awaits __anext__ per item, so a yield node
+            # precedes the header and takes the back edges: every
+            # iteration (and the exhaustion probe) passes through it.
+            loop_entry = None
+            if isinstance(stmt, ast.AsyncFor):
+                frontier = self.yield_point(stmt, frontier, exc)
+                loop_entry = frontier[0][0]
             header = c._new("branch", stmt, None)
             self.connect(frontier, header.nid)
             self.exc_edges(header.nid, exc)
+            back = header.nid if loop_entry is None else loop_entry
             breaks = []
-            self.loops.append((header.nid, breaks))
+            self.loops.append((back, breaks))
             body = self.stmts(stmt.body, [(header.nid, TRUE)], exc)
             self.loops.pop()
-            self.connect(body, header.nid)
+            self.connect(body, back)
             after = [(header.nid, FALSE)]
             if stmt.orelse:
                 after = self.stmts(stmt.orelse, after, exc)
@@ -217,9 +266,17 @@ class _Builder:
             enter = c._new("stmt", stmt)
             self.connect(frontier, enter.nid)
             self.exc_edges(enter.nid, exc)           # item exprs can raise
-            return self.stmts(stmt.body, [(enter.nid, NORMAL)], exc)
+            inner: Frontier = [(enter.nid, NORMAL)]
+            if isinstance(stmt, ast.AsyncWith):      # __aenter__ awaited
+                inner = self.yield_point(stmt, inner, exc)
+            out = self.stmts(stmt.body, inner, exc)
+            if isinstance(stmt, ast.AsyncWith):      # __aexit__ awaited
+                out = self.yield_point(stmt, out, exc)
+            return out
 
         if isinstance(stmt, ast.Return):
+            if contains_await(stmt):                 # value expr awaits
+                frontier = self.yield_point(stmt, frontier, exc)
             node = c._new("stmt", stmt)
             self.connect(frontier, node.nid)
             self.exc_edges(node.nid, exc)            # value expr can raise
@@ -227,6 +284,8 @@ class _Builder:
             return []
 
         if isinstance(stmt, ast.Raise):
+            if contains_await(stmt):                 # `raise await f()`
+                frontier = self.yield_point(stmt, frontier, exc)
             node = c._new("stmt", stmt)
             self.connect(frontier, node.nid)
             self.exc_edges(node.nid, exc)            # the ONLY out-edges
@@ -250,7 +309,14 @@ class _Builder:
         node = c._new("stmt", stmt)
         self.connect(frontier, node.nid)
         self.exc_edges(node.nid, exc)
-        return [(node.nid, NORMAL)]
+        out: Frontier = [(node.nid, NORMAL)]
+        if contains_await(stmt) and not isinstance(
+                stmt, (ast.FunctionDef, ast.AsyncFunctionDef,
+                       ast.ClassDef)):
+            # the statement suspends mid-flight; successors observe the
+            # post-suspension world (other tasks ran in between)
+            out = self.yield_point(stmt, out, exc)
+        return out
 
     # ------------------------------------------------------------------
     def try_stmt(self, stmt: ast.Try, frontier: Frontier,

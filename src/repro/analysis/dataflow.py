@@ -25,6 +25,13 @@ Edge semantics:
   * ``true``/``false`` out of a branch node: ``transfer`` then
     ``refine(state, test, branch)`` — the hook where ``x is None`` /
     ``x is not None`` guards narrow a maybe-acquired token.
+  * any edge out of a ``yield`` node (an ``await`` suspension point,
+    see :mod:`cfg`): ``suspend(state, node)`` instead of ``transfer`` —
+    the statement's own semantics were already applied at its ``stmt``
+    node; the yield node models ONLY the interleaving window, where an
+    async-aware analysis invalidates or checks whatever must not span a
+    suspension. Default: identity (sync analyses are unaffected). Yield
+    nodes may raise by construction (``CancelledError`` lands there).
 """
 from __future__ import annotations
 
@@ -65,12 +72,20 @@ class Analysis:
                branch: bool) -> State:
         return state
 
+    def suspend(self, state: State, node: Node) -> State:
+        """State transform across a yield point (``await`` /
+        ``async for`` step / ``async with`` enter-exit): other tasks
+        may have run. Default: identity."""
+        return state
+
     def may_raise(self, node: Node) -> bool:
         """Whether ``node``'s exception out-edge is live. Default: a
         branch test without calls cannot raise (``x is None``, bare
         names, attribute truthiness); everything else may."""
         if node.kind == "branch":
             return _has_call(node.test)
+        if node.kind == "yield":
+            return True             # awaits deliver CancelledError here
         if isinstance(node.stmt, ast.Raise):
             return True                          # structural, always
         return True
@@ -80,6 +95,16 @@ def _has_call(expr: Optional[ast.AST]) -> bool:
     if expr is None:
         return True                              # for-loop iteration step
     return any(isinstance(n, ast.Call) for n in ast.walk(expr))
+
+
+def _post(analysis: Analysis, node: Node, in_s: State) -> State:
+    """Post-state of ``node``: ``suspend`` at yield points (the stmt's
+    semantics already ran at its own node), ``transfer`` elsewhere."""
+    if node.kind == "yield":
+        return analysis.suspend(in_s, node)
+    if node.stmt is not None:
+        return analysis.transfer(in_s, node.stmt)
+    return in_s
 
 
 def analyze(cfg: CFG, analysis: Analysis) -> Dict[int, State]:
@@ -102,13 +127,11 @@ def analyze(cfg: CFG, analysis: Analysis) -> Dict[int, State]:
                 out = in_s                       # pre-state, see module doc
             elif edge.kind in (TRUE, FALSE):
                 if post is None:
-                    post = analysis.transfer(in_s, node.stmt) \
-                        if node.stmt is not None else in_s
+                    post = _post(analysis, node, in_s)
                 out = analysis.refine(post, node.test, edge.kind == TRUE)
             else:
                 if post is None:
-                    post = analysis.transfer(in_s, node.stmt) \
-                        if node.stmt is not None else in_s
+                    post = _post(analysis, node, in_s)
                 out = post
             old = in_states.get(edge.dst)
             new = out if old is None else analysis.join(old, out)

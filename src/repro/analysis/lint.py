@@ -42,6 +42,8 @@ from pathlib import Path
 from typing import Dict, Iterable, List, Optional, Sequence
 
 from .asserts import BareAssertChecker
+from .asyncrace import (AwaitAtomicityChecker, BlockingInAsyncChecker,
+                        TaskLeakChecker)
 from .base import (Checker, Finding, LintResult, ProjectChecker, SourceFile,
                    assign_occurrences, load_baseline, rel_path,
                    split_against_baseline, write_baseline)
@@ -64,14 +66,21 @@ ALL_CHECKERS: List[Checker] = [
     SwallowedExceptionChecker(),
     SlotLeakChecker(),
     HandleLatticeChecker(),
+    AwaitAtomicityChecker(),
+    TaskLeakChecker(),
 ]
 
 PROJECT_CHECKERS: List[ProjectChecker] = [
     WallclockTaintChecker(),
+    BlockingInAsyncChecker(),
 ]
 
 #: bump to invalidate every --cache entry (checker semantics changed)
-CACHE_VERSION = 1
+#: v2: async-aware facts — FuncFacts effect summaries (is_async /
+#: suspends / self_reads / self_writes) and per-call awaited +
+#: blocking-suppression flags; v1 entries must be recomputed, not
+#: reused (their facts lack the fields the async checkers read).
+CACHE_VERSION = 2
 
 _FINDING_FIELDS = ("checker", "path", "line", "message", "snippet", "file")
 

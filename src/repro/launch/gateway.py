@@ -20,7 +20,8 @@ Examples::
         '{"model": "transformer", "sla_class": "gold"}'
 
 Exit status: 0 after a clean drain; 1 when ``--assert-no-leak`` finds
-resident KV slots after drain (the CI smoke gate).
+resident KV slots after drain or ``--assert-no-stall`` saw the loop
+watchdog count an event-loop stall (the CI smoke gates).
 """
 from __future__ import annotations
 
@@ -104,6 +105,8 @@ def build_app(args, session=None) -> GatewayApp:
         metrics_log_interval=args.metrics_log_interval,
         default_sla=args.sla, deadline_by_class=deadlines,
         seed=args.seed, drain_grace=args.drain_grace,
+        stall_interval=getattr(args, "stall_interval", 0.005),
+        stall_threshold=getattr(args, "stall_threshold", 0.25),
         log_enabled=not args.quiet)
 
 
@@ -134,6 +137,7 @@ def dump_json(path: str, app: GatewayApp, args) -> None:
         "per_class": clean(stats.per_class(args.sla)),
         "per_model": clean(stats.per_model(args.sla)),
         "gateway": clean(app.metrics.snapshot()),
+        "loop": app.sanitizer.stats.as_dict(),
         "memory": {"slots_live": mem.slots_live,
                    "slots_total": mem.slots_total,
                    "max_slots": mem.max_slots},
@@ -174,6 +178,15 @@ def main(argv=None) -> int:
     ap.add_argument("--assert-no-leak", action="store_true",
                     help="exit 1 when KV slots remain resident after "
                          "drain (CI smoke gate)")
+    ap.add_argument("--stall-interval", type=float, default=0.005,
+                    help="event-loop stall watchdog probe period in "
+                         "wall seconds")
+    ap.add_argument("--stall-threshold", type=float, default=0.25,
+                    help="wakeup lag above this many wall seconds "
+                         "counts as an event-loop stall")
+    ap.add_argument("--assert-no-stall", action="store_true",
+                    help="exit 1 when the watchdog counted any "
+                         "event-loop stall (CI smoke gate)")
     # session stack (mirrors launch/serve.py)
     ap.add_argument("--arch", default="transformer")
     ap.add_argument("--models", default=None,
@@ -216,8 +229,19 @@ def main(argv=None) -> int:
           f"viol {summary.get('sla_violation_rate', float('nan')) * 100:.1f}%"
           f"  429s {int(app.metrics.backpressure.total())}",
           file=sys.stderr)
+    loop_stats = app.sanitizer.stats
+    print(f"event loop: {loop_stats.ticks} probes  "
+          f"{loop_stats.stalls} stall(s)  "
+          f"max lag {loop_stats.max_lag_s * 1e3:.1f}ms  "
+          f"lag p99 {loop_stats.lag_p99_s() * 1e3:.1f}ms",
+          file=sys.stderr)
     if args.json_out:
         dump_json(args.json_out, app, args)
+    if args.assert_no_stall and loop_stats.stalls:
+        print(f"STALL: {loop_stats.stalls} event-loop stall(s) over "
+              f"{args.stall_threshold}s (max lag "
+              f"{loop_stats.max_lag_s:.3f}s)", file=sys.stderr)
+        return 1
     if args.assert_no_leak:
         mem = app.session.backend.memory_stats()
         if mem.slots_live != 0:

@@ -17,6 +17,7 @@ from .middleware import (FATE_STATUS, Backpressure, TimeoutBudget,
                          status_for_state)
 from .prom import (Counter, Gauge, Histogram, MetricsRegistry, Rolling,
                    DEFAULT_BUCKETS)
+from .sanitizer import LoopStallSanitizer, LoopStallStats
 from .telemetry import AccessLog, GatewayMetrics, request_id
 
 __all__ = [
@@ -24,4 +25,5 @@ __all__ = [
     "FATE_STATUS", "Backpressure", "TimeoutBudget", "status_for_state",
     "Counter", "Gauge", "Histogram", "MetricsRegistry", "Rolling",
     "DEFAULT_BUCKETS", "AccessLog", "GatewayMetrics", "request_id",
+    "LoopStallSanitizer", "LoopStallStats",
 ]

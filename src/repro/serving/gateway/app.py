@@ -31,6 +31,7 @@ from . import http
 from .bridge import EV_END, EV_TOKEN, SessionDriver
 from .middleware import (RETRYABLE_STATUSES, Backpressure, TimeoutBudget,
                          status_for_state)
+from .sanitizer import LoopStallSanitizer
 from .telemetry import AccessLog, GatewayMetrics, request_id
 
 #: Status used for client-closed-request accounting (log-only; never
@@ -50,10 +51,15 @@ class GatewayApp:
                  default_sla: Optional[float] = None,
                  deadline_by_class: Optional[Dict[str, float]] = None,
                  seed: int = 0, drain_grace: float = 5.0,
+                 stall_interval: float = 0.005,
+                 stall_threshold: float = 0.25,
                  log_stream=None, log_enabled: bool = True):
         self.session = session
         self.host = host
-        self.port = port
+        # written once more in start() (ephemeral-port resolution),
+        # before any handler can exist — the startup path is the only
+        # writer, so the read-bind-write span there cannot interleave
+        self.port = port                     # reprolint: owner=startup
         self.request_timeout = request_timeout
         self.drain_grace = drain_grace
         self.deadline_by_class = dict(deadline_by_class or {})
@@ -67,6 +73,8 @@ class GatewayApp:
             metrics_log_interval=metrics_log_interval, seed=seed)
         self.backpressure = Backpressure(self.driver,
                                          max_inflight=max_inflight)
+        self.sanitizer = LoopStallSanitizer(interval=stall_interval,
+                                            threshold=stall_threshold)
         self.ready = False
         self.draining = False
         self.drained_stats = None
@@ -80,6 +88,7 @@ class GatewayApp:
     # ------------------------------------------------------------------
     async def start(self) -> None:
         self.driver.start()
+        self.sanitizer.start()
         self._pump_task = asyncio.create_task(self.driver.pump())
         self._server = await asyncio.start_server(
             self._on_connection, self.host, self.port)
@@ -117,13 +126,24 @@ class GatewayApp:
             await asyncio.wait(set(self._handlers),
                                timeout=self.drain_grace)
         if self._pump_task is not None:
-            self._pump_task.cancel()
+            # cancel-and-reap: absorb the CancelledError we caused so
+            # the pump cannot outlive the drain or die unobserved; the
+            # handle is swapped out BEFORE the suspension so the
+            # shared field never spans the await
+            pump, self._pump_task = self._pump_task, None
+            pump.cancel()
+            try:
+                await pump
+            except asyncio.CancelledError:
+                pass
+        await self.sanitizer.stop()
         self.drained_stats = stats
         mem = self.session.backend.memory_stats()
         self.access_log.emit(
             "drain", completed=self.driver.completed,
             outstanding=self.driver.inflight,
             slots_live=mem.slots_live,
+            loop=self.sanitizer.stats.as_dict(),
             summary=stats.summary())
         return stats
 
@@ -167,6 +187,7 @@ class GatewayApp:
                      else "starting"})
         elif route == ("GET", "/metrics"):
             self.metrics.sample_session(self.session)
+            self.metrics.sample_loop(self.sanitizer)
             body = self.metrics.expose().encode("utf-8")
             await http.send_response(
                 writer, 200, body,
@@ -309,10 +330,15 @@ class GatewayApp:
             gr.cancel()
             status, fate = CLIENT_CLOSED, "write_failed"
         finally:
-            watcher.cancel()
-            gone_task.cancel()
+            # cancel-and-reap every helper task: an unreaped cancel
+            # leaves the task pending past the handler (drain cannot
+            # find it) and its exceptions are never observed
+            reap = [watcher, gone_task]
             if get_task is not None:
-                get_task.cancel()
+                reap.append(get_task)
+            for t in reap:
+                t.cancel()
+            await asyncio.gather(*reap, return_exceptions=True)
         self._finish_http(rid, req, status, model, sla_class, fate,
                           tokens_sent, gr, t_wall)
 

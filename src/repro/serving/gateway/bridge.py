@@ -93,15 +93,19 @@ class SessionDriver:
         self.metrics_log_interval = metrics_log_interval
         self.seed = seed
         self.rate_window = rate_window
-        self.active: Dict[int, GatewayRequest] = {}
-        self.completed = 0
+        # single-writer fields: only the pump task's synchronous
+        # advance/finalize path mutates these (handlers read them via
+        # the admission views) — declared so await-atomicity spans on
+        # them are sanctioned file-wide
+        self.active: Dict[int, GatewayRequest] = {}  # reprolint: owner=pump
+        self.completed = 0                   # reprolint: owner=pump
         self._t0: Optional[float] = None
         self._loop: Optional[asyncio.AbstractEventLoop] = None
-        self._stopping = False
-        self._done_stamps: deque = deque()   # wall stamps of completions
+        self._stopping = False               # reprolint: owner=pump
+        self._done_stamps: deque = deque()   # reprolint: owner=pump
         self._length_rngs: Dict[str, np.random.Generator] = {}
         self._sla_classes: Dict[str, SLAClass] = {}
-        self._last_metrics_log = 0.0
+        self._last_metrics_log = 0.0         # reprolint: owner=pump
 
     # ------------------------------------------------------------------
     # clock mapping
@@ -130,7 +134,13 @@ class SessionDriver:
     def advance(self) -> None:
         """Advance the session to the current wall-mapped target and
         finalize any handles that went terminal."""
-        self.session.run_until(self.target())
+        # AUDITED loop-blocking seed: the pump tick's catch-up is the
+        # one sanctioned place scheduler work runs on the event loop —
+        # bounded by the tick budget (per-tick targets advance by
+        # tick * time_scale), and the stall watchdog enforces the
+        # budget at runtime. Every transitive caller (pump, submit's
+        # mini-tick, GatewayApp.drain) is sanctioned through this seed.
+        self.session.run_until(self.target())  # reprolint: disable=blocking-in-async
         self._finalize()
         if self.metrics is not None:
             self.metrics.inflight.set(len(self.active))
@@ -288,7 +298,10 @@ class SessionDriver:
         — pacing no longer applies during shutdown) and finalize every
         remaining handle. Returns the drained ServeStats."""
         self.stop()
-        stats = self.session.drain()
+        # AUDITED loop-blocking seed: shutdown fast-forward — pacing
+        # (and loop liveness for new work) no longer applies; the
+        # server socket is already closed when GatewayApp calls this.
+        stats = self.session.drain()  # reprolint: disable=blocking-in-async
         self._finalize()
         if self.metrics is not None:
             self.metrics.sample_session(self.session)

@@ -145,6 +145,17 @@ class GatewayMetrics:
             "gateway_injected_faults_total",
             "faults injected by the chaos backend",
             ("model", "kind"))
+        self.loop_max_stall = reg.gauge(
+            "gateway_loop_max_stall_seconds",
+            "worst event-loop callback latency the stall watchdog saw")
+        self.loop_lag_p99 = reg.gauge(
+            "gateway_loop_lag_p99_seconds",
+            "p99 event-loop wakeup lag over the watchdog's recent window")
+        self.loop_stalls = reg.counter(
+            "gateway_loop_stalls_total",
+            "watchdog probes whose lag exceeded the stall threshold")
+        self.loop_ticks = reg.counter(
+            "gateway_loop_ticks_total", "stall-watchdog probes taken")
 
     # ------------------------------------------------------------------
     def deadline_for(self, sla_class: str) -> Optional[float]:
@@ -179,6 +190,17 @@ class GatewayMetrics:
             for model, kinds in fault_stats().items():
                 for kind, n in kinds.items():
                     self.injected.set_total(n, model=model, kind=kind)
+
+    def sample_loop(self, sanitizer) -> None:
+        """Mirror the loop-stall watchdog's counters into the registry
+        (scrape-time refresh, same idiom as ``sample_session``)."""
+        if sanitizer is None:
+            return
+        stats = sanitizer.stats
+        self.loop_max_stall.set(stats.max_lag_s)
+        self.loop_lag_p99.set(stats.lag_p99_s())
+        self.loop_stalls.set_total(stats.stalls)
+        self.loop_ticks.set_total(stats.ticks)
 
     def observe_outcome(self, model: str, sla_class: str, fate: str,
                         latency_s: Optional[float],
@@ -231,5 +253,7 @@ class GatewayMetrics:
             "requests": self.requests.total(),
             "backpressure_429": self.backpressure.total(),
             "tokens_streamed": self.tokens.total(),
+            "loop_stalls": self.loop_stalls.total(),
+            "loop_max_stall_s": self.loop_max_stall.value(),
             "attainment": att,
         }

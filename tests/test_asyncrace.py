@@ -1,0 +1,446 @@
+"""Async-aware dataflow suite: yield-point CFG lowering, suspension
+hooks, the three async checkers (await-atomicity, blocking-in-async,
+task-leak) against racy fixtures and their clean twins, the loop-stall
+sanitizer, and the real-tree-clean gate over the gateway package.
+
+Fixture files live under ``tmp_path/repro/...`` because checker scoping
+keys on the repo-relative suffix — same convention as
+``test_dataflow.py``.
+"""
+import ast
+import asyncio
+from pathlib import Path
+
+from repro.analysis.asyncrace import (AwaitAtomicityChecker,
+                                      BlockingInAsyncChecker,
+                                      TaskLeakChecker, owner_annotations)
+from repro.analysis.base import SourceFile
+from repro.analysis.cfg import build_cfg, contains_await, functions
+from repro.analysis.dataflow import Analysis, analyze
+from repro.analysis.lint import ALL_CHECKERS, run_lint
+from repro.serving.gateway import LoopStallSanitizer
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _func(src: str, name: str = None) -> ast.AST:
+    tree = ast.parse(src)
+    for f in functions(tree):
+        if name is None or f.name == name:
+            return f
+    raise AssertionError(f"no function {name!r} in fixture")
+
+
+def _write(tmp_path: Path, rel: str, text: str) -> Path:
+    p = tmp_path / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text)
+    return p
+
+
+def _lint(tmp_path, rel, text, checker):
+    p = _write(tmp_path, rel, text)
+    return run_lint([p], checkers=[c for c in ALL_CHECKERS
+                                   if c.name == checker])
+
+
+def _lint_blocking(paths):
+    return run_lint(paths, checkers=[],
+                    project_checkers=[BlockingInAsyncChecker()])
+
+
+# ---------------------------------------------------------------------------
+# CFG yield-point lowering
+# ---------------------------------------------------------------------------
+
+def test_nested_def_awaits_do_not_yield_the_outer_function():
+    # inner's awaits suspend the INNER coroutine, not outer
+    cfg = build_cfg(_func(
+        "async def outer():\n"
+        "    async def inner():\n"
+        "        await x()\n"
+        "    return inner\n", name="outer"))
+    assert _yield_nodes(cfg) == []
+    assert contains_await(ast.parse(
+        "async def f():\n    y = await x()\n").body[0].body[0])
+
+
+def _yield_nodes(cfg):
+    return [n for n in cfg.nodes.values() if n.kind == "yield"]
+
+
+def test_await_statement_gets_a_yield_node_after_it():
+    cfg = build_cfg(_func(
+        "async def f(self):\n"
+        "    v = self.x\n"
+        "    await self.flush()\n"
+        "    self.x = v\n"))
+    ys = _yield_nodes(cfg)
+    assert len(ys) == 1
+    assert ys[0].stmt.lineno == 3
+    # CancelledError is delivered at the suspension: live exc edge
+    assert any(e.kind == "exc" for e in cfg.succs[ys[0].nid])
+
+
+def test_async_for_yields_on_every_iteration():
+    cfg = build_cfg(_func(
+        "async def f(it):\n"
+        "    async for x in it:\n"
+        "        use(x)\n"))
+    ys = _yield_nodes(cfg)
+    assert len(ys) == 1
+    # the loop back edge must pass through the yield node: every
+    # __anext__ is an await
+    assert any(e.dst == ys[0].nid for edges in cfg.succs.values()
+               for e in edges if e.kind == "normal")
+
+
+def test_async_with_yields_at_enter_and_exit():
+    cfg = build_cfg(_func(
+        "async def f(self):\n"
+        "    async with self.lock:\n"
+        "        work()\n"))
+    assert len(_yield_nodes(cfg)) == 2
+
+
+def test_sync_function_has_no_yield_nodes():
+    cfg = build_cfg(_func("def f(x):\n    return x + 1\n"))
+    assert _yield_nodes(cfg) == []
+
+
+def test_engine_routes_yield_nodes_through_suspend():
+    hits = []
+
+    class Spy(Analysis):
+        def suspend(self, state, node):
+            hits.append(node.kind)
+            return state
+
+    cfg = build_cfg(_func(
+        "async def f(self):\n    await self.flush()\n"))
+    analyze(cfg, Spy())
+    assert hits and set(hits) == {"yield"}
+
+
+# ---------------------------------------------------------------------------
+# await-atomicity: racy twin / clean twins
+# ---------------------------------------------------------------------------
+
+RACY_RMW = (
+    "class App:\n"
+    "    async def bump(self):\n"
+    "        v = self.completed\n"
+    "        await self.flush()\n"
+    "        self.completed = v + 1\n")
+
+
+def test_atomicity_flags_read_await_write(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py", RACY_RMW,
+                "await-atomicity")
+    assert len(res.new) == 1
+    f = res.new[0]
+    assert f.line == 5                       # reported AT the write
+    assert "read at line 3" in f.message
+    assert "await at line 4" in f.message
+
+
+def test_atomicity_clean_when_reread_after_await(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    async def bump(self):\n"
+                "        await self.flush()\n"
+                "        self.completed = self.completed + 1\n",
+                "await-atomicity")
+    assert res.new == []
+
+
+def test_atomicity_clean_under_asyncio_lock(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    async def bump(self):\n"
+                "        async with self._lock:\n"
+                "            v = self.completed\n"
+                "            await self.flush()\n"
+                "            self.completed = v + 1\n",
+                "await-atomicity")
+    assert res.new == []
+
+
+def test_atomicity_clean_under_owner_annotation(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    def __init__(self):\n"
+                "        self.completed = 0  # reprolint: owner=pump\n"
+                + RACY_RMW.split("\n", 1)[1],
+                "await-atomicity")
+    assert res.new == []
+
+
+def test_atomicity_flags_augassign_spanning_await_intra_stmt(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    async def bump(self):\n"
+                "        self.total += await self.step()\n",
+                "await-atomicity")
+    assert len(res.new) == 1
+    assert res.new[0].line == 3
+
+
+def test_atomicity_flags_global_state_too(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "SEQ = 0\n"
+                "async def bump():\n"
+                "    global SEQ\n"
+                "    v = SEQ\n"
+                "    await flush()\n"
+                "    SEQ = v + 1\n",
+                "await-atomicity")
+    assert len(res.new) == 1
+    assert res.new[0].line == 6
+
+
+def test_atomicity_ignores_sync_functions(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    def bump(self):\n"
+                "        v = self.completed\n"
+                "        self.completed = v + 1\n",
+                "await-atomicity")
+    assert res.new == []
+
+
+def test_owner_annotation_parsing(tmp_path):
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "class App:\n"
+               "    def __init__(self):\n"
+               "        self.active = {}  # reprolint: owner=pump\n"
+               "        self.other = 0\n")
+    owners = owner_annotations(SourceFile(p, p.read_text()))
+    assert owners == {"active": "pump"}
+
+
+# ---------------------------------------------------------------------------
+# blocking-in-async: racy twin / clean twins
+# ---------------------------------------------------------------------------
+
+def test_blocking_direct_primitive_flagged(tmp_path):
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "import time\n"
+               "async def handler():\n"
+               "    time.sleep(1)\n")
+    res = _lint_blocking([p])
+    assert len(res.new) == 1
+    assert res.new[0].line == 3
+    assert "time.sleep" in res.new[0].message
+
+
+def test_blocking_one_hop_has_witness_chain(tmp_path):
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "class App:\n"
+               "    def helper(self):\n"
+               "        self.session.run_until(5)\n"
+               "    async def handler(self):\n"
+               "        self.helper()\n")
+    res = _lint_blocking([p])
+    assert len(res.new) == 1
+    f = res.new[0]
+    assert f.line == 5                       # the async frontier call
+    assert "helper" in f.message
+    assert "session.run_until" in f.message  # the witness chain's seed
+
+
+def test_blocking_awaited_coroutine_is_clean(tmp_path):
+    # writer.drain() awaited = a coroutine, NOT the sync session.drain
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "async def handler(writer):\n"
+               "    await writer.drain()\n")
+    res = _lint_blocking([p])
+    assert res.new == []
+
+
+def test_blocking_suppressed_seed_sanctions_callers(tmp_path):
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "class Driver:\n"
+               "    def advance(self):\n"
+               "        self.session.run_until(5)"
+               "  # reprolint: disable=blocking-in-async\n"
+               "    async def pump(self):\n"
+               "        self.advance()\n")
+    res = _lint_blocking([p])
+    assert res.new == []
+
+
+def test_blocking_unawaited_async_callee_propagates_nothing(tmp_path):
+    # calling an async def without await never runs its body, so its
+    # blocking call cannot stall the caller (that drop is task-leak's)
+    p = _write(tmp_path, "repro/serving/gw.py",
+               "import time\n"
+               "async def inner():\n"
+               "    time.sleep(1)\n"
+               "def outer():\n"
+               "    inner()\n")
+    res = _lint_blocking([p])
+    # the only finding is inner's own direct primitive
+    assert [f.line for f in res.new] == [3]
+
+
+def test_blocking_not_reported_in_test_files(tmp_path):
+    p = _write(tmp_path, "tests/test_gw.py",
+               "import time\n"
+               "async def handler():\n"
+               "    time.sleep(1)\n")
+    res = _lint_blocking([p])
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# task-leak: racy twin / clean twins
+# ---------------------------------------------------------------------------
+
+def test_task_leak_dropped_and_unused_handles(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "import asyncio\n"
+                "class App:\n"
+                "    async def fire(self):\n"
+                "        asyncio.create_task(self.pump())\n"
+                "    async def bind(self):\n"
+                "        t = asyncio.create_task(self.pump())\n"
+                "    async def pump(self):\n"
+                "        pass\n",
+                "task-leak")
+    assert sorted(f.line for f in res.new) == [4, 6]
+
+
+def test_task_leak_tracked_handles_are_clean(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "import asyncio\n"
+                "class App:\n"
+                "    async def keep(self):\n"
+                "        self._t = asyncio.create_task(self.pump())\n"
+                "    async def use(self):\n"
+                "        t = asyncio.create_task(self.pump())\n"
+                "        await t\n"
+                "    async def pump(self):\n"
+                "        pass\n",
+                "task-leak")
+    assert res.new == []
+
+
+def test_task_leak_never_awaited_coroutine(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    async def go(self):\n"
+                "        self.pump()\n"
+                "    async def pump(self):\n"
+                "        pass\n",
+                "task-leak")
+    assert len(res.new) == 1
+    assert res.new[0].line == 3
+
+
+def test_task_leak_other_objects_sync_method_is_clean(tmp_path):
+    # self.driver.start() is ANOTHER object's sync start, not this
+    # class's async start — the leaf-name match must not fire
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "class App:\n"
+                "    async def start(self):\n"
+                "        self.driver.start()\n"
+                "        await self.pump()\n"
+                "    async def pump(self):\n"
+                "        pass\n",
+                "task-leak")
+    assert res.new == []
+
+
+def test_task_leak_swallowed_cancellation(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "import asyncio\n"
+                "async def handler(q):\n"
+                "    try:\n"
+                "        await q.get()\n"
+                "    except asyncio.CancelledError:\n"
+                "        pass\n",
+                "task-leak")
+    assert len(res.new) == 1
+    assert "swallows the cancellation" in res.new[0].message
+
+
+def test_task_leak_reraise_and_reap_idiom_are_clean(tmp_path):
+    res = _lint(tmp_path, "repro/serving/gw.py",
+                "import asyncio\n"
+                "async def handler(q):\n"
+                "    try:\n"
+                "        await q.get()\n"
+                "    except asyncio.CancelledError:\n"
+                "        cleanup()\n"
+                "        raise\n"
+                "async def reap(task):\n"
+                "    task.cancel()\n"
+                "    try:\n"
+                "        await task\n"
+                "    except asyncio.CancelledError:\n"
+                "        pass\n",
+                "task-leak")
+    assert res.new == []
+
+
+# ---------------------------------------------------------------------------
+# loop-stall sanitizer
+# ---------------------------------------------------------------------------
+
+def test_sanitizer_counts_a_seeded_stall():
+    async def scenario():
+        san = LoopStallSanitizer(interval=0.001, threshold=0.02)
+        san.start()
+        await asyncio.sleep(0.01)            # let probes establish
+        import time
+        time.sleep(0.05)  # deliberate stall  # reprolint: disable=blocking-in-async
+        await asyncio.sleep(0.01)
+        await san.stop()
+        return san.stats
+
+    stats = asyncio.run(scenario())
+    assert stats.ticks > 0
+    assert stats.stalls >= 1
+    assert stats.max_lag_s >= 0.02
+    assert stats.lag_p99_s() >= 0.0
+    d = stats.as_dict()
+    assert d["stalls"] == stats.stalls
+
+
+def test_sanitizer_quiet_loop_counts_no_stalls():
+    async def scenario():
+        san = LoopStallSanitizer(interval=0.001, threshold=0.25)
+        san.start()
+        await asyncio.sleep(0.02)
+        await san.stop()
+        return san.stats
+
+    stats = asyncio.run(scenario())
+    assert stats.ticks > 0
+    assert stats.stalls == 0
+
+
+def test_sanitizer_stop_reaps_its_task():
+    async def scenario():
+        san = LoopStallSanitizer()
+        san.start()
+        task = san._task
+        await san.stop()
+        return task
+
+    task = asyncio.run(scenario())
+    assert task.done()
+
+
+# ---------------------------------------------------------------------------
+# the real tree is clean
+# ---------------------------------------------------------------------------
+
+def test_gateway_tree_is_clean_under_async_checkers():
+    gw = REPO / "src" / "repro" / "serving" / "gateway"
+    res = run_lint(
+        [gw, REPO / "src" / "repro" / "launch"],
+        checkers=[AwaitAtomicityChecker(), TaskLeakChecker()],
+        project_checkers=[BlockingInAsyncChecker()])
+    assert res.new == [], [str(f) for f in res.new]

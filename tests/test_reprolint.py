@@ -481,6 +481,36 @@ def test_cache_reuses_results_and_keeps_project_facts(tmp_path):
         == [(f.checker, f.path, f.line, f.fingerprint) for f in cold.new]
 
 
+def test_stale_cache_version_is_recomputed_not_reused(tmp_path):
+    """A cache written under an older CACHE_VERSION must be discarded
+    wholesale: v1 facts lack the async effect summaries (is_async /
+    awaited / suppressed_blocking) the async checkers read, so reusing
+    them would silently blind blocking-in-async on unchanged files."""
+    import json
+
+    from repro.analysis import lint as lint_mod
+
+    p = _write(tmp_path, "src/repro/serving/gateway/gw.py",
+               "import time\n\n\nasync def handler():\n"
+               "    time.sleep(1)\n")
+    cache = tmp_path / "cache.json"
+    cold = run_lint([p], cache_path=cache)
+    assert "blocking-in-async" in _names(cold)
+    # regress the on-disk cache to the previous schema version, with
+    # entries a naive loader would happily reuse (hash matches because
+    # we keep the v2 hashes — only the envelope version is old)
+    doc = json.loads(cache.read_text())
+    doc["version"] = lint_mod.CACHE_VERSION - 1
+    for entry in doc["files"].values():
+        for fn in entry["facts"]["functions"].values():
+            fn.pop("is_async", None)         # v1 facts had no summaries
+    cache.write_text(json.dumps(doc))
+    warm = run_lint([p], cache_path=cache)
+    assert _names(warm) == _names(cold)
+    assert json.loads(cache.read_text())["version"] \
+        == lint_mod.CACHE_VERSION
+
+
 def test_cache_invalidated_by_content_change(tmp_path):
     p = _write(tmp_path, "src/repro/serving/foo.py",
                "def f(x):\n    assert x > 0\n")
